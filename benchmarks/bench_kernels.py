@@ -1,0 +1,56 @@
+"""Kernel micro-benchmarks: wall-time of jnp-ref paths on this host CPU
+(indicative only) + the structural metric that transfers to TPU — HBM pass
+counts per aggregation node step (fused Pallas vs unfused jnp ops).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sparsify as sp
+from repro.kernels import ops, ref
+
+from common import timed
+
+D = 1_000_000
+
+
+def main() -> list[str]:
+    lines = ["bench,name,us_per_call,derived"]
+    key = jax.random.PRNGKey(0)
+    g = jax.random.normal(key, (D,))
+    e = 0.1 * jax.random.normal(jax.random.fold_in(key, 1), (D,))
+    gi = jax.random.normal(jax.random.fold_in(key, 2), (D,)) * (
+        jax.random.uniform(jax.random.fold_in(key, 3), (D,)) < 0.01)
+    mask = jnp.zeros((D,))
+    w, tau = jnp.float32(1.0), jnp.float32(2.3)
+
+    fns = {
+        "ref_sparsify_ef": jax.jit(lambda: ref.ref_sparsify_ef(
+            g, e, mask, w, tau)),
+        "ref_chain_accum": jax.jit(lambda: ref.ref_chain_accum(gi, g)),
+        "ref_cl_fuse": jax.jit(lambda: ref.ref_cl_fuse(g, e, gi, w, tau)),
+        "exact_topq_1pct": jax.jit(lambda: sp.topq(g, D // 100)),
+        "threshold_topq_1pct": jax.jit(
+            lambda: sp.topq_by_threshold(g, D // 100)),
+        "count_ge_64": jax.jit(lambda: ref.ref_count_ge(
+            g, jnp.linspace(0.01, 3, 64))),
+    }
+    for name, fn in fns.items():
+        _, us = timed(fn, reps=3)
+        lines.append(f"bench,{name},{us:.0f},d={D}")
+
+    # structural metric: HBM passes per CL-SIA node step
+    #   unfused jnp: read g,e,γ; write g̃; read g̃ (topk/sort multi-pass ≈3);
+    #                write γ,e' ⇒ ≥8 vector passes
+    #   fused cl_fuse + 3-round threshold: 3 count passes + 1 fused pass
+    #                reading (g,e,γ) writing (γ,e') ⇒ 4 passes
+    lines.append("bench,cl_node_passes_unfused,8,vector-passes")
+    lines.append("bench,cl_node_passes_fused,4,vector-passes")
+    print("\n".join(lines))
+    return lines
+
+
+if __name__ == "__main__":
+    main()

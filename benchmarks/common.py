@@ -1,0 +1,44 @@
+"""Shared helpers for the paper-figure benchmarks."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.configs import PAPER
+from repro.core.algorithms import AggConfig, AggKind
+from repro.data.federated import partition_iid
+from repro.data.synthetic import make_synthetic_mnist
+
+ALGS = {
+    "SIA": AggKind.SIA,
+    "RE-SIA": AggKind.RE_SIA,
+    "CL-SIA": AggKind.CL_SIA,
+    "TC-SIA": AggKind.TC_SIA,
+    "CL-TC-SIA": AggKind.CL_TC_SIA,
+}
+
+
+def agg_config(kind: AggKind, q: int | None = None) -> AggConfig:
+    q = PAPER.q if q is None else q
+    ql = max(1, round(0.1 * q))
+    return AggConfig(kind=kind, q=q, q_global=q - ql, q_local=ql,
+                     omega=PAPER.omega)
+
+
+def paper_data(num_clients: int, per_client: int = 200, seed: int = 0):
+    train = make_synthetic_mnist(jax.random.PRNGKey(seed),
+                                 num_clients * per_client)
+    test = make_synthetic_mnist(jax.random.PRNGKey(seed + 1), 2000)
+    fed = partition_iid(jax.random.PRNGKey(seed + 2), train, num_clients)
+    return fed, test
+
+
+def timed(fn, *args, reps: int = 3):
+    fn(*args)                      # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return out, (time.perf_counter() - t0) / reps * 1e6   # µs

@@ -1,0 +1,27 @@
+"""Emit the EXPERIMENTS.md §Roofline table from dryrun_results.json."""
+
+import json
+import sys
+
+
+def main(path="dryrun_results.json", mesh="16x16"):
+    with open(path) as f:
+        cells = json.load(f)
+    rows = [c for c in cells if c.get("mesh") == mesh
+            and c.get("status") == "ok"]
+    print(f"| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | "
+          f"bottleneck | useful | roofline | peak GB/dev |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for c in rows:
+        r = c["roofline"]
+        peak = c["memory_analysis"]["peak_bytes_estimate"] / 1e9
+        print(f"| {c['arch']} | {c['shape']} | {r['t_compute_s']:.3g} "
+              f"| {r['t_memory_s']:.3g} | {r['t_collective_s']:.3g} "
+              f"| {r['bottleneck']} | {r['useful_flops_ratio']:.2f} "
+              f"| {r['roofline_fraction']:.4f} | {peak:.1f} |")
+    fails = [c for c in cells if c.get("status") != "ok"]
+    print(f"\n{len(rows)} cells on {mesh}; {len(fails)} failures total.")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

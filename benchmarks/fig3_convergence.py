@@ -1,0 +1,40 @@
+"""Paper Fig. 3: test accuracy vs iteration, fixed Q = 78, K = 28.
+
+Expected qualitative result (paper §VI): SIA/RE-SIA best (most data sent),
+CL-SIA and TC-SIA only slightly worse, CL-TC-SIA severely impaired.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs import PAPER
+from repro.fed.simulator import Simulator
+
+from common import ALGS, agg_config, paper_data
+
+ROUNDS = 150
+EVAL_EVERY = 25
+
+
+def main(k: int = PAPER.num_clients, rounds: int = ROUNDS) -> list[str]:
+    pc = dataclasses.replace(PAPER, num_clients=k)
+    fed, test = paper_data(k, per_client=120)
+    lines = ["fig3,algorithm,round,test_accuracy"]
+    finals = {}
+    for name, kind in ALGS.items():
+        sim = Simulator(pc, agg_config(kind), fed, local_lr=pc.lr)
+        out = sim.run(rounds, test_x=test.x, test_y=test.y,
+                      eval_every=EVAL_EVERY)
+        for r, acc in out["accuracy"]:
+            lines.append(f"fig3,{name},{r},{acc:.4f}")
+        finals[name] = out["accuracy"][-1][1]
+    print("\n".join(lines))
+    order = sorted(finals, key=finals.get, reverse=True)
+    print(f"# final-accuracy order: {order} "
+          f"(paper: CL-TC-SIA last)")
+    return lines
+
+
+if __name__ == "__main__":
+    main()

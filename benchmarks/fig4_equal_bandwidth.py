@@ -1,0 +1,59 @@
+"""Paper Fig. 4: test accuracy under (approximately) equal bandwidth.
+
+Q is re-tuned per algorithm so each transmits ≈ the same bits/iteration as
+CL-SIA at Q=78 (98 kbit for K=28). Paper result: CL-SIA, RE-SIA and TC-SIA
+converge much faster than SIA, with CL-SIA best.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs import PAPER
+from repro.core import comm_cost as cc
+from repro.core.algorithms import AggKind
+from repro.fed.simulator import Simulator
+
+from common import ALGS, agg_config, paper_data
+
+ROUNDS = 150
+EVAL_EVERY = 25
+
+
+def tune_q(kind: AggKind, target_bits: float, pc, fed) -> int:
+    """Bisect Q so measured bits/iteration ≈ target (paper's procedure)."""
+    lo, hi = 1, pc.d
+    for _ in range(10):
+        mid = (lo + hi) // 2
+        sim = Simulator(pc, agg_config(kind, q=mid), fed, local_lr=pc.lr)
+        bits = sim.run(6)["bits"][-1]
+        if bits > target_bits:
+            hi = mid
+        else:
+            lo = mid + 1
+    return max(1, lo - 1)
+
+
+def main(k: int = PAPER.num_clients, rounds: int = ROUNDS) -> list[str]:
+    pc = dataclasses.replace(PAPER, num_clients=k)
+    fed, test = paper_data(k, per_client=120)
+    target = cc.cl_sia_bits(k, pc.d, pc.q, pc.omega)   # ≈98 kbit at K=28
+    lines = [f"fig4,algorithm,q,round,test_accuracy  # target_bits={target:.0f}"]
+    finals = {}
+    for name, kind in ALGS.items():
+        q = pc.q if kind == AggKind.CL_SIA else tune_q(kind, target, pc, fed)
+        sim = Simulator(pc, agg_config(kind, q=q), fed, local_lr=pc.lr)
+        out = sim.run(rounds, test_x=test.x, test_y=test.y,
+                      eval_every=EVAL_EVERY)
+        for r, acc in out["accuracy"]:
+            lines.append(f"fig4,{name},{q},{r},{acc:.4f}")
+        finals[name] = out["accuracy"][-1][1]
+    print("\n".join(lines))
+    print(f"# equal-bandwidth finals: "
+          f"{ {k: round(v, 3) for k, v in finals.items()} } "
+          f"(paper: CL-SIA best, SIA slowest)")
+    return lines
+
+
+if __name__ == "__main__":
+    main()

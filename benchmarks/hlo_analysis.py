@@ -1,0 +1,362 @@
+"""Trip-count-aware analysis of compiled (post-SPMD, post-fusion) HLO text.
+
+Why: ``compiled.cost_analysis()`` visits each computation once — a
+``lax.scan`` over 88 layers reports 1/88th of the real FLOPs/bytes, and the
+same applies to collectives (measured in this repo; see EXPERIMENTS §Perf
+iteration 0). XLA's ``while`` ops carry ``known_trip_count`` in their
+backend_config, and every HLO instruction prints its result type, so an
+exact static execution-count analysis is possible from the text alone.
+
+Produces, per executable:
+  flops            — dot/convolution FLOPs × execution counts
+  hbm_bytes        — Σ (operand + result bytes) of top-level (post-fusion)
+                     ops × execution counts ≈ HBM traffic
+  collectives      — wire bytes per collective type (ring conventions:
+                     AR 2·op, AG result, RS/A2A operand, CP operand)
+
+Known approximations (documented for §Roofline):
+  * conditional branches contribute their max-cost branch;
+  * dynamic trip counts (none in this repo's models) default to 1;
+  * CPU-backend fusion boundaries may differ from TPU's — byte totals are
+    an HBM-traffic *model*, flagged as such in EXPERIMENTS.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+    "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVE_BASES = ("all-reduce", "all-gather", "reduce-scatter",
+                     "all-to-all", "collective-permute")
+# ops whose result/operands don't represent real HBM traffic
+_FREE_OPS = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+             "after-all", "partition-id", "replica-id", "iota",
+             "get-dimension-size", "copy-start", "copy-done"}
+
+
+def _parse_shape(s: str):
+    """'f32[128,256]' → ('f32', (128, 256))."""
+    m = _SHAPE_RE.match(s)
+    if not m:
+        return None
+    dt, dims = m.groups()
+    shape = tuple(int(d) for d in dims.split(",") if d)
+    return dt, shape
+
+
+def _shape_bytes(dt: str, shape) -> int:
+    n = 1
+    for d in shape:
+        n *= d
+    return n * _DTYPE_BYTES.get(dt, 4)
+
+
+def _type_bytes(type_str: str) -> int:
+    """bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, shape = _parse_shape(m.group(0))
+        total += _shape_bytes(dt, shape)
+    return total
+
+
+def _split_top_commas(s: str) -> list[str]:
+    out, depth, cur = [], 0, []
+    for ch in s:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur).strip())
+    return out
+
+
+_ASSIGN_RE = re.compile(r"^(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_COMMENT_RE = re.compile(r"/\*[^*]*\*/")
+
+
+def parse_instr(line: str):
+    """'%n = TYPE op(args...), attrs' → (name, type_str, op, rest) | None.
+
+    Handles tuple types with nested parens/braces and /*index=k*/ comments
+    (regexes break on those — measured on real while-loop tuples)."""
+    m = _ASSIGN_RE.match(line)
+    if not m:
+        return None
+    name, rhs = m.groups()
+    rhs = _COMMENT_RE.sub("", rhs)
+    i = 0
+    if rhs.startswith("("):                   # tuple type: balanced parens
+        depth = 0
+        for i, ch in enumerate(rhs):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        type_str, rest = rhs[:i + 1], rhs[i + 1:]
+    else:                                      # scalar/array type token
+        sp = rhs.find(" ")
+        if sp < 0:
+            return None
+        type_str, rest = rhs[:sp], rhs[sp:]
+    rest = rest.lstrip()
+    om = re.match(r"([\w\-]+)\(", rest)
+    if not om:
+        return None
+    return name, type_str, om.group(1), rest[om.end():]
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*?(\d+)')
+_BRANCH_RE = re.compile(r"(?:true_computation|false_computation|"
+                        r"branch_computations)=\{?%?([\w.\-,%\s]+)\}?")
+_GTE_IDX_RE = re.compile(r"index=(\d+)")
+_LHS_CDIMS = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    all_reduce: float = 0.0
+    all_gather: float = 0.0
+    reduce_scatter: float = 0.0
+    all_to_all: float = 0.0
+    collective_permute: float = 0.0
+    collective_count: float = 0.0
+
+    def __iadd__(self, o: "Cost"):
+        for f in dataclasses.fields(self):
+            setattr(self, f.name, getattr(self, f.name) + getattr(o, f.name))
+        return self
+
+    def scaled(self, k: float) -> "Cost":
+        return Cost(**{f.name: getattr(self, f.name) * k
+                       for f in dataclasses.fields(self)})
+
+    @property
+    def wire_bytes(self) -> float:
+        return (self.all_reduce + self.all_gather + self.reduce_scatter
+                + self.all_to_all + self.collective_permute)
+
+    def collective_dict(self) -> dict:
+        return {"all_reduce": self.all_reduce, "all_gather": self.all_gather,
+                "reduce_scatter": self.reduce_scatter,
+                "all_to_all": self.all_to_all,
+                "collective_permute": self.collective_permute,
+                "total": self.wire_bytes, "count": self.collective_count}
+
+
+class HloModule:
+    """Parsed computations: name → list of (name, type_str, op, rest)."""
+
+    def __init__(self, hlo_text: str):
+        self.comps: dict[str, list] = {}
+        self.entry: Optional[str] = None
+        self._parse(hlo_text)
+        self._cache: dict[tuple[str, bool], Cost] = {}
+
+    def _parse(self, text: str):
+        cur_name, cur = None, []
+        for raw in text.splitlines():
+            line = raw.strip()
+            if cur_name is None:
+                if line.endswith("{") and ("->" in line or line.startswith(
+                        "ENTRY")):
+                    m = re.match(r"(?:ENTRY\s+)?%?([\w.\-]+)\s*[(\s]", line)
+                    if m:
+                        cur_name = m.group(1)
+                        cur = []
+                        if raw.startswith("ENTRY"):
+                            self.entry = cur_name
+                continue
+            if line == "}":
+                self.comps[cur_name] = cur
+                cur_name = None
+                continue
+            got = parse_instr(line)
+            if got:
+                cur.append(got)
+
+    # ------------------------------------------------------------------
+    def _dot_flops(self, instrs_types: dict, type_str: str, rest: str
+                   ) -> float:
+        res = _parse_shape(re.sub(r"\{[^}]*\}", "", type_str))
+        if res is None:
+            return 0.0
+        _, rshape = res
+        out_elems = 1
+        for d in rshape:
+            out_elems *= d
+        # contracted size from the lhs operand's shape
+        cd = _LHS_CDIMS.search(rest)
+        args = _split_top_commas(rest.split("),", 1)[0].rstrip(")"))
+        lhs = args[0].lstrip("%").split(" ")[-1].lstrip("%") if args else ""
+        lhs_t = instrs_types.get(lhs)
+        contracted = 1
+        if cd and lhs_t:
+            p = _parse_shape(re.sub(r"\{[^}]*\}", "", lhs_t))
+            if p:
+                _, lshape = p
+                for idx in cd.group(1).split(","):
+                    if idx and int(idx) < len(lshape):
+                        contracted *= lshape[int(idx)]
+        return 2.0 * out_elems * contracted
+
+    def _matmul_cc_flops(self, instrs_types: dict, type_str: str,
+                         rest: str) -> float:
+        res = _parse_shape(re.sub(r"\{[^}]*\}", "", type_str))
+        if res is None:
+            return 0.0
+        _, rshape = res
+        out_elems = 1
+        for d in rshape:
+            out_elems *= d
+        args = _split_top_commas(rest.split("),", 1)[0].rstrip(")"))
+        lhs = args[0].split(" ")[-1].lstrip("%") if args else ""
+        lhs_t = instrs_types.get(lhs)
+        contracted = 1
+        if lhs_t:
+            p = _parse_shape(re.sub(r"\{[^}]*\}", "", lhs_t))
+            if p and p[1]:
+                contracted = p[1][-1]
+        return 2.0 * out_elems * contracted
+
+    def comp_cost(self, name: str, *, top_level: bool = True,
+                  _stack: frozenset = frozenset()) -> Cost:
+        key = (name, top_level)
+        if key in self._cache:
+            return self._cache[key]
+        if name in _stack or name not in self.comps:
+            return Cost()
+        acc = Cost()
+        instrs = self.comps[name]
+        types = {n: t for n, t, _, _ in instrs}
+        for n, type_str, op, rest in instrs:
+            base = op.removesuffix("-start")
+            # -- control flow ------------------------------------------------
+            if op == "while":
+                body = _BODY_RE.search(rest)
+                trip_m = _TRIP_RE.search(rest)
+                trip = int(trip_m.group(1)) if trip_m else 1
+                if body:
+                    sub = self.comp_cost(body.group(1), top_level=top_level,
+                                         _stack=_stack | {name})
+                    acc += sub.scaled(trip)
+                continue
+            if op == "fusion":
+                calls = _CALLS_RE.search(rest)
+                if calls:
+                    sub = self.comp_cost(calls.group(1), top_level=False,
+                                         _stack=_stack | {name})
+                    acc.flops += sub.flops      # dots inside fusions count
+                    # fused internals don't touch HBM; the fusion op does:
+                    acc += sub.scaled(0).scaled(0)  # no-op, clarity
+                if top_level:
+                    acc.hbm_bytes += self._op_bytes(types, type_str, rest)
+                continue
+            if op in ("call", "custom-call", "conditional"):
+                # CPU backend lowers large dots to oneDNN matmul
+                # custom-calls — count them as dots (contracted dim = lhs
+                # last dim, the [.., m, k] × [.., k, n] convention).
+                if op == "custom-call" and re.search(
+                        r'custom_call_target="[^"]*(matmul|gemm|dot|conv)',
+                        rest):
+                    acc.flops += self._matmul_cc_flops(types, type_str, rest)
+                for cm in _CALLS_RE.finditer(rest):
+                    sub = self.comp_cost(cm.group(1), top_level=top_level,
+                                         _stack=_stack | {name})
+                    acc += sub
+                if op == "custom-call" and top_level:
+                    acc.hbm_bytes += self._op_bytes(types, type_str, rest)
+                continue
+            # -- collectives -------------------------------------------------
+            if base in _COLLECTIVE_BASES and not op.endswith("-done"):
+                operands = self._operand_bytes(types, rest)
+                result = _type_bytes(type_str)
+                if base == "all-reduce":
+                    acc.all_reduce += 2 * operands
+                elif base == "all-gather":
+                    acc.all_gather += result
+                elif base == "reduce-scatter":
+                    acc.reduce_scatter += operands
+                elif base == "all-to-all":
+                    acc.all_to_all += operands
+                else:
+                    acc.collective_permute += operands
+                acc.collective_count += 1
+                if top_level:
+                    acc.hbm_bytes += operands + result
+                continue
+            # -- compute -----------------------------------------------------
+            if op in ("dot", "convolution"):
+                acc.flops += self._dot_flops(types, type_str, rest)
+                if top_level:
+                    acc.hbm_bytes += self._op_bytes(types, type_str, rest)
+                continue
+            if top_level and op not in _FREE_OPS:
+                acc.hbm_bytes += self._op_bytes(types, type_str, rest)
+        self._cache[key] = acc
+        return acc
+
+    def _operand_bytes_list(self, types: dict, rest: str) -> list:
+        args = _split_top_commas(rest.split("),", 1)[0].rstrip(")"))
+        out = []
+        for a in args:
+            nm = a.split(" ")[-1].lstrip("%")
+            t = types.get(nm)
+            if t:
+                out.append(_type_bytes(t))
+            else:
+                p = _SHAPE_RE.search(a)
+                if p:
+                    out.append(_type_bytes(p.group(0)))
+        return out
+
+    def _operand_bytes(self, types: dict, rest: str) -> int:
+        return sum(self._operand_bytes_list(types, rest))
+
+    def _op_bytes(self, types: dict, type_str: str, rest: str) -> int:
+        """HBM-traffic model for one top-level op.
+
+        Slice/accumulate heuristics (scan-over-layers reality): a fusion
+        reading a whole stacked [L, …] buffer but producing one layer's
+        slice touches ~result bytes, not L× that; a dynamic-update writing
+        one slice into the stacked buffer (detectable: one operand with
+        size == result size) touches ~the update's bytes. Without these
+        caps an 88-layer scan miscounts by ~88× (measured, granite-34b).
+        """
+        res = _type_bytes(type_str)
+        ops = self._operand_bytes_list(types, rest)
+        aliased = [b for b in ops if b == res and res > 0]
+        if aliased and res > 4 * max(
+                [b for b in ops if b != res] + [1]):
+            small = sum(min(b, res) for b in ops if b != res)
+            return 3 * max(small, 1)          # read+write slice + operands
+        return res + sum(min(b, 4 * res) if res > 0 else b for b in ops)
+
+    def total(self) -> Cost:
+        if self.entry is None:
+            return Cost()
+        return self.comp_cost(self.entry)
+
+
+def analyze(hlo_text: str) -> Cost:
+    return HloModule(hlo_text).total()

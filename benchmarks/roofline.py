@@ -1,0 +1,295 @@
+"""Roofline analysis from compiled dry-run artifacts (no real hardware).
+
+Three terms per (arch × shape × mesh), seconds per step on TPU v5e:
+
+    compute    = HLO_FLOPs / peak_FLOPs            (197 TFLOP/s bf16 /chip)
+    memory     = HLO_bytes / HBM_bw                (819 GB/s /chip)
+    collective = wire_bytes / link_bw              (~50 GB/s per ICI link)
+
+``cost_analysis()`` supplies FLOPs and bytes (per device — SPMD-partitioned
+module). Collective bytes are NOT in cost_analysis: we parse the compiled
+HLO text and sum operand/result sizes of every collective op, using the
+bytes-on-the-wire convention per op type (ring algorithms):
+
+    all-reduce       2·(K−1)/K · operand   ≈ 2 · operand
+    all-gather       (K−1)/K · result      ≈ result
+    reduce-scatter   (K−1)/K · operand     ≈ operand
+    all-to-all       (K−1)/K · operand     ≈ operand
+    collective-permute  operand            (exact)
+
+Shapes in compiled (post-SPMD) HLO are already per-device.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Optional
+
+PEAK_FLOPS = 197e12          # bf16 per chip (TPU v5e)
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'f32[128,1024]' → bytes."""
+    m = _SHAPE_RE.match(shape_str)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    nbytes = _DTYPE_BYTES.get(dt)
+    if nbytes is None:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * nbytes
+
+
+def _tuple_or_single_bytes(rhs: str) -> int:
+    """Result type may be a tuple '(f32[..], f32[..])' or single shape."""
+    total = 0
+    for m in _SHAPE_RE.finditer(rhs):
+        total += _shape_bytes(m.group(0))
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveBytes:
+    all_reduce: float = 0.0
+    all_gather: float = 0.0
+    reduce_scatter: float = 0.0
+    all_to_all: float = 0.0
+    collective_permute: float = 0.0
+    count: int = 0
+
+    @property
+    def total(self) -> float:
+        return (self.all_reduce + self.all_gather + self.reduce_scatter
+                + self.all_to_all + self.collective_permute)
+
+    def as_dict(self) -> dict:
+        return {"all_reduce": self.all_reduce, "all_gather": self.all_gather,
+                "reduce_scatter": self.reduce_scatter,
+                "all_to_all": self.all_to_all,
+                "collective_permute": self.collective_permute,
+                "total": self.total, "count": self.count}
+
+
+def _line_collective(stripped: str) -> Optional[tuple[str, float]]:
+    """→ (type, wire_bytes) if this HLO line is a collective, else None."""
+    m = re.match(r"%?[\w.\-]+\s*=\s*(.*?)\s+([a-z\-]+)\(", stripped)
+    if not m:
+        return None
+    result_part, op = m.groups()
+    base = op.removesuffix("-start")
+    if base not in _COLLECTIVES or op.endswith("-done"):
+        return None
+    paren = stripped[stripped.index(op) + len(op):]
+    operands = _tuple_or_single_bytes(paren.split("),", 1)[0]
+                                      if ")," in paren else paren)
+    result = _tuple_or_single_bytes(result_part)
+    if base == "all-reduce":
+        return base, 2 * operands
+    if base == "all-gather":
+        return base, result
+    return base, operands
+
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\([^)]*\))?\s*->")
+_WHILE_RE = re.compile(
+    r"while\(.*?condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+
+def _split_computations(hlo_text: str) -> dict:
+    """HLO text → {computation_name: [lines]} (brace-delimited blocks)."""
+    comps: dict = {}
+    name, buf = None, []
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if name is None:
+            m = _COMP_HDR.match(s)
+            if m and s.endswith("{"):
+                name, buf = m.group(1), []
+        else:
+            if s == "}":
+                comps[name] = buf
+                name, buf = None, []
+            else:
+                buf.append(s)
+    return comps
+
+
+def parse_collective_bytes(hlo_text: str) -> CollectiveBytes:
+    """Sum wire bytes per collective type from compiled HLO text,
+    **trip-count aware**: collectives inside a `while` body (layer scans,
+    KV-chunk loops) are multiplied by the loop's trip count, recursively.
+    Trip counts are taken as the max s32[] constant in the loop condition —
+    exact for lax.scan-lowered loops (compare iv < N). ``-start``/``-done``
+    async pairs are counted once.
+    """
+    comps = _split_computations(hlo_text)
+
+    def cost_of(comp_name: str, seen: frozenset) -> CollectiveBytes:
+        acc = CollectiveBytes()
+        if comp_name in seen:          # safety vs pathological recursion
+            return acc
+        for s in comps.get(comp_name, []):
+            wm = _WHILE_RE.search(s)
+            if wm:
+                cond, body = wm.groups()
+                trip = 1
+                consts = [int(x) for ln in comps.get(cond, [])
+                          for x in _CONST_RE.findall(ln)]
+                if consts:
+                    trip = max(consts)
+                sub = cost_of(body, seen | {comp_name})
+                acc.all_reduce += trip * sub.all_reduce
+                acc.all_gather += trip * sub.all_gather
+                acc.reduce_scatter += trip * sub.reduce_scatter
+                acc.all_to_all += trip * sub.all_to_all
+                acc.collective_permute += trip * sub.collective_permute
+                acc.count += trip * sub.count
+                continue
+            got = _line_collective(s)
+            if got is None:
+                continue
+            base, nbytes = got
+            if base == "all-reduce":
+                acc.all_reduce += nbytes
+            elif base == "all-gather":
+                acc.all_gather += nbytes
+            elif base == "reduce-scatter":
+                acc.reduce_scatter += nbytes
+            elif base == "all-to-all":
+                acc.all_to_all += nbytes
+            elif base == "collective-permute":
+                acc.collective_permute += nbytes
+            acc.count += 1
+        return acc
+
+    entry = None
+    for line in hlo_text.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_HDR.match(line.strip())
+            if m:
+                entry = m.group(1)
+            break
+    if entry is None:
+        # fall back: flat scan (no loop awareness)
+        out = CollectiveBytes()
+        for line in hlo_text.splitlines():
+            got = _line_collective(line.strip())
+            if got:
+                base, nbytes = got
+                setattr(out, base.replace("-", "_"),
+                        getattr(out, base.replace("-", "_")) + nbytes)
+                out.count += 1
+        return out
+    return cost_of(entry, frozenset())
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float
+    bytes_accessed: float
+    wire_bytes: float
+    model_flops: float           # 6·N(_active)·tokens — useful-compute ref
+    chips: int
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_accessed / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.wire_bytes / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (HLO_FLOPs × chips): remat/redundancy waste."""
+        total = self.flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """useful-compute time / dominant-term time (≤1; the score)."""
+        t_useful = self.model_flops / (self.chips * PEAK_FLOPS)
+        t_dom = max(self.t_compute, self.t_memory, self.t_collective)
+        return t_useful / t_dom if t_dom else 0.0
+
+    def as_dict(self) -> dict:
+        return {
+            "flops_per_chip": self.flops,
+            "bytes_per_chip": self.bytes_accessed,
+            "wire_bytes_per_chip": self.wire_bytes,
+            "model_flops": self.model_flops,
+            "chips": self.chips,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops_for(cfg, shape, kind: str) -> float:
+    """6·N_active·tokens (train), 2·N_active·tokens (fwd-only prefill),
+    2·N_active·batch (one decode token)."""
+    n = cfg.active_param_count()
+    if kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch          # decode: 1 token/seq
+
+
+def main() -> None:
+    """Summarize a dry-run JSON into the §Roofline table (markdown)."""
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun-json", default="dryrun_results.json")
+    args = ap.parse_args()
+    with open(args.dryrun_json) as f:
+        cells = json.load(f)
+    hdr = ("| arch | shape | mesh | t_comp | t_mem | t_coll | bottleneck | "
+           "useful | roofline |")
+    print(hdr)
+    print("|" + "---|" * 9)
+    for c in cells:
+        if "roofline" not in c:
+            continue
+        r = c["roofline"]
+        print(f"| {c['arch']} | {c['shape']} | {c['mesh']} "
+              f"| {r['t_compute_s']:.2e} | {r['t_memory_s']:.2e} "
+              f"| {r['t_collective_s']:.2e} | {r['bottleneck']} "
+              f"| {r['useful_flops_ratio']:.2f} "
+              f"| {r['roofline_fraction']:.3f} |")
+
+
+if __name__ == "__main__":
+    main()

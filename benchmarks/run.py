@@ -1,0 +1,53 @@
+"""Run every paper-table benchmark. ``name,us_per_call,derived`` CSV rows
+plus one CSV block per paper figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # fast versions
+    PYTHONPATH=src python -m benchmarks.run --full     # paper-scale K=28
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale rounds/K (slower)")
+    args = ap.parse_args()
+
+    import bench_kernels
+    import fig2a_comm_cost
+    import fig2b_efficiency
+    import fig3_convergence
+    import fig4_equal_bandwidth
+
+    print("== kernels ==")
+    bench_kernels.main()
+    print("\n== fig2a: transmitted bits vs K ==")
+    fig2a_comm_cost.main()
+    print("\n== fig2b: normalized efficiency vs K ==")
+    fig2b_efficiency.main()
+    rounds = 150 if args.full else 60
+    k = 28 if args.full else 12
+    print(f"\n== fig3: convergence (K={k}, rounds={rounds}) ==")
+    fig3_convergence.main(k=k, rounds=rounds)
+    print(f"\n== fig4: equal-bandwidth convergence (K={k}) ==")
+    fig4_equal_bandwidth.main(k=k, rounds=rounds)
+    print("\n== roofline (from dry-run artifacts, if present) ==")
+    dr = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "dryrun_results.json")
+    if os.path.exists(dr):
+        import roofline
+        sys.argv = ["roofline", "--dryrun-json", dr]
+        roofline.main()
+    else:
+        print("(run repro.launch.dryrun --all first)")
+
+
+if __name__ == "__main__":
+    main()

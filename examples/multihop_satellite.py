@@ -1,0 +1,58 @@
+"""The paper's motivating scenario: a satellite constellation chain with
+link failures and stragglers (DESIGN §6).
+
+A K=12 chain trains while: (a) random compute stragglers miss round
+deadlines (their updates bank into error feedback and arrive later);
+(b) a relay dies at round 30 and the chain heals around it; (c) it
+recovers at round 60. Communication stays CL-SIA-constant throughout.
+
+    PYTHONPATH=src python examples/multihop_satellite.py
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import PAPER
+from repro.core.algorithms import AggConfig, AggKind
+from repro.data.federated import partition_iid
+from repro.data.synthetic import make_synthetic_mnist
+from repro.fed.simulator import Simulator
+from repro.runtime.fault import StragglerModel, banked_mass
+from repro.fed.topology import FailureSchedule
+
+K, ROUNDS = 12, 90
+pc = dataclasses.replace(PAPER, num_clients=K)
+
+train = make_synthetic_mnist(jax.random.PRNGKey(0), K * 150)
+test = make_synthetic_mnist(jax.random.PRNGKey(1), 1000)
+fed = partition_iid(jax.random.PRNGKey(2), train, K)
+
+sim = Simulator(pc, AggConfig(kind=AggKind.CL_SIA, q=pc.q), fed,
+                local_lr=pc.lr)
+stragglers = StragglerModel(p_straggle=0.15)
+failures = FailureSchedule(K, {30: ([5], []), 60: ([], [5])})
+
+
+def participate_fn(r, state):
+    mask = np.array(stragglers.sample(jax.random.PRNGKey(9000 + r), K))
+    for dead in failures.dead_at(r):
+        mask[dead] = 0.0          # dead node contributes nothing
+    return jnp.asarray(mask)
+
+
+out = sim.run(ROUNDS, test_x=test.x, test_y=test.y, eval_every=10,
+              participate_fn=participate_fn)
+
+print("round  acc    (relay 5 dead rounds 30-59; 15% stragglers/round)")
+for r, acc in out["accuracy"]:
+    marker = "  ← node 5 down" if 30 <= r < 60 else ""
+    print(f"{r:5d}  {acc:.3f}{marker}")
+bm = banked_mass(out["state"].ef)
+print(f"\nbits/round stayed {out['bits'][-1]/1e3:.1f} kbit "
+      f"(CL-SIA constant-length property)")
+print(f"banked |e| per node: {[f'{float(x):.1f}' for x in bm]}")
+print("note: node 5's queued mass transmits after recovery — error "
+      "feedback doubles as the straggler/failure recovery mechanism.")

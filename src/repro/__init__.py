@@ -1,0 +1,7 @@
+"""repro: sparse incremental aggregation for multi-hop FL, framework-scale.
+
+Paper: "Sparse Incremental Aggregation in Multi-Hop Federated Learning"
+(Mukherjee, Razmi, Dekorsy, Popovski, Matthiesen, 2024). See DESIGN.md.
+"""
+
+__version__ = "1.0.0"

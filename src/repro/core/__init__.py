@@ -1,0 +1,12 @@
+"""Core library: the paper's sparse incremental-aggregation algorithms."""
+
+from repro.core.algorithms import AggConfig, AggKind, HopStats, NodeCtx, node_step
+from repro.core.api import (AggState, ChainAggregator, RoundOut, flat_dim,
+                            make_aggregator)
+from repro.core.chain import ChainResult, run_chain, run_chain_with_topology
+
+__all__ = [
+    "AggConfig", "AggKind", "HopStats", "NodeCtx", "node_step",
+    "AggState", "ChainAggregator", "RoundOut", "flat_dim", "make_aggregator",
+    "ChainResult", "run_chain", "run_chain_with_topology",
+]

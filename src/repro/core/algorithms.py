@@ -1,0 +1,270 @@
+"""The paper's five sparse incremental-aggregation algorithms.
+
+Each algorithm is a *node step*: what client k does with its own effective
+gradient ``g_k`` and the incoming partial aggregate ``γ_{k+1}`` before
+forwarding ``γ_k`` toward the parameter server.
+
+All five are implemented over **dense d-vectors** (the sparse structure is in
+the zero pattern) with *bit-exact* communication accounting per §V — this is
+the semantics layer used by the simulator, the tests, and (per-shard) by the
+distributed ring. Static-shape compact transport lives in ``ring.py``.
+
+Naming (paper §VI): Alg1=SIA, Alg2=RE-SIA, Alg3=CL-SIA, Alg4=TC-SIA,
+Alg5=CL-TC-SIA.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sparsify as sp
+
+Array = jax.Array
+
+
+class AggKind(str, enum.Enum):
+    SIA = "sia"                # Alg 1 (SoA baseline, [1])
+    RE_SIA = "re_sia"          # Alg 2
+    CL_SIA = "cl_sia"          # Alg 3
+    TC_SIA = "tc_sia"          # Alg 4
+    CL_TC_SIA = "cl_tc_sia"    # Alg 5
+    DENSE_IA = "dense_ia"      # IA without sparsification (upper baseline)
+    ROUTING = "routing"        # conventional routing (no IA; cost model only)
+
+
+@dataclasses.dataclass(frozen=True)
+class AggConfig:
+    """Static configuration of a sparse-IA aggregator.
+
+    ``q`` is the per-hop budget. For time-correlated variants, ``q_global``
+    and ``q_local`` split it (paper: Q_L = 0.1·Q, Q_G = Q − Q_L).
+    ``omega`` is the payload word size in bits (ω); index cost is
+    ⌈log₂ d⌉ bits per locally-indexed nonzero.
+    """
+
+    kind: AggKind = AggKind.CL_SIA
+    q: int = 78
+    q_global: int = 0
+    q_local: int = 0
+    omega: int = 32
+    # Top-Q implementation: "exact" (lax.top_k oracle) or "threshold"
+    # (branch-and-bisect counting; distributable, kernel-accelerated).
+    topq_impl: str = "exact"
+    hist_branch: int = 64
+    hist_rounds: int = 3
+    # Wire dtype for compact ring transport values (f32 matches ω=32;
+    # bfloat16 is the beyond-paper ω=16 quantization knob).
+    wire_dtype: str = "float32"
+
+    def __post_init__(self):
+        if self.kind in (AggKind.TC_SIA, AggKind.CL_TC_SIA):
+            if self.q_global <= 0 and self.q_local <= 0:
+                # paper's default split
+                ql = max(1, round(0.1 * self.q))
+                object.__setattr__(self, "q_local", ql)
+                object.__setattr__(self, "q_global", self.q - ql)
+        if self.q <= 0 and self.kind not in (AggKind.DENSE_IA, AggKind.ROUTING):
+            raise ValueError("q must be positive for sparsified aggregation")
+
+    def topq_fn(self) -> Callable[[Array, int], Array]:
+        if self.topq_impl == "exact":
+            return sp.topq
+        if self.topq_impl == "threshold":
+            return lambda x, q: sp.topq_by_threshold(
+                x, q, branch=self.hist_branch, rounds=self.hist_rounds)
+        raise ValueError(f"unknown topq_impl {self.topq_impl!r}")
+
+    def topq_mask_fn(self) -> Callable[[Array, int], Array]:
+        if self.topq_impl == "exact":
+            return sp.topq_mask
+        if self.topq_impl == "threshold":
+            def mask(x, q):
+                tau = sp.threshold_for_topq(
+                    x, q, branch=self.hist_branch, rounds=self.hist_rounds)
+                return (jnp.abs(x) >= tau).astype(x.dtype)
+            return mask
+        raise ValueError(f"unknown topq_impl {self.topq_impl!r}")
+
+
+class HopStats(NamedTuple):
+    """Per-hop accounting (all traced scalars).
+
+    ``bits`` follows §V exactly: globally-masked values cost ω each (indices
+    implicit), locally-indexed nonzeros cost ω + ⌈log₂ d⌉ each.
+    """
+
+    nnz_out: Array          # ‖γ_k‖₀ transmitted by this hop
+    nnz_global: Array       # ‖Γ_k‖₀ part (0 for non-TC algorithms)
+    nnz_local: Array        # ‖Λ_k‖₀ part (= nnz_out for non-TC)
+    bits: Array             # exact transmitted bits for this hop
+    err_sq: Array           # ‖e_k^t‖² sparsification error after this hop
+
+
+class NodeCtx(NamedTuple):
+    """Round-constant context shared by all hops.
+
+    ``global_mask`` is the TCS mask m^t = s(w^t − w^{t−1}, Q_G) (zeros for
+    non-TC algorithms). ``participate`` ∈ {0.,1.}: straggler/failure mask —
+    a non-participating node forwards γ unchanged and banks its entire g̃
+    into error feedback (see DESIGN §6).
+    """
+
+    global_mask: Array
+    participate: Array
+
+
+def index_bits(d: int) -> int:
+    """⌈log₂ d⌉ — bits to address one coordinate of a length-d vector."""
+    import math
+    return max(1, math.ceil(math.log2(d)))
+
+
+def _bits(cfg: AggConfig, d: int, nnz_global: Array, nnz_local: Array) -> Array:
+    # float32: bit counts for billion-parameter models overflow int32; the
+    # ~2^-24 relative rounding is irrelevant for accounting.
+    ib = index_bits(d)
+    return (cfg.omega * nnz_global.astype(jnp.float32)
+            + (cfg.omega + ib) * nnz_local.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Node steps. Signature:  (cfg, g, gamma_in, e, weight, ctx) ->
+#                         (gamma_out, e_new, HopStats)
+# ---------------------------------------------------------------------------
+
+def _finalize(cfg: AggConfig, d: int, gamma_out: Array, e_new: Array,
+              global_mask: Array) -> tuple[Array, Array, HopStats]:
+    lam = gamma_out * (1 - global_mask)
+    nz_l = sp.nnz(lam)
+    # Γ part is transmitted densely in the Q_G known slots → costs Q_G words
+    # whenever a global mask is active, regardless of zero values inside it.
+    nz_g = jnp.sum(global_mask > 0).astype(jnp.int32)
+    stats = HopStats(
+        nnz_out=sp.nnz(gamma_out),
+        nnz_global=nz_g,
+        nnz_local=nz_l,
+        bits=_bits(cfg, d, nz_g, nz_l),
+        err_sq=jnp.sum(e_new.astype(jnp.float32) ** 2),
+    )
+    return gamma_out, e_new, stats
+
+
+def step_sia(cfg: AggConfig, g: Array, gamma_in: Array, e: Array,
+             weight: Array, ctx: NodeCtx) -> tuple[Array, Array, HopStats]:
+    """Alg 1 — SoA sparse IA: local Top-Q then add."""
+    d = g.shape[-1]
+    gt = weight * g + e                               # line 2
+    gbar = cfg.topq_fn()(gt, cfg.q)                   # line 3
+    gbar = gbar * ctx.participate
+    e_new = gt - gbar                                 # line 4
+    gamma_out = gbar + gamma_in                       # line 5
+    return _finalize(cfg, d, gamma_out, e_new, jnp.zeros_like(g))
+
+
+def step_re_sia(cfg: AggConfig, g: Array, gamma_in: Array, e: Array,
+                weight: Array, ctx: NodeCtx) -> tuple[Array, Array, HopStats]:
+    """Alg 2 — reduced-error: transmit inside union(local Top-Q, incoming)."""
+    d = g.shape[-1]
+    gt = weight * g + e                               # line 2
+    m_local = cfg.topq_mask_fn()(gt, cfg.q)           # line 3
+    m_in = sp.support(gamma_in)                       # line 4
+    m = sp.mask_union(m_local, m_in)                  # line 5
+    gbar = m * gt * ctx.participate
+    e_new = gt - gbar                                 # line 6
+    gamma_out = gbar + gamma_in                       # line 7
+    return _finalize(cfg, d, gamma_out, e_new, jnp.zeros_like(g))
+
+
+def step_cl_sia(cfg: AggConfig, g: Array, gamma_in: Array, e: Array,
+                weight: Array, ctx: NodeCtx) -> tuple[Array, Array, HopStats]:
+    """Alg 3 — constant-length: aggregate then Top-Q. ‖γ_out‖₀ ≤ Q."""
+    d = g.shape[-1]
+    gt = weight * g + e                               # line 2
+    gamma_tilde = ctx.participate * gt + gamma_in     # line 3
+    gamma_out = cfg.topq_fn()(gamma_tilde, cfg.q)     # line 4
+    e_new = gamma_tilde - gamma_out                   # line 5
+    # Straggler semantics (model (a), DESIGN §6): the node computed g but
+    # missed the transmit deadline → γ forwarded unchanged, the *entire*
+    # effective gradient g̃ banks into error feedback for later rounds.
+    gamma_out = jnp.where(ctx.participate > 0, gamma_out, gamma_in)
+    e_new = jnp.where(ctx.participate > 0, e_new, gt)
+    return _finalize(cfg, d, gamma_out, e_new, jnp.zeros_like(g))
+
+
+def step_tc_sia(cfg: AggConfig, g: Array, gamma_in: Array, e: Array,
+                weight: Array, ctx: NodeCtx) -> tuple[Array, Array, HopStats]:
+    """Alg 4 — time-correlated sparse IA (global mask + Q_L local + incoming)."""
+    d = g.shape[-1]
+    m = ctx.global_mask                                # line 3 (precomputed)
+    gt = weight * g + e                                # line 2
+    m_k = cfg.topq_mask_fn()((1 - m) * gt, cfg.q_local)   # line 4
+    m_in = jnp.clip(sp.support(gamma_in) - m, 0, 1)    # line 5
+    mm = sp.mask_union(m, m_k, m_in)                   # line 6
+    gbar = mm * gt * ctx.participate
+    e_new = gt - gbar                                  # line 7
+    gamma_out = gamma_in + gbar                        # line 8 / eq (6)
+    return _finalize(cfg, d, gamma_out, e_new, m)
+
+
+def step_cl_tc_sia(cfg: AggConfig, g: Array, gamma_in: Array, e: Array,
+                   weight: Array, ctx: NodeCtx) -> tuple[Array, Array, HopStats]:
+    """Alg 5 — constant-length time-correlated: CL-SIA on the off-mask part.
+
+    Γ is aggregated densely inside the global mask (cost ω·Q_G, no indices);
+    the off-mask part is CL-sparsified to Q_L. See DESIGN §1 for the printed
+    listing's line-5 typo and the reading used here.
+    """
+    d = g.shape[-1]
+    m = ctx.global_mask                                # line 3
+    gt = weight * g + e                                # line 2
+    contrib = ctx.participate * gt
+    gamma_g = m * (gamma_in + contrib)                 # line 4: Γ_k
+    lam_tilde = (1 - m) * (gamma_in + contrib)         # line 5: Λ̃_k
+    lam = cfg.topq_fn()(lam_tilde, cfg.q_local)        # line 5: Λ_k = S(Λ̃,Q_L)
+    e_new = lam_tilde - lam                            # line 6
+    gamma_out = gamma_g + lam
+    gamma_out = jnp.where(ctx.participate > 0, gamma_out, gamma_in)
+    e_new = jnp.where(ctx.participate > 0, e_new, gt)
+    return _finalize(cfg, d, gamma_out, e_new, m)
+
+
+def step_dense_ia(cfg: AggConfig, g: Array, gamma_in: Array, e: Array,
+                  weight: Array, ctx: NodeCtx) -> tuple[Array, Array, HopStats]:
+    """IA without sparsification — the efficiency upper baseline (Fig 2b)."""
+    d = g.shape[-1]
+    gt = weight * g + e
+    gamma_out = gamma_in + ctx.participate * gt
+    e_new = jnp.where(ctx.participate > 0, jnp.zeros_like(e), gt)
+    # dense transmission: d words, no index overhead
+    bits = jnp.asarray(cfg.omega * d, jnp.float32)
+    stats = HopStats(nnz_out=jnp.asarray(d, jnp.int32),
+                     nnz_global=jnp.asarray(d, jnp.int32),
+                     nnz_local=jnp.asarray(0, jnp.int32),
+                     bits=bits,
+                     err_sq=jnp.sum(e_new.astype(jnp.float32) ** 2))
+    return gamma_out, e_new, stats
+
+
+NODE_STEPS = {
+    AggKind.SIA: step_sia,
+    AggKind.RE_SIA: step_re_sia,
+    AggKind.CL_SIA: step_cl_sia,
+    AggKind.TC_SIA: step_tc_sia,
+    AggKind.CL_TC_SIA: step_cl_tc_sia,
+    AggKind.DENSE_IA: step_dense_ia,
+}
+
+
+def node_step(cfg: AggConfig):
+    """Return the node-step function for ``cfg.kind``."""
+    if cfg.kind == AggKind.ROUTING:
+        raise ValueError(
+            "ROUTING has no node step: it is a cost model (every client's "
+            "sparse gradient is forwarded unmodified through all hops); use "
+            "comm_cost.routing_bits / chain.run_chain with SIA for values.")
+    return NODE_STEPS[cfg.kind]

@@ -1,0 +1,91 @@
+"""Faithful sequential multi-hop chain aggregation (paper Fig. 1 semantics).
+
+Clients are indexed 1..K with client 1 adjacent to the PS; arrays are indexed
+``i = k-1`` (row 0 = client 1). The partial aggregate starts at node K
+(γ_{K+1} = 0) and flows down the chain; ``lax.scan`` with ``reverse=True``
+walks k = K → 1. The PS receives γ_1.
+
+This module is the *semantics oracle*: the distributed ring (``ring.py``)
+must agree with it segment-by-segment (tested).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.algorithms import AggConfig, HopStats, NodeCtx, node_step
+
+Array = jax.Array
+
+
+class ChainResult(NamedTuple):
+    aggregate: Array      # γ_1 — what the PS receives, shape [d]
+    e_new: Array          # updated EF memory, [K, d]
+    stats: HopStats       # stacked per-hop stats, leaves [K] (row i = client i+1)
+
+
+def run_chain(
+    cfg: AggConfig,
+    grads: Array,                  # [K, d] per-client effective gradients g_k
+    e: Array,                      # [K, d] EF memory
+    weights: Array,                # [K]    D_k
+    *,
+    global_mask: Optional[Array] = None,   # [d] TCS mask m^t (TC algorithms)
+    participate: Optional[Array] = None,   # [K] 0/1 straggler mask
+) -> ChainResult:
+    """One aggregation round over the K-hop chain."""
+    K, d = grads.shape
+    if global_mask is None:
+        global_mask = jnp.zeros((d,), grads.dtype)
+    if participate is None:
+        participate = jnp.ones((K,), grads.dtype)
+    step = node_step(cfg)
+
+    def body(gamma, xs):
+        g_k, e_k, w_k, p_k = xs
+        ctx = NodeCtx(global_mask=global_mask, participate=p_k)
+        gamma_out, e_new, stats = step(cfg, g_k, gamma, e_k, w_k, ctx)
+        return gamma_out, (e_new, stats)
+
+    gamma0 = jnp.zeros((d,), grads.dtype)
+    gamma_final, (e_new, stats) = jax.lax.scan(
+        body, gamma0, (grads, e, weights, participate), reverse=True)
+    return ChainResult(aggregate=gamma_final, e_new=e_new, stats=stats)
+
+
+def run_chain_with_topology(
+    cfg: AggConfig,
+    grads: Array,
+    e: Array,
+    weights: Array,
+    order: Array,                  # [K] int32 — visiting order, farthest first
+    *,
+    global_mask: Optional[Array] = None,
+    participate: Optional[Array] = None,
+) -> ChainResult:
+    """Chain aggregation over an arbitrary (healed) node ordering.
+
+    ``order[j]`` is the client index visited at position j counting from the
+    far end of the chain. Chain healing after a relay failure = the same K-1
+    surviving clients in the same order with the dead node removed — the
+    caller expresses that by setting ``participate[dead]=0`` (compute
+    straggler) or by passing a shortened/permuted ``order`` (relay failure).
+    EF rows and stats are returned in *client* index space.
+    """
+    K, d = grads.shape
+    perm = order
+    inv = jnp.argsort(perm)
+    res = run_chain(
+        cfg,
+        grads[perm], e[perm], weights[perm],
+        global_mask=global_mask,
+        participate=None if participate is None else participate[perm],
+    )
+    # scan walked positions K→1; map per-position outputs back to client ids
+    e_new = res.e_new[inv]
+    stats = jax.tree.map(lambda s: s[inv] if s.ndim >= 1 and s.shape[0] == K else s,
+                         res.stats)
+    return ChainResult(aggregate=res.aggregate, e_new=e_new, stats=stats)

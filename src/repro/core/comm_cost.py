@@ -1,0 +1,112 @@
+"""Communication-cost models (paper §V) — host-side closed forms.
+
+These are the analytical curves the paper plots in Fig. 2; the simulator's
+measured per-hop ``HopStats.bits`` must match them (tests assert it for the
+deterministic algorithms and bound the stochastic ones by Prop. 2).
+
+All functions return **bits per global iteration** for the aggregation
+(uplink) phase, as Python floats.
+"""
+
+from __future__ import annotations
+
+import math
+
+
+def idx_bits(d: int) -> int:
+    """⌈log₂ d⌉."""
+    return max(1, math.ceil(math.log2(d)))
+
+
+# ---------------------------------------------------------------------------
+# Baselines
+# ---------------------------------------------------------------------------
+
+def routing_dense_bits(K: int, d: int, omega: int = 32) -> float:
+    """Conventional routing, no sparsification: (K²+K)/2 dense transmissions."""
+    return (K * K + K) / 2 * d * omega
+
+
+def routing_sparse_bits(K: int, d: int, q: int, omega: int = 32) -> float:
+    """Conventional routing of per-client Top-Q gradients.
+
+    Client k's packet (q nonzeros, value+index each) traverses k links.
+    """
+    return (K * K + K) / 2 * q * (omega + idx_bits(d))
+
+
+def dense_ia_bits(K: int, d: int, omega: int = 32) -> float:
+    """IA without sparsification: K dense transmissions (Fig 2b upper ref)."""
+    return K * d * omega
+
+
+# ---------------------------------------------------------------------------
+# Paper algorithms
+# ---------------------------------------------------------------------------
+
+def cl_sia_bits(K: int, d: int, q: int, omega: int = 32) -> float:
+    """Alg 3: exactly Q (value+index) per hop → K·Q·(ω+⌈log₂d⌉)."""
+    return K * q * (omega + idx_bits(d))
+
+
+def cl_tc_sia_bits(K: int, d: int, q_global: int, q_local: int,
+                   omega: int = 32) -> float:
+    """Alg 5: K·ω·Q_G + K·Q_L·(ω+⌈log₂d⌉)  (§V, E‖Λ_k‖₀ = Q_L)."""
+    return K * omega * q_global + K * q_local * (omega + idx_bits(d))
+
+
+def expected_lambda_nnz_bound(K: int, d: int, q_global: int,
+                              q_local: int) -> float:
+    """Prop. 2: upper bound on Σ_k E‖Λ_k‖₀ for Alg 4 (TC-SIA).
+
+    With Q_G=0, Q_L=Q this also bounds SIA/RE-SIA total nnz (they are
+    cost-equivalent to Alg 4 with that setting, §V).
+    """
+    if q_local <= 0:
+        return 0.0
+    dp = d - q_global          # Λ lives in the off-mask coordinates
+    if dp <= 0:
+        return 0.0
+    p = 1.0 - q_local / dp
+    return dp * (K + 1 - (dp / q_local) * (1.0 - p ** (K + 1)))
+
+
+def tc_sia_bits_bound(K: int, d: int, q_global: int, q_local: int,
+                      omega: int = 32) -> float:
+    """Eq. (7) with Prop. 2 plugged in: upper bound for Alg 4."""
+    return (K * omega * q_global
+            + (omega + idx_bits(d)) * expected_lambda_nnz_bound(
+                K, d, q_global, q_local))
+
+
+def sia_bits_bound(K: int, d: int, q: int, omega: int = 32) -> float:
+    """Upper bound for Alg 1/2 (= Alg 4 with Q_G = 0, Q_L = Q)."""
+    return tc_sia_bits_bound(K, d, 0, q, omega)
+
+
+def sia_bits_worst_case(K: int, d: int, q: int, omega: int = 32) -> float:
+    """Deterministic worst case for Alg 1/2: ‖γ_k‖₀ = min(d, (K−k+1)·Q)."""
+    total_nnz = sum(min(d, j * q) for j in range(1, K + 1))
+    return total_nnz * (omega + idx_bits(d))
+
+
+# ---------------------------------------------------------------------------
+# Normalization used in Fig. 2b
+# ---------------------------------------------------------------------------
+
+def single_transmission_bits(d: int, q: int, omega: int = 32,
+                             sparse: bool = True) -> float:
+    """Size of *one* gradient transmission, the Fig-2b normalizer.
+
+    Sparse algorithms are normalized by one sparse packet (Q value+index
+    pairs); dense ones by one dense vector.
+    """
+    if sparse:
+        return q * (omega + idx_bits(d))
+    return d * omega
+
+
+def normalized_efficiency(total_bits: float, d: int, q: int, omega: int = 32,
+                          sparse: bool = True) -> float:
+    """Total transmitted data in units of single-gradient transmissions."""
+    return total_bits / single_transmission_bits(d, q, omega, sparse=sparse)

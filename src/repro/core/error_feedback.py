@@ -1,0 +1,63 @@
+"""Error-feedback state for sparse aggregation.
+
+Every node k keeps ``e_k`` — the mass it has not yet managed to transmit.
+The paper's algorithms all start with ``g̃_k = D_k·g_k + e_k^{t-1}`` and end
+by banking whatever was cut: ``e_k^t = (pre-sparsification) − (transmitted)``.
+
+The state is a plain flat vector per node. For the chain simulator it is a
+``[K, d]`` array; for the distributed ring it is the per-rank shard. The
+trainer owns it as part of TrainState and the checkpointer persists it —
+losing EF state silently changes convergence (tests cover the round-trip).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class EFState(NamedTuple):
+    """Error-feedback memory. ``e`` has shape [K, d] (sim) or [d] (per rank)."""
+
+    e: Array
+
+    @property
+    def dim(self) -> int:
+        return self.e.shape[-1]
+
+
+def init_ef(num_clients: int, dim: int, dtype=jnp.float32) -> EFState:
+    return EFState(e=jnp.zeros((num_clients, dim), dtype))
+
+
+def init_ef_rank(dim: int, dtype=jnp.float32) -> EFState:
+    """Per-rank EF state (used inside shard_map where K is implicit)."""
+    return EFState(e=jnp.zeros((dim,), dtype))
+
+
+def apply_feedback(g: Array, e: Array, weight: Array | float) -> Array:
+    """``g̃ = D_k·g + e`` (paper line 2 of every algorithm)."""
+    return weight * g + e
+
+
+def residual(pre: Array, sent: Array) -> Array:
+    """``e' = pre − sent``: bank the untransmitted mass."""
+    return pre - sent
+
+
+def total_banked(ef: EFState) -> Array:
+    """Diagnostic: total |mass| currently banked across clients."""
+    return jnp.sum(jnp.abs(ef.e))
+
+
+def rescale_clients(ef: EFState, keep: Array) -> EFState:
+    """Elastic membership change: zero EF rows of departed clients.
+
+    ``keep`` is a bool [K] mask; new clients join with empty memory, which is
+    exactly a zeroed row.
+    """
+    return EFState(e=jnp.where(keep[:, None], ef.e, 0))

@@ -1,0 +1,194 @@
+"""Rotated sparse ring reduce-scatter — the TPU-native mapping of the
+paper's multi-hop incremental aggregation (DESIGN §2).
+
+The flattened per-rank gradient is split into K segments; segment j's K-hop
+chain starts at rank j and walks the ring, every hop folding that rank's
+contribution with the configured node step (Alg 1–5). All K ICI links are
+busy every step (a faithful sequential chain would use one), and after the
+final shift rank r owns the fully-aggregated segment r — feeding the
+ZeRO-sharded flat optimizer directly.
+
+Semantics: per segment, the value path is *identical* to
+``chain.run_chain`` on that segment with per-segment budget q_seg
+(tested in tests/test_ring_shardmap.py). The Top-Q budget is divided across
+segments (block-wise Top-Q — the standard distributed adaptation; DESIGN
+§2.5).
+
+This module provides the *local* (inside-shard_map) function plus the flat
+layout helpers; train/step.py assembles the full 3-phase step.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sparsify as sp
+from repro.core.algorithms import AggConfig, AggKind, NodeCtx, node_step
+
+Array = jax.Array
+
+# Algorithms whose per-hop payload is bounded by the budget → eligible for
+# compact (values, indices) wire transport, the paper's ω+⌈log₂d⌉ format.
+_COMPACT_KINDS = (AggKind.CL_SIA, AggKind.CL_TC_SIA)
+
+
+class RingStats(NamedTuple):
+    """Wire accounting, summed over this device's hops (psum later)."""
+
+    bits: Array        # exact paper-§V bits transmitted by this rank
+    nnz: Array         # total nonzeros transmitted (float32 to avoid ovf)
+    err_sq: Array      # Σ‖e‖² after the round (local sparsification error)
+
+
+def ring_hops(num_ranks: int) -> int:
+    """Wire transmissions per rank per round (K−1 ring + 1 ownership shift)."""
+    return num_ranks
+
+
+def rotated_ring_local(
+    cfg: AggConfig,
+    flat_local: Array,                # [n] this rank's gradient slice
+    ef_local: Array,                  # [n] this rank's EF memory
+    weight: Array,                    # scalar D_k
+    *,
+    axis,                             # mesh axis name or tuple (ring order)
+    global_mask_local: Optional[Array] = None,   # [n] TCS mask slice
+    participate: Optional[Array] = None,         # scalar 0/1
+) -> tuple[Array, Array, RingStats]:
+    """Run the rotated ring. Returns (final segment [n//K], new EF [n], stats).
+
+    Must be called inside shard_map with ``axis`` manual. ``n % K == 0``
+    (train/step.py pads the flat layout). After return, rank r holds the
+    fully-aggregated segment r.
+    """
+    K = jax.lax.axis_size(axis)
+    r = jax.lax.axis_index(axis)
+    n = flat_local.shape[0]
+    assert n % K == 0, (n, K)
+    seg = n // K
+
+    # Keep the full-size buffers in their storage dtype (bf16 by default —
+    # a full f32 upcast here would materialize 2× the gradient shard);
+    # per-segment slices are upcast to f32 inside the loop.
+    x = flat_local.reshape(K, seg)
+    ef = ef_local.reshape(K, seg)
+    gm = (None if global_mask_local is None
+          else global_mask_local.reshape(K, seg))
+    p = jnp.float32(1) if participate is None else participate.astype(
+        jnp.float32)
+
+    step_fn = node_step(cfg)
+    perm = None  # filled lazily (needs K)
+
+    gamma = jnp.zeros((seg,), jnp.float32)
+    bits = jnp.float32(0)
+    nnz = jnp.float32(0)
+    err = jnp.float32(0)
+
+    for t in range(K):
+        s = (r - t) % K
+        g_seg = jax.lax.dynamic_slice(x, (s, 0), (1, seg))[0].astype(
+            jnp.float32)
+        e_seg = jax.lax.dynamic_slice(ef, (s, 0), (1, seg))[0].astype(
+            jnp.float32)
+        m_seg = (jnp.zeros((seg,), jnp.float32) if gm is None else
+                 jax.lax.dynamic_slice(gm, (s, 0), (1, seg))[0].astype(
+                     jnp.float32))
+        ctx = NodeCtx(global_mask=m_seg, participate=p)
+        gamma_out, e_new, st = step_fn(cfg, g_seg, gamma, e_seg, weight, ctx)
+        ef = jax.lax.dynamic_update_slice(
+            ef, e_new.astype(ef.dtype)[None], (s, 0))
+        bits = bits + st.bits
+        nnz = nnz + st.nnz_out.astype(jnp.float32)
+        err = err + st.err_sq
+        if perm is None:
+            perm = [(i, (i + 1) % K) for i in range(K)]
+        if t < K - 1:
+            gamma = _send(cfg, gamma_out, seg, axis, perm)
+        else:
+            gamma = gamma_out
+
+    # ownership shift: rank r currently holds segment (r+1) mod K
+    final = _send(cfg, gamma, seg, axis, perm)
+    return final, ef.reshape(n), RingStats(bits=bits, nnz=nnz, err_sq=err)
+
+
+def _wire_budget(cfg: AggConfig) -> int:
+    if cfg.kind == AggKind.CL_TC_SIA:
+        return cfg.q_global + cfg.q_local
+    return cfg.q
+
+
+def _send(cfg: AggConfig, gamma: Array, seg: int, axis, perm) -> Array:
+    """One ring hop. CL algorithms guarantee ‖γ‖₀ ≤ budget, so the wire
+    carries compact (values[q], indices[q]) — the paper's ω+⌈log₂d⌉ payload
+    — instead of the dense segment (d/Q ≈ 100× wire reduction; this is the
+    paper-faithful transport, see EXPERIMENTS §Perf it.1). Unbounded
+    algorithms (SIA/RE-SIA/TC-SIA) ship the dense segment, which is
+    precisely the degradation the paper proves for them."""
+    q = _wire_budget(cfg)
+    if cfg.kind not in _COMPACT_KINDS or q >= seg // 2:
+        return jax.lax.ppermute(gamma, axis, perm)
+    vals, idx, _ = sp.compact(gamma, q)
+    vals = jax.lax.ppermute(vals.astype(jnp.dtype(cfg.wire_dtype)), axis,
+                            perm)
+    idx = jax.lax.ppermute(idx, axis, perm)
+    return sp.scatter(vals.astype(jnp.float32), idx, seg)
+
+
+# ---------------------------------------------------------------------------
+# Flat layout helpers (pjit-land)
+# ---------------------------------------------------------------------------
+
+def padded_flat_dim(tree_or_specs: Any, multiple: int) -> int:
+    """Σ leaf sizes, padded up to ``multiple`` (= model×data×pod sizes)."""
+    total = sum(int(jnp.size(l)) if isinstance(l, jax.Array)
+                else int(functools.reduce(lambda a, b: a * b, l.shape, 1))
+                for l in jax.tree.leaves(tree_or_specs))
+    return -(-total // multiple) * multiple
+
+
+def flatten_tree(tree: Any, d_pad: int, dtype=jnp.float32,
+                 aligned_axis: Optional[Any] = None) -> Array:
+    """Pytree → flat [d_pad] (row-major per leaf, fixed tree order).
+
+    ``aligned_axis`` is reserved for the shard-aligned layout optimization
+    (each leaf transposed so its model-sharded dim leads; see EXPERIMENTS
+    §Perf) — None gives the naive paper-faithful layout.
+    """
+    leaves = jax.tree.leaves(tree)
+    flat = jnp.concatenate([l.reshape(-1).astype(dtype) for l in leaves])
+    return jnp.pad(flat, (0, d_pad - flat.shape[0]))
+
+
+def flatten_stacked(tree: Any, d_pad: int, dtype=jnp.float32) -> Array:
+    """Pytree with leading stack dim K on every leaf → [K, d_pad]."""
+    leaves = jax.tree.leaves(tree)
+    k = leaves[0].shape[0]
+    flat = jnp.concatenate(
+        [l.reshape(k, -1).astype(dtype) for l in leaves], axis=1)
+    return jnp.pad(flat, ((0, 0), (0, d_pad - flat.shape[1])))
+
+
+def unflatten_tree(template: Any, flat: Array) -> Any:
+    """Inverse of flatten_tree (template supplies shapes/dtypes)."""
+    leaves, treedef = jax.tree.flatten(template)
+    out, off = [], 0
+    for l in leaves:
+        size = int(jnp.size(l)) if isinstance(l, jax.Array) else int(
+            functools.reduce(lambda a, b: a * b, l.shape, 1))
+        shape = l.shape
+        dtype = l.dtype
+        out.append(jax.lax.dynamic_slice_in_dim(flat, off, size, 0)
+                   .reshape(shape).astype(dtype))
+        off += size
+    return jax.tree.unflatten(treedef, out)
+
+
+def segment_budget(q_total: int, num_segments: int) -> int:
+    """Per-segment per-hop budget (block-wise Top-Q; ≥1)."""
+    return max(1, q_total // num_segments)

@@ -1,0 +1,188 @@
+"""Top-Q sparsification primitives.
+
+Notation follows the paper: ``S(x, Q)`` returns the Top-Q (by magnitude)
+sparsification of ``x`` (all other entries zeroed); ``s(x, Q)`` returns the
+corresponding 0/1 mask.  Everything here is pure-functional, jit-safe, and
+operates on flat 1-D vectors; pytree plumbing lives in :mod:`repro.core.api`.
+
+Two implementations are provided:
+
+* exact: ``jax.lax.top_k`` based — the oracle used by the simulator, tests
+  and small models;
+* threshold: histogram + bisection (distributable; composes with sharding via
+  a single ``psum`` of the histogram) — the production path, with the
+  perf-critical histogram implemented as a Pallas kernel in
+  :mod:`repro.kernels`.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Exact Top-Q (oracle)
+# ---------------------------------------------------------------------------
+
+def topq(x: Array, q: int) -> Array:
+    """``S(x, Q)``: keep the Q largest-magnitude entries of ``x``, zero the rest.
+
+    Ties are broken arbitrarily but deterministically (lax.top_k order).
+    ``q`` must be a static Python int (shapes are static under jit).
+    """
+    if q <= 0:
+        return jnp.zeros_like(x)
+    d = x.shape[-1]
+    if q >= d:
+        return x
+    mag = jnp.abs(x)
+    _, idx = jax.lax.top_k(mag, q)
+    mask = jnp.zeros_like(x, dtype=bool).at[idx].set(True)
+    return jnp.where(mask, x, 0)
+
+
+def topq_mask(x: Array, q: int) -> Array:
+    """``s(x, Q)``: the 0/1 float mask of the Top-Q support of ``x``."""
+    if q <= 0:
+        return jnp.zeros_like(x)
+    d = x.shape[-1]
+    if q >= d:
+        return jnp.ones_like(x)
+    mag = jnp.abs(x)
+    _, idx = jax.lax.top_k(mag, q)
+    return jnp.zeros_like(x).at[idx].set(1.0)
+
+
+def support(x: Array) -> Array:
+    """``1(x)``: indicator vector of the nonzero entries of ``x`` (float 0/1)."""
+    return (x != 0).astype(x.dtype)
+
+
+def mask_union(*masks: Array) -> Array:
+    """``1(m_a + m_b + …)``: union of 0/1 masks, returned as float 0/1."""
+    acc = masks[0]
+    for m in masks[1:]:
+        acc = acc + m
+    return (acc > 0).astype(acc.dtype)
+
+
+def nnz(x: Array) -> Array:
+    """``‖x‖₀`` as an int32 scalar (traced, not static)."""
+    return jnp.sum(x != 0).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Threshold-based Top-Q (distributable)
+# ---------------------------------------------------------------------------
+
+def count_ge(mag: Array, taus: Array) -> Array:
+    """``counts[j] = #{i : mag_i >= taus_j}`` — int32 [B].
+
+    Pure-jnp reference; the Pallas kernel in
+    ``repro.kernels.topq_threshold`` matches this contract and is swapped in
+    via the ``count_fn`` argument of :func:`threshold_for_topq`.
+    """
+    return jnp.sum(mag[:, None] >= taus[None, :], axis=0).astype(jnp.int32)
+
+
+def threshold_for_topq(
+    x: Array,
+    q: int,
+    *,
+    branch: int = 64,
+    rounds: int = 3,
+    axis_name: str | None = None,
+    count_fn=None,
+) -> Array:
+    """Magnitude threshold ``τ`` with ``count(|x| >= τ) ≈ q`` (always ≥ q).
+
+    Branch-and-bisect: each round evaluates ``branch`` candidate thresholds
+    inside the current bracket (one streaming pass over x) and narrows the
+    bracket ``branch``-fold → resolution ``branch**rounds`` bins after
+    ``rounds`` passes.
+
+    When ``axis_name`` is given, candidate counts (and the bracket top) are
+    ``psum``/``pmax``-reduced over that mesh axis so every shard computes the
+    identical *global* threshold — this is how the paper's global Top-Q
+    survives sharding (``q`` is then the global budget).
+
+    Invariant maintained: ``count(|x| >= lo) >= q`` — the returned ``lo``
+    therefore keeps at least q survivors (over-selection bounded by the ties
+    inside one final-resolution bin; tests measure it).
+    """
+    if count_fn is None:
+        count_fn = count_ge
+    mag = jnp.abs(x.astype(jnp.float32))
+    hi = jnp.max(mag) if mag.size else jnp.float32(0)
+    if axis_name is not None:
+        hi = jax.lax.pmax(hi, axis_name)
+    # strictly above max ⇒ count(hi) = 0 < q; tiny floor handles all-zero x
+    hi = jnp.maximum(hi, 1e-30) * jnp.float32(1 + 1e-6)
+    lo = jnp.zeros_like(hi)
+
+    def round_body(carry, _):
+        lo, hi = carry
+        w = (hi - lo) / branch
+        taus = lo + w * jnp.arange(1, branch + 1, dtype=jnp.float32)
+        counts = count_fn(mag, taus)
+        if axis_name is not None:
+            counts = jax.lax.psum(counts, axis_name)
+        # counts is non-increasing in tau; jstar = #{j : counts_j >= q} is
+        # the largest candidate index (1-based) still keeping >= q.
+        jstar = jnp.sum((counts >= q).astype(jnp.int32))
+        new_lo = lo + jstar.astype(jnp.float32) * w
+        new_hi = new_lo + w
+        return (new_lo, new_hi), None
+
+    (lo, hi), _ = jax.lax.scan(round_body, (lo, hi), None, length=rounds)
+    return jnp.maximum(lo, 1e-30)
+
+
+def topq_by_threshold(
+    x: Array, q: int, *, branch: int = 64, rounds: int = 3,
+    axis_name: str | None = None, count_fn=None,
+) -> Array:
+    """Approximate ``S(x, Q)`` via the bisection threshold (≥ q survivors)."""
+    tau = threshold_for_topq(
+        x, q, branch=branch, rounds=rounds, axis_name=axis_name,
+        count_fn=count_fn)
+    return jnp.where(jnp.abs(x) >= tau, x, 0)
+
+
+# ---------------------------------------------------------------------------
+# Compact sparse representation (static shapes)
+# ---------------------------------------------------------------------------
+
+def compact(x: Array, q: int) -> Tuple[Array, Array, Array]:
+    """Dense → compact ``(values[q], indices[q], count)``.
+
+    The q slots hold the nonzero entries of ``x`` (which must have ≤ q
+    nonzeros for lossless round-trip — the CL algorithms guarantee this).
+    Unused slots carry value 0 and index d (one-past-end sentinel), so a
+    scatter-add of the padding is a no-op via drop semantics.
+    """
+    d = x.shape[-1]
+    is_nz = x != 0
+    # Order: nonzeros first (stable), then padding.
+    order = jnp.argsort(~is_nz, stable=True)
+    take = order[:q]
+    vals = x[take]
+    valid = is_nz[take]
+    idx = jnp.where(valid, take, d).astype(jnp.int32)
+    vals = jnp.where(valid, vals, 0)
+    return vals, idx, jnp.sum(is_nz).astype(jnp.int32)
+
+
+def scatter(vals: Array, idx: Array, d: int) -> Array:
+    """Compact ``(values, indices)`` → dense length-d vector.
+
+    Out-of-range (sentinel) indices are dropped.
+    """
+    out = jnp.zeros((d,), vals.dtype)
+    return out.at[idx].add(vals, mode="drop")

@@ -1,0 +1,48 @@
+"""Time-correlated sparsification (TCS, Ozfatura et al. 2021) machinery.
+
+TCS computes a *global* Top-Q_G mask from the global model's own motion,
+``m^t = s(w^t − w^{t−1}, Q_G)`` — identical at every client because every
+client holds ``w^t`` and ``w^{t−1}``. The paper's Algorithms 4/5 combine this
+mask with small local additions.
+
+The state carried between rounds is the previous parameter vector (flat).
+It is part of TrainState and is checkpointed.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sparsify as sp
+
+Array = jax.Array
+
+
+class TCSState(NamedTuple):
+    prev_flat: Array   # w^{t-1}, flattened, same dtype as params
+
+
+def init_tcs(flat_params: Array) -> TCSState:
+    """At t=0 there is no motion yet; m^0 is empty (all-local round)."""
+    return TCSState(prev_flat=flat_params)
+
+
+def global_mask(state: TCSState, flat_params: Array, q_global: int,
+                *, topq_mask_fn=None) -> Array:
+    """``m^t = s(w^t − w^{t−1}, Q_G)`` — 0/1 float mask of shape [d]."""
+    if topq_mask_fn is None:
+        topq_mask_fn = sp.topq_mask
+    delta = flat_params - state.prev_flat
+    # Degenerate first round (w^t == w^{t-1}): top_k of zeros picks arbitrary
+    # slots, which is harmless (they contribute dense-cost slots only), but we
+    # zero the mask for cleanliness.
+    m = topq_mask_fn(delta, q_global)
+    any_motion = jnp.any(delta != 0)
+    return jnp.where(any_motion, m, jnp.zeros_like(m))
+
+
+def update(state: TCSState, flat_params: Array) -> TCSState:
+    return TCSState(prev_flat=flat_params)

@@ -1,0 +1,58 @@
+"""Chain topologies, failure schedules, latency models for the simulator."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class ChainTopology:
+    """Linear chain 1..K (node 1 adjacent to the PS)."""
+
+    num_clients: int
+
+    def order(self) -> np.ndarray:
+        """Visiting order, farthest node first (identity chain)."""
+        return np.arange(self.num_clients, dtype=np.int32)
+
+    def healed_order(self, dead: list[int]) -> np.ndarray:
+        """Chain with dead relays bypassed (neighbors splice together)."""
+        return np.asarray([i for i in range(self.num_clients)
+                           if i not in set(dead)], dtype=np.int32)
+
+
+@dataclasses.dataclass
+class FailureSchedule:
+    """Deterministic failure/recovery schedule for reproducible tests.
+
+    ``events[r] = ([fail_ids], [recover_ids])`` applied before round r.
+    """
+
+    num_clients: int
+    events: dict
+
+    def dead_at(self, r: int) -> list[int]:
+        dead: set[int] = set()
+        for rr in sorted(self.events):
+            if rr > r:
+                break
+            fails, recovers = self.events[rr]
+            dead |= set(fails)
+            dead -= set(recovers)
+        return sorted(dead)
+
+
+@dataclasses.dataclass
+class LatencyModel:
+    """Log-normal per-client compute+uplink latency (straggler source)."""
+
+    mean_s: float = 1.0
+    sigma: float = 0.5
+    seed: int = 0
+
+    def sample(self, round_idx: int, k: int) -> np.ndarray:
+        rng = np.random.default_rng(self.seed * 100003 + round_idx)
+        return rng.lognormal(np.log(self.mean_s), self.sigma, size=k)

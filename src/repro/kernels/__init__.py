@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the aggregation hot path (see DESIGN §3).
+
+Kernels: count_ge (Top-Q threshold search), sparsify_ef (fused EF +
+sparsify), chain_accum (fused IA combine), cl_fuse (whole CL-SIA node step).
+Dispatch through :mod:`repro.kernels.ops`; oracles in
+:mod:`repro.kernels.ref`.
+"""
+
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

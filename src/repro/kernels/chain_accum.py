@@ -1,0 +1,115 @@
+"""Pallas TPU kernels: fused IA combine steps (one HBM pass each).
+
+``chain_accum``: γ_out = γ_in + ḡ with a fused support count — the IA line
+of Algs 1/2/4.
+
+``cl_fuse``: the whole CL-SIA node step (Alg 3 lines 2–5) given the
+threshold: γ̃ = w·g + e + γ_in; γ_out = threshold(γ̃); e' = γ̃ − γ_out; nnz.
+Reads (g, e, γ_in), writes (γ_out, e') — a single pass for the paper's
+best algorithm's entire hot path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+SUBLANES = 8
+LANES = 1024
+BLOCK = SUBLANES * LANES
+
+
+def _chain_accum_kernel(gin_ref, gbar_ref, gout_ref, nnz_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        nnz_ref[0] = jnp.int32(0)
+
+    gamma = (gin_ref[...].astype(jnp.float32)
+             + gbar_ref[...].astype(jnp.float32))
+    gout_ref[...] = gamma.astype(gout_ref.dtype)
+    nnz_ref[0] += jnp.sum(gamma != 0).astype(jnp.int32)
+
+
+def _cl_fuse_kernel(g_ref, e_ref, gin_ref, w_ref, tau_ref,
+                    gout_ref, enew_ref, nnz_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        nnz_ref[0] = jnp.int32(0)
+
+    w = w_ref[0]
+    tau = tau_ref[0]
+    gt = (w * g_ref[...].astype(jnp.float32)
+          + e_ref[...].astype(jnp.float32)
+          + gin_ref[...].astype(jnp.float32))
+    keep = jnp.abs(gt) >= tau
+    gamma = jnp.where(keep, gt, 0.0)
+    gout_ref[...] = gamma.astype(gout_ref.dtype)
+    enew_ref[...] = (gt - gamma).astype(enew_ref.dtype)
+    nnz_ref[0] += jnp.sum(gamma != 0).astype(jnp.int32)
+
+
+def _pad_blocks(v: jax.Array, n_blocks: int, pad: int):
+    return jnp.pad(v, (0, pad)).reshape(n_blocks, SUBLANES, LANES)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def chain_accum_pallas(gamma_in: jax.Array, gbar: jax.Array, *,
+                       interpret: bool = False):
+    """γ_out = γ_in + ḡ, fused nnz. Returns (γ_out [d], nnz i32 scalar)."""
+    (d,) = gamma_in.shape
+    n_blocks = max(1, -(-d // BLOCK))
+    pad = n_blocks * BLOCK - d
+    gi = _pad_blocks(gamma_in.astype(jnp.float32), n_blocks, pad)
+    gb = _pad_blocks(gbar.astype(jnp.float32), n_blocks, pad)
+
+    blk = pl.BlockSpec((1, SUBLANES, LANES), lambda i: (i, 0, 0))
+    scal = pl.BlockSpec((1,), lambda i: (0,))
+    gout, nnz = pl.pallas_call(
+        _chain_accum_kernel,
+        grid=(n_blocks,),
+        in_specs=[blk, blk],
+        out_specs=[blk, scal],
+        out_shape=[
+            jax.ShapeDtypeStruct(gi.shape, gamma_in.dtype),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(gi, gb)
+    return gout.reshape(-1)[:d], nnz[0]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def cl_fuse_pallas(g: jax.Array, e: jax.Array, gamma_in: jax.Array,
+                   weight: jax.Array, tau: jax.Array, *,
+                   interpret: bool = False):
+    """Fused CL-SIA node step given τ. Returns (γ_out, e', nnz i32 scalar)."""
+    (d,) = g.shape
+    n_blocks = max(1, -(-d // BLOCK))
+    pad = n_blocks * BLOCK - d
+    gp = _pad_blocks(g.astype(jnp.float32), n_blocks, pad)
+    ep = _pad_blocks(e.astype(jnp.float32), n_blocks, pad)
+    gi = _pad_blocks(gamma_in.astype(jnp.float32), n_blocks, pad)
+
+    blk = pl.BlockSpec((1, SUBLANES, LANES), lambda i: (i, 0, 0))
+    scal = pl.BlockSpec((1,), lambda i: (0,))
+    gout, e_new, nnz = pl.pallas_call(
+        _cl_fuse_kernel,
+        grid=(n_blocks,),
+        in_specs=[blk, blk, blk, scal, scal],
+        out_specs=[blk, blk, scal],
+        out_shape=[
+            jax.ShapeDtypeStruct(gi.shape, gamma_in.dtype),
+            jax.ShapeDtypeStruct(ep.shape, e.dtype),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(gp, ep, gi, jnp.reshape(weight, (1,)).astype(jnp.float32),
+      jnp.reshape(tau, (1,)).astype(jnp.float32))
+    return gout.reshape(-1)[:d], e_new.reshape(-1)[:d], nnz[0]

@@ -1,0 +1,69 @@
+"""Backend-dispatching wrappers around the Pallas kernels.
+
+``use_pallas``: "auto" (Pallas compiled on TPU, Pallas-interpret off-TPU
+when ``REPRO_PALLAS_INTERPRET=1``, else jnp ref), "always" (interpret mode
+off-TPU — used by kernel tests), "never" (pure-jnp ref — used by the
+dry-run/roofline path so ``cost_analysis`` sees native HLO).
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.chain_accum import chain_accum_pallas, cl_fuse_pallas
+from repro.kernels.sparsify_ef import sparsify_ef_pallas
+from repro.kernels.topq_threshold import count_ge_pallas
+
+Mode = Literal["auto", "always", "never"]
+
+
+def _resolve(mode: Mode) -> tuple[bool, bool]:
+    """→ (use_pallas, interpret)."""
+    if mode == "never":
+        return False, False
+    on_tpu = jax.default_backend() == "tpu"
+    if mode == "always":
+        return True, not on_tpu
+    # auto
+    if on_tpu:
+        return True, False
+    if os.environ.get("REPRO_PALLAS_INTERPRET") == "1":
+        return True, True
+    return False, False
+
+
+def count_ge(x: jax.Array, taus: jax.Array, *, mode: Mode = "auto"):
+    use, interp = _resolve(mode)
+    if use:
+        return count_ge_pallas(x, taus, interpret=interp)
+    return ref.ref_count_ge(x, taus)
+
+
+def sparsify_ef(g, e, mask_in, weight, tau, *, mode: Mode = "auto"):
+    use, interp = _resolve(mode)
+    if use:
+        return sparsify_ef_pallas(g, e, mask_in, jnp.asarray(weight),
+                                  jnp.asarray(tau), interpret=interp)
+    return ref.ref_sparsify_ef(g, e, mask_in, jnp.asarray(weight),
+                               jnp.asarray(tau))
+
+
+def chain_accum(gamma_in, gbar, *, mode: Mode = "auto"):
+    use, interp = _resolve(mode)
+    if use:
+        return chain_accum_pallas(gamma_in, gbar, interpret=interp)
+    return ref.ref_chain_accum(gamma_in, gbar)
+
+
+def cl_fuse(g, e, gamma_in, weight, tau, *, mode: Mode = "auto"):
+    use, interp = _resolve(mode)
+    if use:
+        return cl_fuse_pallas(g, e, gamma_in, jnp.asarray(weight),
+                              jnp.asarray(tau), interpret=interp)
+    return ref.ref_cl_fuse(g, e, gamma_in, jnp.asarray(weight),
+                           jnp.asarray(tau))

@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each ``ref_*`` function defines the exact contract its kernel must meet
+(``tests/test_kernels.py`` sweeps shapes × dtypes and asserts allclose).
+These are also the implementations used on non-TPU backends and inside the
+dry-run/roofline path, where XLA-native HLO keeps ``cost_analysis()``
+meaningful (see DESIGN §3).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def ref_count_ge(x: Array, taus: Array) -> Array:
+    """counts[j] = #{i : |x_i| >= taus_j}. x: [d] any float dtype; taus: [B] f32."""
+    mag = jnp.abs(x.astype(jnp.float32))
+    return jnp.sum(mag[:, None] >= taus[None, :], axis=0).astype(jnp.int32)
+
+
+def ref_sparsify_ef(g: Array, e: Array, mask_in: Array, weight: Array,
+                    tau: Array):
+    """Fused error-feedback + threshold/mask sparsification.
+
+    g̃ = weight·g + e
+    keep = (|g̃| >= tau) | (mask_in > 0)
+    ḡ = keep ? g̃ : 0 ;  e' = g̃ − ḡ ;  nnz = #{ḡ ≠ 0}
+
+    Returns (ḡ, e', nnz:int32 scalar). Compute in f32, outputs cast back to
+    g.dtype (except nnz).
+    """
+    gt = (weight.astype(jnp.float32) * g.astype(jnp.float32)
+          + e.astype(jnp.float32))
+    keep = (jnp.abs(gt) >= tau.astype(jnp.float32)) | (mask_in > 0)
+    gbar = jnp.where(keep, gt, 0.0)
+    e_new = gt - gbar
+    nnz = jnp.sum(gbar != 0).astype(jnp.int32)
+    return gbar.astype(g.dtype), e_new.astype(e.dtype), nnz
+
+
+def ref_chain_accum(gamma_in: Array, gbar: Array):
+    """γ_out = γ_in + ḡ ; nnz(γ_out). Returns (γ_out, nnz:int32 scalar)."""
+    gamma = (gamma_in.astype(jnp.float32) + gbar.astype(jnp.float32))
+    nnz = jnp.sum(gamma != 0).astype(jnp.int32)
+    return gamma.astype(gamma_in.dtype), nnz
+
+
+def ref_cl_fuse(g: Array, e: Array, gamma_in: Array, weight: Array,
+                tau: Array):
+    """Fused CL-SIA hot path (Alg 3 lines 2–5) in one pass.
+
+    γ̃ = weight·g + e + γ_in
+    γ_out = |γ̃| >= tau ? γ̃ : 0 ;  e' = γ̃ − γ_out ;  nnz(γ_out)
+
+    Returns (γ_out, e', nnz:int32 scalar).
+    """
+    gt = (weight.astype(jnp.float32) * g.astype(jnp.float32)
+          + e.astype(jnp.float32) + gamma_in.astype(jnp.float32))
+    keep = jnp.abs(gt) >= tau.astype(jnp.float32)
+    gamma = jnp.where(keep, gt, 0.0)
+    e_new = gt - gamma
+    nnz = jnp.sum(gamma != 0).astype(jnp.int32)
+    return gamma.astype(gamma_in.dtype), e_new.astype(e.dtype), nnz

@@ -1,0 +1,67 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every dry-run cell.
+
+Weak-type-correct, shardable, zero allocation — the shapes come from the
+assignment's per-arch shape sets (configs/base.py SHAPES).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SHAPES, ShapeSpec
+from repro.models import model as model_mod
+
+S = jax.ShapeDtypeStruct
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    batch = {
+        "tokens": S((b, s), jnp.int32),
+        "labels": S((b, s), jnp.int32),
+    }
+    if cfg.frontend == "vision":
+        batch["frontend_embeds"] = S((b, s, cfg.d_model), cfg.dtype)
+        batch["frontend_mask"] = S((b, s), jnp.bool_)
+    elif cfg.frontend == "audio":
+        batch["frontend_embeds"] = S((b, s, cfg.d_model), cfg.dtype)
+    return batch
+
+
+def prefill_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    out = {
+        "tokens": S((b, s), jnp.int32),
+        "cache": model_mod.cache_specs(cfg, b, s),
+    }
+    if cfg.frontend == "vision":
+        out["extra"] = {
+            "frontend_embeds": S((b, s, cfg.d_model), cfg.dtype),
+            "frontend_mask": S((b, s), jnp.bool_),
+        }
+    elif cfg.frontend == "audio":
+        out["extra"] = {"frontend_embeds": S((b, s, cfg.d_model), cfg.dtype)}
+    return out
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """One new token against a KV cache of seq_len (the assignment's
+    definition of decode_* / long_* cells)."""
+    b, s = shape.global_batch, shape.seq_len
+    return {
+        "token": S((b,), jnp.int32),
+        "pos": S((), jnp.int32),
+        "cache": model_mod.cache_specs(cfg, b, s),
+    }
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> dict:
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        return train_batch_specs(cfg, shape)
+    if shape.kind == "prefill":
+        return prefill_specs(cfg, shape)
+    return decode_specs(cfg, shape)

@@ -1,0 +1,5 @@
+"""Model substrate: decoder stacks for all assigned architecture families."""
+
+from repro.models import model, transformer
+
+__all__ = ["model", "transformer"]

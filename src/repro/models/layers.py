@@ -1,0 +1,76 @@
+"""Shared neural-net building blocks (plain-pytree, framework-free JAX)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def rms_norm(x: Array, scale: Array, eps: float = 1e-5) -> Array:
+    """RMSNorm, computed in f32 regardless of input dtype."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def swiglu(x: Array, w_gate: Array, w_up: Array, w_down: Array) -> Array:
+    """SwiGLU MLP: down( silu(x·Wg) ⊙ (x·Wu) )."""
+    g = jax.nn.silu(jnp.einsum("...d,df->...f", x, w_gate))
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", g * u, w_down)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    """Inverse frequencies [head_dim//2] (f32)."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """Rotate pairs. x: [..., S, H, Dh]; positions: broadcastable to [..., S]."""
+    dh = x.shape[-1]
+    inv = rope_freqs(dh, theta)                       # [dh/2]
+    ang = positions[..., None].astype(jnp.float32) * inv  # [..., S, dh/2]
+    sin = jnp.sin(ang)[..., None, :]                  # [..., S, 1, dh/2]
+    cos = jnp.cos(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype) -> Array:
+    scale = (2.0 / (d_in + d_out)) ** 0.5
+    return (scale * jax.random.normal(key, (d_in, d_out), jnp.float32)
+            ).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype) -> Array:
+    return (jax.random.normal(key, (vocab, dim), jnp.float32) * 0.02
+            ).astype(dtype)
+
+
+def causal_conv1d(x: Array, w: Array, cache: Array | None = None):
+    """Depthwise causal conv. x: [B, L, C]; w: [k, C].
+
+    Returns (y [B, L, C], new_cache [B, k-1, C]). ``cache`` holds the last
+    k−1 inputs from the previous segment (zeros at t=0).
+    """
+    k, c = w.shape
+    b, l, _ = x.shape
+    if cache is None:
+        cache = jnp.zeros((b, k - 1, c), x.dtype)
+    xx = jnp.concatenate([cache, x], axis=1)          # [B, L+k-1, C]
+    y = sum(xx[:, i:i + l, :] * w[i][None, None, :] for i in range(k))
+    new_cache = xx[:, l:l + k - 1, :]
+    return y.astype(x.dtype), new_cache

@@ -1,0 +1,37 @@
+"""Modality-frontend stubs (per assignment: backbone-only for [vlm]/[audio]).
+
+The assignment specifies the transformer BACKBONE for internvl2-26b and
+musicgen-medium; the modality frontends (InternViT-6B / EnCodec) are
+represented by *precomputed* embeddings supplied through ``input_specs()``:
+
+* vision: ``frontend_embeds [B, S, D]`` + ``frontend_mask [B, S]`` — mask
+  marks image-patch positions whose embeddings come from the (stub) ViT;
+  text positions keep their token embeddings.
+* audio: ``frontend_embeds [B, S, D]`` added to EnCodec-token embeddings
+  (conditioning path). MusicGen's 4-codebook delay-pattern heads are
+  collapsed to the single vocab-2048 head (backbone-only, DESIGN §4).
+
+For smoke tests/examples we generate the stub embeddings deterministically.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def vision_stub_embeds(cfg: ModelConfig, key, batch: int, seq: int,
+                       num_patches: int):
+    """Deterministic fake patch embeddings occupying the first positions."""
+    fe = jax.random.normal(key, (batch, seq, cfg.d_model), jnp.float32) * 0.02
+    mask = (jnp.arange(seq)[None, :] < num_patches) & jnp.ones(
+        (batch, 1), bool)
+    return fe.astype(cfg.dtype), mask
+
+
+def audio_stub_embeds(cfg: ModelConfig, key, batch: int, seq: int):
+    """Deterministic fake conditioning-frame embeddings (added to tokens)."""
+    fe = jax.random.normal(key, (batch, seq, cfg.d_model), jnp.float32) * 0.02
+    return fe.astype(cfg.dtype)

@@ -1,0 +1,7 @@
+from repro.optim.optimizers import (FlatOptState, OptConfig, TreeOptState,
+                                    apply_flat, apply_tree, init_flat,
+                                    init_tree)
+from repro.optim.schedule import lr_schedule
+
+__all__ = ["FlatOptState", "OptConfig", "TreeOptState", "apply_flat",
+           "apply_tree", "init_flat", "init_tree", "lr_schedule"]

@@ -1,0 +1,138 @@
+"""Optimizers, implemented twice:
+
+* flat-space — operates on the [D_pad] flattened master params (fp32,
+  sharded over every mesh axis = ZeRO-1); used by the production train step.
+  Purely elementwise → zero collectives in the update itself.
+* pytree — convenience for the FL simulator / examples.
+
+No optax dependency (container is offline); implementations are the
+standard textbook ones and are unit-tested against hand-rolled numpy.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"              # sgd | momentum | adamw
+    lr: float = 1e-3
+    momentum: float = 0.9
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: float = 0.0           # 0 = off; global-norm clip
+
+
+class FlatOptState(NamedTuple):
+    step: Array                      # int32 scalar
+    m: Optional[Array]               # [D] or None (sgd)
+    v: Optional[Array]               # [D] or None (sgd/momentum)
+
+
+def init_flat(cfg: OptConfig, d: int, like: Optional[Array] = None
+              ) -> FlatOptState:
+    zeros = (jnp.zeros((d,), jnp.float32) if like is None
+             else jnp.zeros_like(like, jnp.float32))
+    if cfg.name == "sgd":
+        return FlatOptState(jnp.int32(0), None, None)
+    if cfg.name == "momentum":
+        return FlatOptState(jnp.int32(0), zeros, None)
+    if cfg.name == "adamw":
+        return FlatOptState(jnp.int32(0), zeros, jnp.zeros_like(zeros))
+    raise ValueError(cfg.name)
+
+
+def apply_flat(cfg: OptConfig, state: FlatOptState, params: Array,
+               grad: Array, lr_scale: Array | float = 1.0
+               ) -> tuple[Array, FlatOptState]:
+    """One elementwise update in flat fp32 space."""
+    g = grad.astype(jnp.float32)
+    p = params.astype(jnp.float32)
+    if cfg.grad_clip > 0:
+        gn = jnp.sqrt(jnp.sum(g * g))
+        g = g * jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gn, 1e-12))
+    step = state.step + 1
+    lr = cfg.lr * lr_scale
+    if cfg.name == "sgd":
+        new_p = p - lr * g
+        return new_p, FlatOptState(step, None, None)
+    if cfg.name == "momentum":
+        m = cfg.momentum * state.m + g
+        new_p = p - lr * m
+        return new_p, FlatOptState(step, m, None)
+    if cfg.name == "adamw":
+        m = cfg.b1 * state.m + (1 - cfg.b1) * g
+        v = cfg.b2 * state.v + (1 - cfg.b2) * g * g
+        t = step.astype(jnp.float32)
+        mh = m / (1 - cfg.b1 ** t)
+        vh = v / (1 - cfg.b2 ** t)
+        upd = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p
+        new_p = p - lr * upd
+        return new_p, FlatOptState(step, m, v)
+    raise ValueError(cfg.name)
+
+
+# ---------------------------------------------------------------------------
+# Pytree variants (simulator / examples)
+# ---------------------------------------------------------------------------
+
+class TreeOptState(NamedTuple):
+    step: Array
+    m: Any
+    v: Any
+
+
+def init_tree(cfg: OptConfig, params: Any) -> TreeOptState:
+    zeros = lambda: jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32),
+                                 params)
+    if cfg.name == "sgd":
+        return TreeOptState(jnp.int32(0), None, None)
+    if cfg.name == "momentum":
+        return TreeOptState(jnp.int32(0), zeros(), None)
+    return TreeOptState(jnp.int32(0), zeros(), zeros())
+
+
+def apply_tree(cfg: OptConfig, state: TreeOptState, params: Any, grads: Any,
+               lr_scale: Array | float = 1.0) -> tuple[Any, TreeOptState]:
+    if cfg.grad_clip > 0:
+        gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                          for g in jax.tree.leaves(grads)))
+        scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gn, 1e-12))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+    step = state.step + 1
+    lr = cfg.lr * lr_scale
+    if cfg.name == "sgd":
+        new_p = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32) - lr * g).astype(p.dtype),
+            params, grads)
+        return new_p, TreeOptState(step, None, None)
+    if cfg.name == "momentum":
+        m = jax.tree.map(lambda mm, g: cfg.momentum * mm + g, state.m, grads)
+        new_p = jax.tree.map(
+            lambda p, mm: (p.astype(jnp.float32) - lr * mm).astype(p.dtype),
+            params, m)
+        return new_p, TreeOptState(step, m, None)
+    t = step.astype(jnp.float32)
+    m = jax.tree.map(lambda mm, g: cfg.b1 * mm + (1 - cfg.b1) * g,
+                     state.m, grads)
+    v = jax.tree.map(lambda vv, g: cfg.b2 * vv + (1 - cfg.b2) * g * g,
+                     state.v, grads)
+
+    def upd(p, mm, vv):
+        mh = mm / (1 - cfg.b1 ** t)
+        vh = vv / (1 - cfg.b2 ** t)
+        u = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(
+            jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+    new_p = jax.tree.map(upd, params, m, v)
+    return new_p, TreeOptState(step, m, v)

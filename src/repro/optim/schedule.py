@@ -1,0 +1,23 @@
+"""Learning-rate schedules (scale factors multiplied onto OptConfig.lr)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def lr_schedule(step, *, warmup: int = 100, decay_steps: int = 10_000,
+                kind: str = "cosine", min_ratio: float = 0.1):
+    """Warmup-then-decay scale in [min_ratio, 1]."""
+    s = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = jnp.minimum(1.0, (s + 1) / max(warmup, 1))
+    if kind == "constant":
+        return warm
+    frac = jnp.clip((s - warmup) / max(decay_steps - warmup, 1), 0.0, 1.0)
+    if kind == "cosine":
+        decay = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(
+            jnp.pi * frac))
+    elif kind == "linear":
+        decay = 1 - (1 - min_ratio) * frac
+    else:
+        raise ValueError(kind)
+    return warm * decay

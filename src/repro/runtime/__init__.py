@@ -1,0 +1,3 @@
+from repro.runtime import elastic, fault
+
+__all__ = ["elastic", "fault"]

@@ -1,0 +1,45 @@
+"""Elastic scaling: change the client count K between rounds.
+
+State transformations for grow/shrink — EF rows are per-client, so scaling
+is a row-level operation; the flat master/optimizer are K-independent.
+A K-change in production means a re-mesh + recompile; these helpers produce
+the new state arrays for the checkpoint-restore path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+def resize_ef(ef: Array, new_k: int, *, redistribute: bool = True) -> Array:
+    """[K, D] → [new_K, D].
+
+    Shrink: surviving rows keep their memory; departing rows' banked mass is
+    redistributed equally to survivors (``redistribute=True``, keeps the
+    total un-transmitted mass conserved) or dropped (False — bounded-loss
+    mode, matches a crash).
+    Grow: new clients start with zero memory.
+    """
+    k, d = ef.shape
+    if new_k == k:
+        return ef
+    if new_k > k:
+        pad = jnp.zeros((new_k - k, d), ef.dtype)
+        return jnp.concatenate([ef, pad], axis=0)
+    kept = ef[:new_k]
+    if redistribute:
+        lost = jnp.sum(ef[new_k:], axis=0, keepdims=True)
+        kept = kept + lost / new_k
+    return kept
+
+
+def rebalance_weights(num_clients: int, sample_counts=None) -> Array:
+    """D_k weights after membership change (uniform unless counts given)."""
+    if sample_counts is None:
+        return jnp.full((num_clients,), 1.0 / num_clients, jnp.float32)
+    c = jnp.asarray(sample_counts, jnp.float32)
+    return c / jnp.sum(c)

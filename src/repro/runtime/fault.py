@@ -1,0 +1,60 @@
+"""Straggler mitigation and failure handling (DESIGN §6).
+
+The mechanism is the paper's own error feedback: a client that misses the
+round's deadline gets ``participate=0`` — its node step forwards γ
+unchanged and banks the *entire* effective gradient in EF, which is then
+transmitted (sparsified) in later rounds. Tests prove no mass is lost.
+
+Failure handling is topological: a dead *relay* is bypassed by re-ordering
+the chain (fedsim) / rebuilding the ring permutation without the dead rank
+(production: re-mesh + elastic restore from the last checkpoint — EF rows
+of surviving clients carry over; the dead client's banked mass is lost and
+bounded by ‖e_dead‖, which we expose as a metric).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class StragglerModel:
+    """Random straggler process for simulation/testing."""
+
+    p_straggle: float = 0.0          # per-client per-round straggle prob
+    correlated: bool = False         # slow client stays slow next round
+    p_recover: float = 0.5
+
+    def sample(self, key, k: int, prev: Optional[Array] = None) -> Array:
+        """→ participation mask [K] of {0.,1.}."""
+        if self.p_straggle <= 0:
+            return jnp.ones((k,), jnp.float32)
+        fresh = (jax.random.uniform(key, (k,)) >= self.p_straggle)
+        if self.correlated and prev is not None:
+            k2 = jax.random.fold_in(key, 1)
+            recover = jax.random.uniform(k2, (k,)) < self.p_recover
+            stay_slow = (prev == 0) & ~recover
+            fresh = fresh & ~stay_slow
+        return fresh.astype(jnp.float32)
+
+
+def deadline_mask(arrival_times: Array, deadline: float) -> Array:
+    """Deadline-based participation from (simulated) per-client latencies."""
+    return (arrival_times <= deadline).astype(jnp.float32)
+
+
+def heal_chain(order: np.ndarray, dead: int) -> np.ndarray:
+    """Remove a dead relay from a chain order (numpy, host-side decision)."""
+    return np.asarray([o for o in order if o != dead], dtype=np.int32)
+
+
+def banked_mass(ef: Array) -> Array:
+    """Per-client ‖e_k‖₁ — the loss bound if client k dies now."""
+    return jnp.sum(jnp.abs(ef), axis=-1)

@@ -1,0 +1,354 @@
+"""The assembled distributed train step (and serve steps).
+
+One jit, three phases (DESIGN §5):
+
+  1. per-client grads — shard_map manual over the DP axes (pod, data), the
+     model axis stays *auto* so GSPMD runs TP inside; the loss is averaged
+     over the local shard only, so gradients come out per-client
+     (stacked [K_dp, …]), NOT psum'd;
+  2. sparse incremental aggregation — the rotated ring (core/ring.py) over
+     the combined (pod, data) ring — the paper's K-client multi-hop chain,
+     one chain per segment — operating in the *shard-aligned flat space*
+     (core/flat_layout.py): gradients are flattened locally inside the
+     manual shard_map, so no resharding collectives ever touch the
+     gradient-sized buffers (EXPERIMENTS §Perf it.4);
+  3. ZeRO optimizer — flat fp32 master, fully sharded, elementwise update;
+     the downlink shard_map rebuilds the param pytree (dp all-gather per
+     model column = the paper's w^{t+1} broadcast, counted separately from
+     the uplink cost model).
+
+``build_serve_step``/``build_prefill_step`` produce the inference
+entrypoints the decode/prefill dry-run cells lower.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core import ring as ring_mod
+from repro.core import sparsify as sp
+from repro.core.algorithms import AggConfig
+from repro.core.flat_layout import FlatLayout
+from repro.models import model as model_mod
+from repro.models import partition
+from repro.optim import optimizers as opt_mod
+from repro.optim.schedule import lr_schedule
+from repro.train.state import TrainConfig, TrainState
+
+Array = jax.Array
+
+
+def dp_axes(mesh) -> tuple:
+    return partition.batch_axes(mesh)
+
+
+def dp_size(mesh) -> int:
+    n = 1
+    for a in dp_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+def model_size(mesh) -> int:
+    return mesh.shape.get("model", 1)
+
+
+def flat_spec(mesh) -> P:
+    """Sharding of the flat master/opt/aggregate: model-major, then ring."""
+    return P(("model",) + dp_axes(mesh))
+
+
+@functools.lru_cache(maxsize=None)
+def _layout_cached(cfg: ModelConfig, mesh) -> FlatLayout:
+    template = model_mod.param_specs(cfg)
+    return FlatLayout(template, partition.param_pspecs(cfg, mesh), mesh)
+
+
+def make_layout(cfg: ModelConfig, mesh) -> FlatLayout:
+    try:
+        return _layout_cached(cfg, mesh)
+    except TypeError:                      # unhashable mesh fallback
+        template = model_mod.param_specs(cfg)
+        return FlatLayout(template, partition.param_pspecs(cfg, mesh), mesh)
+
+
+def global_q(tc: TrainConfig, d_flat: int) -> int:
+    return max(1, int(tc.q_frac * d_flat))
+
+
+def _segment_agg_cfg(tc: TrainConfig, mesh, d_flat: int) -> AggConfig:
+    """Per-segment AggConfig: the global budget split over all segments."""
+    n_segments = dp_size(mesh) * model_size(mesh)
+    q = global_q(tc, d_flat)
+    q_seg = ring_mod.segment_budget(q, n_segments)
+    kw = dict(q=q_seg)
+    if tc.needs_tcs():
+        ql = max(1, round(q_seg * tc.agg.q_local / max(tc.agg.q, 1))
+                 ) if tc.agg.q_local else max(1, q_seg // 10)
+        kw.update(q_local=ql, q_global=max(q_seg - ql, 1))
+    return dataclasses.replace(tc.agg, **kw)
+
+
+def _model_axis_index(mesh):
+    if "model" in mesh.axis_names:
+        return jax.lax.axis_index("model")
+    return jnp.int32(0)
+
+
+# ---------------------------------------------------------------------------
+# State init
+# ---------------------------------------------------------------------------
+
+def _master_from_params(cfg: ModelConfig, mesh, layout: FlatLayout, params):
+    """Flat fp32 master from the param pytree (shard-aligned, in-shard_map)."""
+    dp = dp_axes(mesh)
+    k_dp = dp_size(mesh)
+    seg = layout.n_local // k_dp
+    manual = set(mesh.axis_names)
+
+    def fn(p):
+        m_idx = _model_axis_index(mesh)
+        col = layout.local_flatten(jax.tree.leaves(p), m_idx, jnp.float32)
+        if k_dp > 1:
+            r = jax.lax.axis_index(dp)
+            return jax.lax.dynamic_slice(col, (r * seg,), (seg,))
+        return col
+
+    return jax.shard_map(
+        fn, mesh=mesh, in_specs=(layout.param_in_specs(),),
+        out_specs=flat_spec(mesh), axis_names=manual, check_vma=False,
+    )(params)
+
+
+def init_state(cfg: ModelConfig, tc: TrainConfig, mesh, rng) -> TrainState:
+    """Materializing init (small models / tests). Dry-run uses eval_shape."""
+    layout = make_layout(cfg, mesh)
+    k_dp = dp_size(mesh)
+    params = model_mod.init_params(cfg, rng)
+    master = _master_from_params(cfg, mesh, layout, params)
+    opt = opt_mod.init_flat(tc.opt, layout.d_flat, like=master)
+    ef = jnp.zeros((k_dp, layout.d_flat), jnp.dtype(tc.ef_dtype))
+    tcs_prev = None
+    if tc.needs_tcs():
+        tcs_prev = jax.tree.map(lambda p: p.astype(jnp.dtype(tc.agg_dtype)),
+                                params)
+    return TrainState(step=jnp.int32(0), params=params, master=master,
+                      opt=opt, ef=ef, tcs_prev=tcs_prev)
+
+
+def state_shardings(cfg: ModelConfig, tc: TrainConfig, mesh):
+    """NamedSharding pytree matching TrainState."""
+    fs = flat_spec(mesh)
+    dp = dp_axes(mesh)
+    ns = lambda s: NamedSharding(mesh, s)
+    p_specs = jax.tree.map(ns, partition.param_pspecs(cfg, mesh),
+                           is_leaf=lambda x: isinstance(x, P))
+    opt_m = None if tc.opt.name == "sgd" else ns(fs)
+    opt_v = ns(fs) if tc.opt.name == "adamw" else None
+    tcs = (jax.tree.map(ns, partition.param_pspecs(cfg, mesh),
+                        is_leaf=lambda x: isinstance(x, P))
+           if tc.needs_tcs() else None)
+    return TrainState(
+        step=ns(P()),
+        params=p_specs,
+        master=ns(fs),
+        opt=opt_mod.FlatOptState(step=ns(P()), m=opt_m, v=opt_v),
+        ef=ns(P(dp, "model")),
+        tcs_prev=tcs,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+
+def build_train_step(cfg: ModelConfig, tc: TrainConfig, mesh):
+    """Returns train_step(state, batch) → (state, metrics). jit-ready."""
+    layout = make_layout(cfg, mesh)
+    dp = dp_axes(mesh)
+    k_dp = dp_size(mesh)
+    seg = layout.n_local // k_dp
+    agg_cfg = _segment_agg_cfg(tc, mesh, layout.d_flat)
+    fs = flat_spec(mesh)
+    agg_dt = jnp.dtype(tc.agg_dtype)
+    manual_axes = set(mesh.axis_names)
+    needs_tcs = tc.needs_tcs()
+    qg_total = 0
+    if needs_tcs:
+        qg_total = max(1, int(
+            global_q(tc, layout.d_flat) * agg_cfg.q_global
+            / max(agg_cfg.q_global + agg_cfg.q_local, 1)))
+
+    # SSM/hybrid params are model-replicated (mixed-group in_proj; DESIGN
+    # §5) — without help the TP axis recomputes every mamba block M×
+    # (measured: 16× FLOPs on mamba2-130m, EXPERIMENTS §Perf it.3). Shard
+    # the local batch over `model` instead: the TP axis becomes a second
+    # DP axis for compute; the ring in_specs then insert one model-axis
+    # all-reduce per grad leaf (2·|grads| wire ≪ 16× compute).
+    # tc.fsdp_compute extends the same layout to dense archs (weights stay
+    # model-sharded → GSPMD gathers them per layer, FSDP-style).
+    batch_over_model = cfg.family in ("ssm", "hybrid") or tc.fsdp_compute
+
+    # ---- phase 1: per-client gradients ------------------------------------
+    def per_client(params, batch):
+        if batch_over_model and "model" in mesh.axis_names:
+            m = mesh.shape["model"]
+            batch = jax.tree.map(
+                lambda x: jax.lax.with_sharding_constraint(
+                    x, P("model", *([None] * (x.ndim - 1))))
+                if x.shape[0] % m == 0 else x, batch)
+
+        def local_loss(p):
+            return model_mod.loss_fn(cfg, p, batch)
+        (loss, metrics), grads = jax.value_and_grad(
+            local_loss, has_aux=True)(params)
+        loss = jax.lax.pmean(loss, dp)
+        grads = jax.tree.map(lambda g: g[None], grads)   # stack client axis
+        return grads, loss
+
+    # ---- phase 2: sparse incremental aggregation (flat, local layout) -----
+    def ring_fn(grads_tree, ef_l, w_l, part_l, params_tree, prev_tree):
+        m_idx = _model_axis_index(mesh)
+        g_leaves = [l[0] for l in jax.tree.leaves(grads_tree)]
+        col = layout.local_flatten(g_leaves, m_idx, agg_dt)
+
+        mask_col = None
+        if needs_tcs:
+            p_col = layout.local_flatten(jax.tree.leaves(params_tree),
+                                         m_idx, jnp.float32)
+            q_col = layout.local_flatten(jax.tree.leaves(prev_tree),
+                                         m_idx, jnp.float32)
+            delta = p_col - q_col
+            # identical global threshold on every column: counts psum over
+            # `model` only (columns partition coordinates; dp replicates)
+            axis = "model" if "model" in mesh.axis_names else None
+            tau_g = sp.threshold_for_topq(delta, qg_total, axis_name=axis)
+            mask_col = jnp.where(jnp.any(delta != 0),
+                                 (jnp.abs(delta) >= tau_g).astype(agg_dt),
+                                 jnp.zeros_like(delta, agg_dt))
+
+        final, ef_new, stats = ring_mod.rotated_ring_local(
+            agg_cfg, col, ef_l[0], w_l[0], axis=dp,
+            global_mask_local=mask_col, participate=part_l[0])
+        stats = jax.tree.map(
+            lambda s: jax.lax.psum(s, tuple(manual_axes)), stats)
+        return final, ef_new[None], stats
+
+    # ---- phase 3b: downlink (flat master → param pytree) -------------------
+    def downlink_fn(master_l):
+        m_idx = _model_axis_index(mesh)
+        col = (jax.lax.all_gather(master_l, dp, axis=0, tiled=True)
+               if k_dp > 1 else master_l)
+        leaves = layout.local_unflatten(col, m_idx)
+        return layout.treedef.unflatten(leaves)
+
+    empty_param_specs = jax.tree.map(lambda _: P(), model_mod.param_specs(cfg))
+
+    def train_step(state: TrainState, batch: dict):
+        batch = dict(batch)
+        weights = batch.pop("weights", None)
+        participate = batch.pop("participate", None)
+        if weights is None:
+            weights = jnp.full((k_dp,), 1.0 / k_dp, jnp.float32)
+        if participate is None:
+            participate = jnp.ones((k_dp,), jnp.float32)
+
+        # phase 1 — per-client grads (model axis auto inside)
+        grads_stacked, loss = jax.shard_map(
+            per_client,
+            mesh=mesh,
+            in_specs=(jax.tree.map(lambda _: P(), state.params),
+                      jax.tree.map(lambda l: P(dp, *([None] * (l.ndim - 1))),
+                                   batch)),
+            out_specs=(jax.tree.map(
+                lambda l: P(dp, *([None] * l.ndim)), state.params), P()),
+            axis_names=set(dp),
+            check_vma=False,
+        )(state.params, batch)
+
+        # phase 2 — ring aggregation (manual over every axis; the in_specs
+        # reshard grads to their param-aligned shardings, which is also the
+        # model-axis grad all-reduce for model-replicated leaves)
+        params_in = state.params
+        prev_in = state.tcs_prev if needs_tcs else state.params
+        agg_flat, ef_new, stats = jax.shard_map(
+            ring_fn,
+            mesh=mesh,
+            in_specs=(layout.grads_in_specs(dp), P(dp, "model"), P(dp),
+                      P(dp), layout.param_in_specs(),
+                      layout.param_in_specs()),
+            out_specs=(fs, P(dp, "model"),
+                       jax.tree.map(lambda _: P(), ring_mod.RingStats(
+                           0., 0., 0.))),
+            axis_names=manual_axes,
+            check_vma=False,
+        )(grads_stacked, state.ef, weights, participate, params_in, prev_in)
+
+        # phase 3 — ZeRO flat optimizer
+        total_w = jnp.maximum(jnp.sum(weights * participate), 1e-9)
+        grad_est = agg_flat.astype(jnp.float32) / total_w
+        lr_scale = lr_schedule(state.step, warmup=tc.lr_warmup,
+                               decay_steps=tc.lr_decay_steps)
+        master_new, opt_new = opt_mod.apply_flat(
+            tc.opt, state.opt, state.master, grad_est, lr_scale)
+        master_new = jax.lax.with_sharding_constraint(
+            master_new, NamedSharding(mesh, fs))
+
+        # downlink — w^{t+1} broadcast
+        params_new = jax.shard_map(
+            downlink_fn, mesh=mesh, in_specs=(fs,),
+            out_specs=layout.param_out_specs(), axis_names=manual_axes,
+            check_vma=False,
+        )(master_new)
+
+        tcs_prev_new = state.tcs_prev
+        if needs_tcs:
+            tcs_prev_new = jax.tree.map(
+                lambda p: p.astype(jnp.dtype(tc.agg_dtype)), state.params)
+
+        metrics = {
+            "loss": loss,
+            "agg_bits": stats.bits,
+            "agg_nnz": stats.nnz,
+            "agg_err_sq": stats.err_sq,
+            "lr_scale": lr_scale,
+        }
+        new_state = TrainState(step=state.step + 1, params=params_new,
+                               master=master_new, opt=opt_new, ef=ef_new,
+                               tcs_prev=tcs_prev_new)
+        return new_state, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# Serving steps
+# ---------------------------------------------------------------------------
+
+def build_serve_step(cfg: ModelConfig, mesh):
+    """decode: (params, cache, token [B], pos) → (next_token [B], cache)."""
+
+    def serve_step(params, cache, token, pos):
+        logits, cache = model_mod.decode_step(cfg, params, cache, token, pos)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+    return serve_step
+
+
+def build_prefill_step(cfg: ModelConfig, mesh):
+    def prefill_step(params, cache, tokens, extra=None):
+        kw = {}
+        if extra is not None:
+            kw = {k: v for k, v in extra.items()}
+        logits, cache = model_mod.prefill(cfg, params, tokens, cache, **kw)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+    return prefill_step

@@ -1,0 +1,34 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests must see the real
+single CPU device; multi-device tests spawn subprocesses that set
+``--xla_force_host_platform_device_count`` before importing jax."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def run_multidev(script: str, devices: int = 8, timeout: int = 600) -> str:
+    """Run a python snippet in a subprocess with N fake devices.
+
+    The snippet must print 'PASS' on success; stdout is returned.
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={devices}")
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", script], env=env,
+                          capture_output=True, text=True, timeout=timeout)
+    if proc.returncode != 0 or "PASS" not in proc.stdout:
+        raise AssertionError(
+            f"multidev subprocess failed\nSTDOUT:\n{proc.stdout[-4000:]}\n"
+            f"STDERR:\n{proc.stderr[-4000:]}")
+    return proc.stdout
+
+
+@pytest.fixture(scope="session")
+def multidev():
+    return run_multidev

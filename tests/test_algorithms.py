@@ -1,0 +1,146 @@
+"""Per-algorithm node-step invariants (paper §III–§IV)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sparsify as sp
+from repro.core.algorithms import (AggConfig, AggKind, NodeCtx, index_bits,
+                                   node_step)
+
+D, Q = 300, 12
+
+
+def _inputs(seed=0, nnz_in=30):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    g = jax.random.normal(k1, (D,))
+    e = 0.3 * jax.random.normal(k2, (D,))
+    gamma_in = sp.topq(jax.random.normal(k3, (D,)), nnz_in)
+    return g, gamma_in, e
+
+
+def _ctx(mask=None):
+    return NodeCtx(global_mask=jnp.zeros((D,)) if mask is None else mask,
+                   participate=jnp.float32(1))
+
+
+def test_sia_error_feedback_conservation():
+    """g̃ = ḡ + e' exactly: nothing is lost, only delayed (EF invariant)."""
+    cfg = AggConfig(kind=AggKind.SIA, q=Q)
+    g, gamma_in, e = _inputs()
+    gamma_out, e_new, st = node_step(cfg)(cfg, g, gamma_in, e, 2.0, _ctx())
+    gt = 2.0 * g + e
+    np.testing.assert_allclose(np.asarray(gamma_out - gamma_in + e_new),
+                               np.asarray(gt), rtol=1e-5, atol=1e-6)
+
+
+def test_re_sia_error_leq_sia_error():
+    """Prop. 1: RE-SIA's sparsification error is ≤ SIA's, same support size."""
+    for seed in range(5):
+        g, gamma_in, e = _inputs(seed)
+        cfg_s = AggConfig(kind=AggKind.SIA, q=Q)
+        cfg_r = AggConfig(kind=AggKind.RE_SIA, q=Q)
+        _, e_s, st_s = node_step(cfg_s)(cfg_s, g, gamma_in, e, 1.0, _ctx())
+        _, e_r, st_r = node_step(cfg_r)(cfg_r, g, gamma_in, e, 1.0, _ctx())
+        assert float(st_r.err_sq) <= float(st_s.err_sq) + 1e-6
+        # identical comm cost (same outgoing support → same bits)
+        assert float(st_r.bits) == pytest.approx(float(st_s.bits))
+
+
+def test_cl_sia_respects_budget():
+    cfg = AggConfig(kind=AggKind.CL_SIA, q=Q)
+    for nnz_in in (0, 10, 100, 299):
+        g, gamma_in, e = _inputs(nnz_in=max(nnz_in, 1))
+        gamma_out, e_new, st = node_step(cfg)(cfg, g, gamma_in, e, 1.0,
+                                              _ctx())
+        assert int(sp.nnz(gamma_out)) <= Q
+        assert float(st.bits) <= Q * (cfg.omega + index_bits(D)) + 1e-6
+
+
+def test_cl_sia_is_topq_of_sum():
+    cfg = AggConfig(kind=AggKind.CL_SIA, q=Q)
+    g, gamma_in, e = _inputs()
+    gamma_out, e_new, _ = node_step(cfg)(cfg, g, gamma_in, e, 1.5, _ctx())
+    expect = sp.topq(1.5 * g + e + gamma_in, Q)
+    np.testing.assert_allclose(np.asarray(gamma_out), np.asarray(expect),
+                               rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(e_new),
+                               np.asarray(1.5 * g + e + gamma_in - expect),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_sia_growth_bounds():
+    """max(Q,‖γin‖₀) ≤ ‖γout‖₀ ≤ Q+‖γin‖₀ (§III)."""
+    cfg = AggConfig(kind=AggKind.SIA, q=Q)
+    for seed in range(5):
+        g, gamma_in, e = _inputs(seed)
+        nnz_in = int(sp.nnz(gamma_in))
+        gamma_out, _, _ = node_step(cfg)(cfg, g, gamma_in, e, 1.0, _ctx())
+        nnz_out = int(sp.nnz(gamma_out))
+        assert max(Q, nnz_in) - 1 <= nnz_out <= Q + nnz_in
+
+
+def test_tc_sia_mask_semantics():
+    """TC-SIA transmits everything inside the global mask + Q_L local."""
+    mask = sp.topq_mask(jax.random.normal(jax.random.PRNGKey(9), (D,)), 50)
+    cfg = AggConfig(kind=AggKind.TC_SIA, q=Q, q_global=50, q_local=4)
+    g, gamma_in, e = _inputs()
+    gamma_out, e_new, st = node_step(cfg)(cfg, g, gamma_in, e, 1.0,
+                                          _ctx(mask))
+    # error is zero inside the global mask (those coords always transmitted)
+    np.testing.assert_allclose(np.asarray(e_new * mask), 0, atol=1e-6)
+    assert int(st.nnz_global) == 50
+
+
+def test_cl_tc_sia_budget():
+    mask = sp.topq_mask(jax.random.normal(jax.random.PRNGKey(9), (D,)), 50)
+    cfg = AggConfig(kind=AggKind.CL_TC_SIA, q=Q, q_global=50, q_local=4)
+    g, gamma_in, e = _inputs()
+    gamma_out, e_new, st = node_step(cfg)(cfg, g, gamma_in, e, 1.0,
+                                          _ctx(mask))
+    off_mask = gamma_out * (1 - mask)
+    assert int(sp.nnz(off_mask)) <= 4
+    assert float(st.bits) == pytest.approx(
+        cfg.omega * 50 + (cfg.omega + index_bits(D)) * int(sp.nnz(off_mask)))
+
+
+def test_dense_ia_exact():
+    cfg = AggConfig(kind=AggKind.DENSE_IA, q=1)
+    g, gamma_in, e = _inputs()
+    gamma_out, e_new, st = node_step(cfg)(cfg, g, gamma_in, e0 := e, 3.0,
+                                          _ctx())
+    np.testing.assert_allclose(np.asarray(gamma_out),
+                               np.asarray(gamma_in + 3.0 * g + e0),
+                               rtol=1e-5, atol=1e-6)
+    assert float(jnp.sum(jnp.abs(e_new))) == 0.0
+
+
+@pytest.mark.parametrize("kind", [AggKind.SIA, AggKind.RE_SIA,
+                                  AggKind.CL_SIA, AggKind.TC_SIA,
+                                  AggKind.CL_TC_SIA, AggKind.DENSE_IA])
+def test_straggler_banks_everything(kind):
+    """participate=0 → γ forwarded unchanged, full g̃ banked in EF."""
+    cfg = AggConfig(kind=kind, q=Q, q_global=50, q_local=4)
+    mask = sp.topq_mask(jax.random.normal(jax.random.PRNGKey(9), (D,)), 50)
+    g, gamma_in, e = _inputs()
+    ctx = NodeCtx(global_mask=mask, participate=jnp.float32(0))
+    gamma_out, e_new, _ = node_step(cfg)(cfg, g, gamma_in, e, 2.0, ctx)
+    np.testing.assert_allclose(np.asarray(gamma_out), np.asarray(gamma_in),
+                               rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(e_new), np.asarray(2.0 * g + e),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_threshold_impl_close_to_exact():
+    """CL-SIA with threshold Top-Q ≈ exact (≥ q survivors, same top values)."""
+    cfg_e = AggConfig(kind=AggKind.CL_SIA, q=Q, topq_impl="exact")
+    cfg_t = AggConfig(kind=AggKind.CL_SIA, q=Q, topq_impl="threshold")
+    g, gamma_in, e = _inputs()
+    out_e, _, _ = node_step(cfg_e)(cfg_e, g, gamma_in, e, 1.0, _ctx())
+    out_t, _, _ = node_step(cfg_t)(cfg_t, g, gamma_in, e, 1.0, _ctx())
+    # threshold keeps a superset of the exact support
+    sup_e = np.asarray(out_e) != 0
+    sup_t = np.asarray(out_t) != 0
+    assert (sup_t | sup_e).sum() == sup_t.sum()
+    assert sup_t.sum() >= Q

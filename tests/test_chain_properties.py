@@ -1,0 +1,129 @@
+"""Chain-level properties (hypothesis) + cost-model agreement."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import comm_cost as cc
+from repro.core import sparsify as sp
+from repro.core.algorithms import AggConfig, AggKind
+from repro.core.chain import run_chain, run_chain_with_topology
+
+K, D, Q = 7, 200, 9
+
+
+def _grads(seed=0, k=K, d=D):
+    return jax.random.normal(jax.random.PRNGKey(seed), (k, d))
+
+
+ALL_KINDS = [AggKind.SIA, AggKind.RE_SIA, AggKind.CL_SIA, AggKind.TC_SIA,
+             AggKind.CL_TC_SIA, AggKind.DENSE_IA]
+
+
+@pytest.mark.parametrize("kind", ALL_KINDS)
+def test_mass_conservation(kind):
+    """γ₁ + Σ_k e'_k = Σ_k (D_k g_k + e_k): the chain loses nothing."""
+    cfg = AggConfig(kind=kind, q=Q)
+    g = _grads()
+    e = 0.1 * _grads(seed=1)
+    w = jnp.arange(1.0, K + 1)
+    mask = (sp.topq_mask(_grads(2)[0], 20)
+            if kind in (AggKind.TC_SIA, AggKind.CL_TC_SIA) else None)
+    res = run_chain(cfg, g, e, w, global_mask=mask)
+    lhs = np.asarray(res.aggregate + res.e_new.sum(0))
+    rhs = np.asarray((w[:, None] * g + e).sum(0))
+    np.testing.assert_allclose(lhs, rhs, rtol=2e-4, atol=2e-4)
+
+
+def test_cl_sia_measured_bits_match_closed_form():
+    cfg = AggConfig(kind=AggKind.CL_SIA, q=Q)
+    res = run_chain(cfg, _grads(), jnp.zeros((K, D)), jnp.ones((K,)))
+    assert float(jnp.sum(res.stats.bits)) == pytest.approx(
+        cc.cl_sia_bits(K, D, Q))
+
+
+def test_cl_tc_sia_measured_bits_match_closed_form():
+    qg, ql = 20, 3
+    cfg = AggConfig(kind=AggKind.CL_TC_SIA, q=qg + ql, q_global=qg,
+                    q_local=ql)
+    mask = sp.topq_mask(_grads(5)[0], qg)
+    res = run_chain(cfg, _grads(), jnp.zeros((K, D)), jnp.ones((K,)),
+                    global_mask=mask)
+    assert float(jnp.sum(res.stats.bits)) <= cc.cl_tc_sia_bits(
+        K, D, qg, ql) + 1e-6
+    # exact when all Q_L slots fill (dense gradients → they do)
+    assert float(jnp.sum(res.stats.bits)) == pytest.approx(
+        cc.cl_tc_sia_bits(K, D, qg, ql))
+
+
+def test_sia_bits_within_worst_case_and_above_cl():
+    cfg = AggConfig(kind=AggKind.SIA, q=Q)
+    res = run_chain(cfg, _grads(), jnp.zeros((K, D)), jnp.ones((K,)))
+    bits = float(jnp.sum(res.stats.bits))
+    assert bits <= cc.sia_bits_worst_case(K, D, Q)
+    assert bits >= cc.cl_sia_bits(K, D, Q)
+
+
+def test_prop2_bound_holds_in_expectation():
+    """Prop. 2 upper-bounds Σ E‖Λ_k‖₀ for TC-SIA (average over seeds)."""
+    qg, ql = 20, 3
+    cfg = AggConfig(kind=AggKind.TC_SIA, q=qg + ql, q_global=qg, q_local=ql)
+    totals = []
+    for seed in range(8):
+        mask = sp.topq_mask(_grads(100 + seed)[0], qg)
+        res = run_chain(cfg, _grads(seed), jnp.zeros((K, D)),
+                        jnp.ones((K,)), global_mask=mask)
+        totals.append(float(jnp.sum(res.stats.nnz_local)))
+    bound = cc.expected_lambda_nnz_bound(K, D, qg, ql)
+    assert np.mean(totals) <= bound * 1.02
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 10), st.integers(1, 30), st.integers(0, 10_000))
+def test_cl_sia_hop_budget_property(k, q, seed):
+    d = 150
+    cfg = AggConfig(kind=AggKind.CL_SIA, q=q)
+    g = jax.random.normal(jax.random.PRNGKey(seed), (k, d))
+    res = run_chain(cfg, g, jnp.zeros((k, d)), jnp.ones((k,)))
+    assert int(jnp.max(res.stats.nnz_out)) <= q
+    assert int(sp.nnz(res.aggregate)) <= q
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_dense_ia_equals_weighted_sum(seed):
+    cfg = AggConfig(kind=AggKind.DENSE_IA, q=1)
+    g = jax.random.normal(jax.random.PRNGKey(seed), (K, D))
+    w = jnp.abs(jax.random.normal(jax.random.PRNGKey(seed + 1), (K,))) + 0.1
+    res = run_chain(cfg, g, jnp.zeros((K, D)), w)
+    np.testing.assert_allclose(np.asarray(res.aggregate),
+                               np.asarray((w[:, None] * g).sum(0)),
+                               rtol=2e-4, atol=1e-5)
+
+
+def test_topology_reordering_preserves_dense_aggregate():
+    cfg = AggConfig(kind=AggKind.DENSE_IA, q=1)
+    g = _grads()
+    w = jnp.ones((K,))
+    order = jnp.asarray([3, 1, 6, 0, 2, 5, 4], jnp.int32)
+    r1 = run_chain(cfg, g, jnp.zeros((K, D)), w)
+    r2 = run_chain_with_topology(cfg, g, jnp.zeros((K, D)), w, order)
+    np.testing.assert_allclose(np.asarray(r1.aggregate),
+                               np.asarray(r2.aggregate), rtol=2e-4,
+                               atol=1e-5)
+
+
+def test_healed_chain_drops_only_dead_node():
+    """Relay failure: chain healed to K−1 nodes ≡ chain without that row."""
+    cfg = AggConfig(kind=AggKind.CL_SIA, q=Q)
+    g = _grads()
+    w = jnp.ones((K,))
+    dead = 3
+    keep = jnp.asarray([i for i in range(K) if i != dead])
+    r_healed = run_chain(cfg, g[keep], jnp.zeros((K - 1, D)), w[keep])
+    r_manual = run_chain(cfg, g[keep], jnp.zeros((K - 1, D)),
+                         jnp.ones((K - 1,)))
+    np.testing.assert_allclose(np.asarray(r_healed.aggregate),
+                               np.asarray(r_manual.aggregate))

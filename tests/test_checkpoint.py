@@ -1,0 +1,82 @@
+"""Checkpoint: atomic roundtrip, keep-N GC, EF state preservation, elastic."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint as ckpt
+from repro.runtime.elastic import rebalance_weights, resize_ef
+
+
+def _state(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "params": {"w": jax.random.normal(k, (8, 4)),
+                   "b": jnp.zeros((4,), jnp.bfloat16)},
+        "ef": jax.random.normal(jax.random.fold_in(k, 1), (3, 32)),
+        "step": jnp.int32(7),
+    }
+
+
+def test_roundtrip(tmp_path):
+    s = _state()
+    ckpt.save(str(tmp_path), 7, s)
+    template = jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), s)
+    r = ckpt.restore(str(tmp_path), template)
+    for a, b in zip(jax.tree.leaves(s), jax.tree.leaves(r)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_latest_and_keep_n(tmp_path):
+    for step in (1, 2, 3, 4):
+        ckpt.save(str(tmp_path), step, _state(step), keep_n=2)
+    assert ckpt.latest_step(str(tmp_path)) == 4
+    kept = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert kept == ["step_00000003", "step_00000004"]
+
+
+def test_no_partial_checkpoint_visible(tmp_path):
+    """A leftover .tmp dir is never considered a checkpoint."""
+    os.makedirs(tmp_path / "step_00000009.tmp")
+    assert ckpt.latest_step(str(tmp_path)) is None
+    ckpt.save(str(tmp_path), 1, _state())
+    assert ckpt.latest_step(str(tmp_path)) == 1
+
+
+def test_leaf_count_mismatch_raises(tmp_path):
+    ckpt.save(str(tmp_path), 1, _state())
+    bad_template = {"params": jax.ShapeDtypeStruct((8, 4), jnp.float32)}
+    with pytest.raises(ValueError, match="leaves"):
+        ckpt.restore(str(tmp_path), bad_template)
+
+
+def test_ef_survives_restart(tmp_path):
+    """The EF memory (paper's convergence state) must roundtrip exactly."""
+    s = _state()
+    ckpt.save(str(tmp_path), 3, s)
+    template = jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), s)
+    r = ckpt.restore(str(tmp_path), template)
+    np.testing.assert_array_equal(np.asarray(s["ef"]), np.asarray(r["ef"]))
+
+
+def test_elastic_resize_ef_conserves_mass():
+    ef = jnp.ones((4, 10))
+    shrunk = resize_ef(ef, 2, redistribute=True)
+    assert shrunk.shape == (2, 10)
+    np.testing.assert_allclose(float(shrunk.sum()), float(ef.sum()))
+    grown = resize_ef(ef, 6)
+    assert grown.shape == (6, 10)
+    np.testing.assert_allclose(float(grown.sum()), float(ef.sum()))
+
+
+def test_rebalance_weights():
+    w = rebalance_weights(4)
+    np.testing.assert_allclose(np.asarray(w), 0.25)
+    w2 = rebalance_weights(2, [30, 10])
+    np.testing.assert_allclose(np.asarray(w2), [0.75, 0.25])

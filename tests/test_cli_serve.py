@@ -1,0 +1,20 @@
+"""Serve CLI smoke: batched prefill + decode end to end."""
+
+import os
+import subprocess
+import sys
+
+from conftest import SRC
+
+
+def test_serve_cli():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    p = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve",
+         "--arch", "mixtral-8x7b", "--batch", "2", "--prompt-len", "16",
+         "--gen", "8"],
+        env=env, capture_output=True, text=True, timeout=600)
+    assert p.returncode == 0, p.stderr[-2000:]
+    assert "generated=8 tokens" in p.stdout
+    assert "sample generations" in p.stdout

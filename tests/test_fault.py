@@ -1,0 +1,82 @@
+"""Fault tolerance: stragglers recover through EF; chains heal."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import PAPER
+from repro.core.algorithms import AggConfig, AggKind
+from repro.core.chain import run_chain
+from repro.data.federated import partition_iid
+from repro.data.synthetic import make_synthetic_mnist
+from repro.fed.simulator import Simulator
+from repro.runtime.fault import StragglerModel, banked_mass, deadline_mask, \
+    heal_chain
+
+
+def test_straggler_mass_recovered_next_round():
+    """Round 1: client 2 straggles → its g banked. Round 2: it participates
+    → aggregate over both rounds ≈ aggregate without any straggling."""
+    K, d, q = 5, 120, 120          # q=d → no sparsification loss
+    cfg = AggConfig(kind=AggKind.CL_SIA, q=q)
+    g1 = jax.random.normal(jax.random.PRNGKey(0), (K, d))
+    g2 = jax.random.normal(jax.random.PRNGKey(1), (K, d))
+    w = jnp.ones((K,))
+
+    part = jnp.asarray([1., 1., 0., 1., 1.])
+    r1 = run_chain(cfg, g1, jnp.zeros((K, d)), w, participate=part)
+    r2 = run_chain(cfg, g2, r1.e_new, w)
+    got = np.asarray(r1.aggregate + r2.aggregate)
+
+    f1 = run_chain(cfg, g1, jnp.zeros((K, d)), w)
+    f2 = run_chain(cfg, g2, f1.e_new, w)
+    want = np.asarray(f1.aggregate + f2.aggregate)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_straggler_banked_mass_visible():
+    K, d = 4, 50
+    cfg = AggConfig(kind=AggKind.SIA, q=5)
+    g = jax.random.normal(jax.random.PRNGKey(2), (K, d))
+    part = jnp.asarray([1., 0., 1., 1.])
+    r = run_chain(cfg, g, jnp.zeros((K, d)), jnp.ones((K,)),
+                  participate=part)
+    bm = np.asarray(banked_mass(r.e_new))
+    assert bm[1] > bm[0] and bm[1] > bm[2]
+
+
+def test_deadline_mask():
+    times = jnp.asarray([0.5, 2.0, 0.9])
+    np.testing.assert_allclose(np.asarray(deadline_mask(times, 1.0)),
+                               [1., 0., 1.])
+
+
+def test_straggler_model_reproducible():
+    sm = StragglerModel(p_straggle=0.3)
+    m1 = sm.sample(jax.random.PRNGKey(0), 100)
+    m2 = sm.sample(jax.random.PRNGKey(0), 100)
+    np.testing.assert_array_equal(np.asarray(m1), np.asarray(m2))
+    assert 50 <= int(m1.sum()) <= 90
+
+
+def test_heal_chain():
+    order = np.arange(6, dtype=np.int32)
+    healed = heal_chain(order, dead=3)
+    np.testing.assert_array_equal(healed, [0, 1, 2, 4, 5])
+
+
+def test_sim_with_stragglers_still_converges():
+    train = make_synthetic_mnist(jax.random.PRNGKey(0), 10 * 100)
+    test = make_synthetic_mnist(jax.random.PRNGKey(1), 500)
+    import dataclasses
+    pc = dataclasses.replace(PAPER, num_clients=10)
+    fed = partition_iid(jax.random.PRNGKey(2), train, 10)
+    sim = Simulator(pc, AggConfig(kind=AggKind.CL_SIA, q=pc.q), fed)
+    sm = StragglerModel(p_straggle=0.3)
+
+    def participate(r, state):
+        return sm.sample(jax.random.PRNGKey(1000 + r), 10)
+
+    out = sim.run(80, test_x=test.x, test_y=test.y, eval_every=79,
+                  participate_fn=participate)
+    assert out["accuracy"][-1][1] > 0.9

@@ -1,0 +1,50 @@
+"""FlatLayout single-device property tests (hypothesis, no subprocess)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from jax.sharding import AxisType
+
+from repro.core.flat_layout import FlatLayout
+from repro.configs.base import ModelConfig
+from repro.models import model as model_mod
+from repro.models import partition
+
+
+def _mesh11():
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(1, 3), st.sampled_from([16, 48]), st.sampled_from([2, 6]))
+def test_layout_roundtrip_1dev(layers, d_model, heads):
+    """flatten → unflatten is the identity for arbitrary tiny configs."""
+    cfg = ModelConfig(name="t", family="dense", num_layers=layers,
+                      d_model=d_model, num_heads=heads, num_kv_heads=heads,
+                      d_ff=2 * d_model, vocab_size=64,
+                      head_dim=d_model // heads, param_dtype="float32")
+    mesh = _mesh11()
+    params = model_mod.init_params(cfg, jax.random.PRNGKey(0))
+    layout = FlatLayout(model_mod.param_specs(cfg),
+                        partition.param_pspecs(cfg, mesh), mesh)
+    col = layout.local_flatten(jax.tree.leaves(params), jnp.int32(0))
+    assert col.shape == (layout.n_local,)
+    back = layout.local_unflatten(col, jnp.int32(0))
+    for a, b in zip(jax.tree.leaves(params), back):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), rtol=1e-6)
+
+
+def test_layout_total_size_accounting():
+    cfg = ModelConfig(name="t", family="dense", num_layers=2, d_model=32,
+                      num_heads=4, num_kv_heads=2, d_ff=64, vocab_size=64,
+                      head_dim=8, param_dtype="float32")
+    mesh = _mesh11()
+    params = model_mod.init_params(cfg, jax.random.PRNGKey(0))
+    layout = FlatLayout(model_mod.param_specs(cfg),
+                        partition.param_pspecs(cfg, mesh), mesh)
+    n_params = sum(int(jnp.size(l)) for l in jax.tree.leaves(params))
+    assert n_params <= layout.d_flat <= n_params + layout.m * (
+        len(layout.plans) + layout.k_dp)

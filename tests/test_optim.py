@@ -1,0 +1,69 @@
+"""Optimizers: flat vs tree vs hand-rolled numpy."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import (OptConfig, apply_flat, apply_tree, init_flat,
+                         init_tree, lr_schedule)
+
+
+def _numpy_adamw(p, g, m, v, t, cfg):
+    m = cfg.b1 * m + (1 - cfg.b1) * g
+    v = cfg.b2 * v + (1 - cfg.b2) * g * g
+    mh = m / (1 - cfg.b1 ** t)
+    vh = v / (1 - cfg.b2 ** t)
+    p = p - cfg.lr * (mh / (np.sqrt(vh) + cfg.eps) + cfg.weight_decay * p)
+    return p, m, v
+
+
+@pytest.mark.parametrize("name", ["sgd", "momentum", "adamw"])
+def test_flat_matches_tree(name):
+    cfg = OptConfig(name=name, lr=0.01, weight_decay=0.1)
+    d = 257
+    p = jax.random.normal(jax.random.PRNGKey(0), (d,))
+    tree_p = {"a": p[:100].reshape(10, 10), "b": p[100:]}
+    fs = init_flat(cfg, d)
+    ts = init_tree(cfg, tree_p)
+    for i in range(3):
+        g = jax.random.normal(jax.random.PRNGKey(i + 1), (d,))
+        tree_g = {"a": g[:100].reshape(10, 10), "b": g[100:]}
+        p, fs = apply_flat(cfg, fs, p, g)
+        tree_p, ts = apply_tree(cfg, ts, tree_p, tree_g)
+    flat_from_tree = jnp.concatenate(
+        [tree_p["a"].reshape(-1), tree_p["b"]])
+    np.testing.assert_allclose(np.asarray(p), np.asarray(flat_from_tree),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_adamw_matches_numpy():
+    cfg = OptConfig(name="adamw", lr=0.003, weight_decay=0.02)
+    d = 64
+    rng = np.random.default_rng(0)
+    p = rng.normal(size=d).astype(np.float32)
+    m = np.zeros(d, np.float32)
+    v = np.zeros(d, np.float32)
+    jp = jnp.asarray(p)
+    st = init_flat(cfg, d)
+    for t in range(1, 4):
+        g = rng.normal(size=d).astype(np.float32)
+        p, m, v = _numpy_adamw(p, g, m, v, t, cfg)
+        jp, st = apply_flat(cfg, st, jp, jnp.asarray(g))
+    np.testing.assert_allclose(np.asarray(jp), p, rtol=1e-5, atol=1e-6)
+
+
+def test_grad_clip():
+    cfg = OptConfig(name="sgd", lr=1.0, grad_clip=1.0)
+    p = jnp.zeros((4,))
+    g = jnp.asarray([10.0, 0, 0, 0])
+    p2, _ = apply_flat(cfg, init_flat(cfg, 4), p, g)
+    np.testing.assert_allclose(np.asarray(p2), [-1.0, 0, 0, 0], rtol=1e-6)
+
+
+def test_lr_schedule_shapes():
+    assert float(lr_schedule(jnp.int32(0), warmup=10)) == pytest.approx(0.1)
+    assert float(lr_schedule(jnp.int32(9), warmup=10)) == pytest.approx(1.0)
+    end = float(lr_schedule(jnp.int32(10_000), warmup=10,
+                            decay_steps=10_000, kind="cosine"))
+    assert end == pytest.approx(0.1, abs=1e-3)

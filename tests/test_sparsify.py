@@ -1,0 +1,90 @@
+"""Unit + property tests for Top-Q primitives."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sparsify as sp
+
+
+def test_topq_keeps_largest():
+    x = jnp.asarray([1.0, -5.0, 0.5, 3.0, -2.0])
+    out = sp.topq(x, 2)
+    np.testing.assert_allclose(np.asarray(out), [0, -5, 0, 3, 0])
+
+
+def test_topq_mask_matches_topq():
+    x = jax.random.normal(jax.random.PRNGKey(0), (257,))
+    for q in (1, 17, 256, 257, 300):
+        np.testing.assert_allclose(
+            np.asarray(sp.topq(x, q)),
+            np.asarray(sp.topq_mask(x, q) * x))
+
+
+def test_topq_edge_cases():
+    x = jnp.asarray([1.0, 2.0, 3.0])
+    assert int(sp.nnz(sp.topq(x, 0))) == 0
+    np.testing.assert_allclose(np.asarray(sp.topq(x, 5)), np.asarray(x))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 200), st.integers(0, 2**31 - 1))
+def test_topq_property_count_and_energy(q, seed):
+    """‖S(x,Q)‖₀ = min(Q, d) and S keeps maximal energy (optimality, eq. 3)."""
+    d = 256
+    x = jax.random.normal(jax.random.PRNGKey(seed), (d,))
+    out = sp.topq(x, q)
+    assert int(sp.nnz(out)) == min(q, d)
+    # energy of kept = sum of q largest squares
+    kept = np.sort(np.abs(np.asarray(out)))[::-1][:q]
+    best = np.sort(np.abs(np.asarray(x)))[::-1][:q]
+    np.testing.assert_allclose(np.sort(kept), np.sort(best), rtol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 500), st.integers(0, 2**31 - 1))
+def test_threshold_topq_overselects_boundedly(q, seed):
+    d = 4096
+    x = jax.random.normal(jax.random.PRNGKey(seed), (d,))
+    tau = sp.threshold_for_topq(x, q, branch=64, rounds=3)
+    kept = int(jnp.sum(jnp.abs(x) >= tau))
+    assert kept >= min(q, d)
+    # over-selection bounded by within-bin ties: loose 2% + 2 bound
+    assert kept <= min(q, d) + max(2, int(0.02 * d))
+
+
+def test_threshold_matches_exact_on_distinct_values():
+    x = jnp.asarray(np.random.default_rng(0).permutation(1000).astype(
+        np.float32)) + 1.0
+    tau = sp.threshold_for_topq(x, 100, branch=64, rounds=4)
+    kept = int(jnp.sum(jnp.abs(x) >= tau))
+    assert kept == 100
+
+
+def test_compact_scatter_roundtrip():
+    key = jax.random.PRNGKey(3)
+    d, q = 512, 40
+    x = sp.topq(jax.random.normal(key, (d,)), q)
+    vals, idx, cnt = sp.compact(x, q)
+    assert int(cnt) == q
+    back = sp.scatter(vals, idx, d)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(x))
+
+
+def test_compact_pads_with_sentinel():
+    x = jnp.zeros((16,)).at[3].set(5.0)
+    vals, idx, cnt = sp.compact(x, 4)
+    assert int(cnt) == 1
+    assert int((idx == 16).sum()) == 3          # sentinel = d
+    np.testing.assert_allclose(np.asarray(sp.scatter(vals, idx, 16)),
+                               np.asarray(x))
+
+
+def test_mask_union_and_support():
+    a = jnp.asarray([1.0, 0.0, 1.0, 0.0])
+    b = jnp.asarray([0.0, 1.0, 1.0, 0.0])
+    np.testing.assert_allclose(np.asarray(sp.mask_union(a, b)), [1, 1, 1, 0])
+    np.testing.assert_allclose(
+        np.asarray(sp.support(jnp.asarray([0.0, -2.0, 3.0]))), [0, 1, 1])
