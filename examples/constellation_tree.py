@@ -1,0 +1,63 @@
+"""Constellation-tree demo: Walker-delta LEO shell training over routed
+aggregation trees, with a gateway-adjacent relay failure mid-training.
+
+A 3-plane × 4-satellite Walker-delta constellation (torus ISL mesh, ground
+station uplinked to satellite 1) trains the paper's MNIST logistic model with
+CL-SIA over the widest-path aggregation tree. At round 25 the gateway-adjacent
+satellite dies; routing re-roots its whole subtree through surviving ISLs
+(compare: the chain would lose everything beyond the break until healing).
+It recovers at round 50 and its banked error-feedback mass drains.
+
+    PYTHONPATH=src python examples/constellation_tree.py
+"""
+
+import dataclasses
+
+import jax
+
+from repro.configs import PAPER
+from repro.core.algorithms import AggConfig, AggKind
+from repro.data.federated import partition_iid
+from repro.data.synthetic import make_synthetic_mnist
+from repro.fed.simulator import Simulator
+from repro.fed.topology import FailureSchedule, TreeTopology
+from repro.runtime.fault import banked_mass
+from repro.topo.graph import walker_delta
+
+ROUNDS = 75
+# 12 satellites + ground-station PS with two gateway uplinks (sats 1 and 7)
+# so the constellation survives losing a gateway-adjacent relay.
+g = walker_delta(3, 4, gateways=(1, 7))
+K = g.num_clients
+pc = dataclasses.replace(PAPER, num_clients=K)
+
+train = make_synthetic_mnist(jax.random.PRNGKey(0), K * 150)
+test = make_synthetic_mnist(jax.random.PRNGKey(1), 1000)
+fed = partition_iid(jax.random.PRNGKey(2), train, K)
+
+topo = TreeTopology(g, routing="widest")
+tree = topo.tree()
+print("aggregation tree (client → parent, PS = -1):", tree.parent)
+print(f"depth {tree.max_depth()} vs chain depth {K} — "
+      f"{K / tree.max_depth():.1f}× shorter critical path\n")
+
+sim = Simulator(pc, AggConfig(kind=AggKind.CL_SIA, q=pc.q), fed,
+                local_lr=pc.lr, tree_topology=topo)
+failures = FailureSchedule(K, {25: ([0], []), 50: ([], [0])})
+
+out = sim.run(ROUNDS, test_x=test.x, test_y=test.y, eval_every=10,
+              failure_schedule=failures)
+
+print("round  acc    (gateway-adjacent sat 0 dead rounds 25-49)")
+for r, acc in out["accuracy"]:
+    marker = "  ← sat 0 down, subtree re-rooted" if 25 <= r < 50 else ""
+    print(f"{r:5d}  {acc:.3f}{marker}")
+
+healed = topo.tree(dead=(0,))
+print(f"\nhealed tree parents: {healed.parent}")
+print(f"bits/round stayed {out['bits'][-1] / 1e3:.1f} kbit "
+      f"(CL-SIA constant-length property, topology-invariant)")
+bm = banked_mass(out["state"].ef)
+print(f"banked |e| per sat: {[f'{float(x):.1f}' for x in bm]}")
+print("note: the dead satellite's subtree kept aggregating through the "
+      "re-rooted tree — only the dead node itself banked into EF.")

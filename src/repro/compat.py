@@ -1,0 +1,51 @@
+"""Compatibility shims for jax API drift (0.4.x ↔ 0.6+).
+
+The repo targets the modern surface (``jax.shard_map``,
+``jax.sharding.AxisType``, ``check_vma``); older runtimes (0.4.x) expose
+``jax.experimental.shard_map`` with ``check_rep`` and meshes without axis
+types. These helpers pick whichever exists so tests and examples run on
+both.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_mesh(shape, axes):
+    """``jax.make_mesh`` with Auto axis types where supported."""
+    shape, axes = tuple(shape), tuple(axes)
+    try:
+        from jax.sharding import AxisType
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(axes))
+    except (ImportError, TypeError):
+        return jax.make_mesh(shape, axes)
+
+
+def axis_size(axis) -> int:
+    """Static mesh-axis size inside shard_map on any jax version.
+
+    ``lax.psum(1, axis)`` of the literal 1 constant-folds to the axis size
+    as a Python int on versions predating ``jax.lax.axis_size``.
+    """
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis)
+    return jax.lax.psum(1, axis)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None):
+    """Fully-manual shard_map (replication checking off) on any jax."""
+    if hasattr(jax, "shard_map"):
+        kwargs = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_vma=False)
+        if axis_names is not None:
+            kwargs["axis_names"] = axis_names
+        try:
+            return jax.shard_map(f, **kwargs)
+        except TypeError:
+            kwargs.pop("axis_names", None)
+            return jax.shard_map(f, **kwargs)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)

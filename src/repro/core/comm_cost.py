@@ -91,6 +91,81 @@ def sia_bits_worst_case(K: int, d: int, q: int, omega: int = 32) -> float:
 
 
 # ---------------------------------------------------------------------------
+# Tree generalizations (repro.topo) — the chain forms are the special case
+# of a path graph, where depths = (1..K) and subtree sizes = (1..K).
+# ---------------------------------------------------------------------------
+
+def routing_dense_bits_tree(depths, d: int, omega: int = 32) -> float:
+    """Conventional routing on a tree: client k's dense packet traverses
+    ``depths[k]`` links to the PS → Σ_k depth_k · d·ω.
+
+    On a path graph depths = (1..K) and this reduces to (K²+K)/2·d·ω.
+    """
+    return float(sum(depths)) * d * omega
+
+
+def routing_sparse_bits_tree(depths, d: int, q: int, omega: int = 32) -> float:
+    """Conventional routing of per-client Top-Q packets on a tree."""
+    return float(sum(depths)) * q * (omega + idx_bits(d))
+
+
+def dense_ia_bits_tree(K: int, d: int, omega: int = 32) -> float:
+    """IA without sparsification on *any* tree: every client transmits its
+    partial aggregate exactly once over its uplink → K·d·ω, topology
+    invariant — the core IA advantage carries over from chains to trees.
+    """
+    return K * d * omega
+
+
+def cl_sia_bits_tree(K: int, d: int, q: int, omega: int = 32) -> float:
+    """Alg 3 on a tree: every uplink carries exactly Q (value+index) —
+    topology invariant like the chain form."""
+    return K * q * (omega + idx_bits(d))
+
+
+def cl_tc_sia_bits_tree(K: int, d: int, q_global: int, q_local: int,
+                        omega: int = 32) -> float:
+    """Alg 5 on a tree: K·ω·Q_G + K·Q_L·(ω+⌈log₂d⌉), topology invariant."""
+    return K * omega * q_global + K * q_local * (omega + idx_bits(d))
+
+
+def expected_lambda_nnz_bound_tree(subtree_sizes, d: int, q_global: int,
+                                   q_local: int) -> float:
+    """Tree generalization of Prop. 2: Σ_k E‖Λ_k‖₀ ≤ Σ_k d′·(1 − p^{s_k}).
+
+    ``s_k`` is the subtree size of client k (number of Top-Q_L supports
+    unioned into γ_k), d′ = d − Q_G, p = 1 − Q_L/d′ — each of the s_k
+    independent supports misses a given off-mask coordinate w.p. p, so
+    E‖γ_k‖₀ ≤ d′(1 − p^{s_k}). With path subtree sizes (1..K) this equals
+    the chain closed form :func:`expected_lambda_nnz_bound` exactly.
+    """
+    if q_local <= 0:
+        return 0.0
+    dp = d - q_global
+    if dp <= 0:
+        return 0.0
+    p = 1.0 - q_local / dp
+    return float(sum(dp * (1.0 - p ** int(s)) for s in subtree_sizes))
+
+
+def tc_sia_bits_bound_tree(subtree_sizes, d: int, q_global: int,
+                           q_local: int, omega: int = 32) -> float:
+    """Eq. (7) with the tree Prop.-2 bound plugged in (Alg 4 on a tree)."""
+    K = len(subtree_sizes)
+    return (K * omega * q_global
+            + (omega + idx_bits(d)) * expected_lambda_nnz_bound_tree(
+                subtree_sizes, d, q_global, q_local))
+
+
+def sia_bits_worst_case_tree(subtree_sizes, d: int, q: int,
+                             omega: int = 32) -> float:
+    """Deterministic worst case for Alg 1/2 on a tree:
+    ‖γ_k‖₀ ≤ min(d, s_k·Q)."""
+    total_nnz = sum(min(d, int(s) * q) for s in subtree_sizes)
+    return total_nnz * (omega + idx_bits(d))
+
+
+# ---------------------------------------------------------------------------
 # Normalization used in Fig. 2b
 # ---------------------------------------------------------------------------
 

@@ -29,6 +29,7 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.core.algorithms import AggConfig
 from repro.core.ring import RingStats, rotated_ring_local
 
@@ -70,7 +71,7 @@ def hierarchical_ring_local(
     # same node step; weight 1 (client weights already applied in stage 1)
     mask2 = None
     if global_mask_local is not None:
-        k_d = jax.lax.axis_size(data_axis)
+        k_d = compat.axis_size(data_axis)
         n = global_mask_local.shape[0]
         seg = n // k_d
         r = jax.lax.axis_index(data_axis)

@@ -26,6 +26,7 @@ from typing import Any, NamedTuple, Optional, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.core import sparsify as sp
 from repro.core.algorithms import AggConfig, AggKind, NodeCtx, node_step
 
@@ -65,7 +66,7 @@ def rotated_ring_local(
     (train/step.py pads the flat layout). After return, rank r holds the
     fully-aggregated segment r.
     """
-    K = jax.lax.axis_size(axis)
+    K = compat.axis_size(axis)
     r = jax.lax.axis_index(axis)
     n = flat_local.shape[0]
     assert n % K == 0, (n, K)

@@ -27,6 +27,8 @@ from repro.core import tcs as tcs_mod
 from repro.core.algorithms import AggConfig, AggKind
 from repro.core.chain import run_chain, run_chain_with_topology
 from repro.data.federated import FederatedData, client_minibatch
+from repro.fed.topology import FailureSchedule, TreeTopology
+from repro.topo.tree import AggTree, run_tree
 
 Array = jax.Array
 
@@ -82,10 +84,20 @@ class RoundLog(NamedTuple):
 
 @dataclasses.dataclass
 class Simulator:
+    """Multi-hop FL simulator over a chain (default) or an aggregation tree.
+
+    With ``tree_topology`` set, rounds aggregate over the routed
+    constellation tree via :func:`repro.topo.tree.run_tree`; relay deaths
+    from a ``failure_schedule`` passed to :meth:`run` re-route the tree
+    (re-rooting the severed subtree through surviving ISLs — each distinct
+    dead-set is one jit specialization, cached across rounds).
+    """
+
     pc: PaperConfig
     agg: AggConfig
     fed: FederatedData
     local_lr: float = 0.1
+    tree_topology: Optional[TreeTopology] = None
 
     def __post_init__(self):
         self.k = self.fed.num_clients
@@ -101,7 +113,8 @@ class Simulator:
                         tcs_prev=flat, rng=jax.random.PRNGKey(seed))
 
     # -- one jitted round ---------------------------------------------------
-    def round_fn(self) -> Callable:
+    def round_fn(self, tree: Optional[AggTree] = None) -> Callable:
+        """One-round closure; ``tree`` switches chain → tree aggregation."""
         pc, agg_cfg, k = self.pc, self.agg, self.k
         fed, weights, lr = self.fed, self.weights, self.local_lr
         needs_tcs = agg_cfg.kind in (AggKind.TC_SIA, AggKind.CL_TC_SIA)
@@ -127,7 +140,11 @@ class Simulator:
                     agg_cfg.q_global)
                 tcs_prev = state.flat_w
 
-            if order is None:
+            if tree is not None:
+                res = run_tree(agg_cfg, tree, g, state.ef, weights,
+                               global_mask=global_mask,
+                               participate=participate)
+            elif order is None:
                 res = run_chain(agg_cfg, g, state.ef, weights,
                                 global_mask=global_mask,
                                 participate=participate)
@@ -157,15 +174,39 @@ class Simulator:
     # -- host loop ------------------------------------------------------------
     def run(self, rounds: int, *, seed: int = 0, eval_every: int = 10,
             test_x: Optional[Array] = None, test_y: Optional[Array] = None,
-            participate_fn: Optional[Callable] = None):
-        """→ dict of curves (accuracy, loss, bits/round)."""
+            participate_fn: Optional[Callable] = None,
+            failure_schedule: Optional[FailureSchedule] = None):
+        """→ dict of curves (accuracy, loss, bits/round).
+
+        ``failure_schedule`` (tree mode only): relay deaths re-route the
+        aggregation tree around the dead node and zero its participation;
+        its banked EF mass transmits after recovery, as on the chain.
+        """
         state = self.init(seed)
-        step = jax.jit(self.round_fn())
+        topo = self.tree_topology
+        if failure_schedule is not None and topo is None:
+            raise ValueError("failure_schedule needs tree_topology (chain "
+                             "failures go through participate_fn + order)")
+        steps: dict = {}
+
+        def step_for(dead: tuple):
+            if dead not in steps:
+                tree = None if topo is None else topo.tree(dead=dead)
+                alive = None if topo is None else topo.alive_mask(tree, dead)
+                steps[dead] = (jax.jit(self.round_fn(tree)), alive)
+            return steps[dead]
+
         accs, losses, bits, nnzs = [], [], [], []
         for r in range(rounds):
+            dead = (tuple(failure_schedule.dead_at(r))
+                    if failure_schedule is not None else ())
+            step, alive = step_for(dead)
             part = None
             if participate_fn is not None:
                 part = participate_fn(r, state)
+            if alive is not None and (part is not None or alive.min() < 1):
+                part = jnp.asarray(alive) if part is None \
+                    else part * jnp.asarray(alive)
             state, log = step(state, part)
             losses.append(float(log.loss))
             bits.append(float(log.bits))

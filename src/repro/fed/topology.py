@@ -1,4 +1,10 @@
-"""Chain topologies, failure schedules, latency models for the simulator."""
+"""Topologies (chains + constellation trees), failure schedules, latency
+models for the simulator.
+
+``ChainTopology`` is the paper's linear chain. ``TreeTopology`` wraps a
+:class:`repro.topo.graph.ConstellationGraph` plus a routing policy and turns
+it into aggregation trees, re-routing around dead relays (tree re-rooting:
+a failed relay's subtree is re-attached via surviving ISLs)."""
 
 from __future__ import annotations
 
@@ -6,6 +12,10 @@ import dataclasses
 from typing import Optional
 
 import numpy as np
+
+from repro.topo.graph import ConstellationGraph
+from repro.topo.routing import shortest_path_tree, widest_path_tree
+from repro.topo.tree import AggTree
 
 
 @dataclasses.dataclass
@@ -22,6 +32,47 @@ class ChainTopology:
         """Chain with dead relays bypassed (neighbors splice together)."""
         return np.asarray([i for i in range(self.num_clients)
                            if i not in set(dead)], dtype=np.int32)
+
+
+@dataclasses.dataclass
+class TreeTopology:
+    """Constellation graph + routing policy → aggregation trees.
+
+    ``routing``: "latency" / "hops" (shortest-path Dijkstra) or "widest"
+    (max-bottleneck-bandwidth). ``dead`` entries are *client* indices
+    (simulator row ids), mapped to graph nodes internally.
+    """
+
+    graph: ConstellationGraph
+    routing: str = "latency"
+
+    @property
+    def num_clients(self) -> int:
+        return self.graph.num_clients
+
+    def tree(self, dead: tuple = ()) -> AggTree:
+        """Aggregation tree over the surviving constellation.
+
+        A dead relay is excluded from the graph before routing, so its
+        subtree re-roots through surviving ISLs; the dead client itself is
+        parked at the PS as an unreachable stub (zero bandwidth) — callers
+        must zero its ``participate`` (see :func:`alive_mask`).
+        """
+        nodes = self.graph.client_nodes()
+        exclude = [int(nodes[c]) for c in dead]
+        if self.routing == "widest":
+            return widest_path_tree(self.graph, exclude=exclude)
+        return shortest_path_tree(self.graph, metric=self.routing,
+                                  exclude=exclude)
+
+    def alive_mask(self, tree: AggTree, dead: tuple = ()) -> np.ndarray:
+        """[K] 0/1 — zero for dead clients and stranded (unreachable) ones."""
+        mask = np.ones((self.num_clients,), np.float32)
+        if tree.reachable is not None:
+            mask *= np.asarray(tree.reachable, np.float32)
+        for c in dead:
+            mask[c] = 0.0
+        return mask
 
 
 @dataclasses.dataclass

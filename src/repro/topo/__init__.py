@@ -1,0 +1,35 @@
+"""Constellation-graph topology engine (graph → route → tree → aggregate).
+
+The paper's motivating scenario is a satellite constellation with
+inter-satellite links (ISLs). This subsystem generalizes the linear chain of
+:mod:`repro.core.chain` to arbitrary connected graphs:
+
+1. :mod:`repro.topo.graph` — constellation graph builders (Walker-delta /
+   Walker-star planes, grid ISL meshes, random geometric graphs) with
+   per-link bandwidth/latency attributes;
+2. :mod:`repro.topo.routing` — shortest-path and bandwidth-aware
+   spanning-tree extraction turning any graph + PS node into an aggregation
+   tree;
+3. :mod:`repro.topo.tree` — ``run_tree``, the level-scheduled generalization
+   of ``run_chain`` to arbitrary trees (all five Algorithm 1–5 node steps,
+   error feedback, and §V bit accounting preserved; a path graph is
+   bit-exact to the chain).
+
+Closed-form tree communication costs live in :mod:`repro.core.comm_cost`
+(``*_tree`` variants); federated-simulator wiring (tree scenarios, relay
+failure → re-rooting) in :mod:`repro.fed.topology` / :mod:`repro.fed.simulator`.
+"""
+
+from repro.topo.graph import (ConstellationGraph, grid_graph, path_graph,
+                              random_geometric, star_graph, walker_delta,
+                              walker_star)
+from repro.topo.routing import (extract_tree, shortest_path_tree,
+                                widest_path_tree)
+from repro.topo.tree import AggTree, TreeResult, TreeSchedule, run_tree
+
+__all__ = [
+    "ConstellationGraph", "path_graph", "star_graph", "grid_graph",
+    "random_geometric", "walker_delta", "walker_star",
+    "shortest_path_tree", "widest_path_tree", "extract_tree",
+    "AggTree", "TreeSchedule", "TreeResult", "run_tree",
+]

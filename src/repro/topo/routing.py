@@ -1,0 +1,129 @@
+"""Spanning-tree extraction: graph + PS → aggregation tree.
+
+Incremental aggregation needs each client to forward exactly one partial
+aggregate toward the PS, i.e. a spanning tree of the (surviving) constellation
+graph rooted at the PS. Two extraction policies:
+
+* :func:`shortest_path_tree` — Dijkstra from the PS under a ``latency`` or
+  ``hops`` metric. Minimizes per-round aggregation latency (tree depth).
+* :func:`widest_path_tree` — maximize the *bottleneck bandwidth* of every
+  client's path to the PS (max-min Dijkstra). With CL-SIA's constant
+  per-hop payload, round time is dominated by the narrowest link on the
+  deepest path, which this policy widens.
+
+Both return a parent map over *graph node ids*; :func:`extract_tree`
+relabels into client index space (:class:`repro.topo.tree.AggTree`),
+attaching per-client uplink bandwidth/latency for the cost model. Dead
+relays (``exclude``) are routed around; if removal disconnects the graph,
+the stranded clients are parked at depth 1 with zero bandwidth so the
+simulator can mark them non-participating while keeping array shapes static.
+"""
+
+from __future__ import annotations
+
+import heapq
+import math
+from typing import Iterable, Optional
+
+import numpy as np
+
+from repro.topo.graph import ConstellationGraph
+from repro.topo.tree import PS, AggTree
+
+
+def _dijkstra(graph: ConstellationGraph, cost_of_edge, combine,
+              exclude: Iterable[int],
+              start_cost: float = 0.0) -> tuple[dict, dict]:
+    """Generic best-path tree from the PS.
+
+    ``cost_of_edge(idx) -> float`` and ``combine(path_cost, edge_cost)``
+    define the metric; smaller is better. ``start_cost`` is the PS's own
+    path cost — the identity of ``combine`` (0 for sums, −inf for max-min).
+    Returns ({node: parent_node}, {node: edge_idx to parent}) for every
+    reachable non-excluded node.
+    """
+    dead = set(exclude)
+    if graph.ps in dead:
+        raise ValueError("cannot exclude the PS node")
+    adj = graph.adjacency(exclude=dead)
+    dist = {graph.ps: start_cost}
+    parent: dict = {}
+    via_edge: dict = {}
+    heap = [(start_cost, graph.ps)]
+    while heap:
+        du, u = heapq.heappop(heap)
+        if du > dist.get(u, math.inf):
+            continue
+        for v, idx in adj[u]:
+            dv = combine(du, cost_of_edge(idx))
+            if dv < dist.get(v, math.inf):
+                dist[v] = dv
+                parent[v] = u
+                via_edge[v] = idx
+                heapq.heappush(heap, (dv, v))
+    return parent, via_edge
+
+
+def shortest_path_tree(graph: ConstellationGraph, *, metric: str = "latency",
+                       exclude: Iterable[int] = ()) -> AggTree:
+    """Dijkstra tree from the PS. ``metric``: "latency" (Σ link latency)
+    or "hops" (unweighted BFS)."""
+    if metric == "latency":
+        cost = lambda idx: float(graph.latency_s[idx])
+    elif metric == "hops":
+        cost = lambda idx: 1.0
+    else:
+        raise ValueError(f"unknown metric {metric!r}")
+    parent, via = _dijkstra(graph, cost, lambda a, b: a + b, exclude)
+    return extract_tree(graph, parent, via)
+
+
+def widest_path_tree(graph: ConstellationGraph,
+                     exclude: Iterable[int] = ()) -> AggTree:
+    """Max-bottleneck-bandwidth tree (widest-path Dijkstra).
+
+    Path cost = −min(link bandwidth along path); ties broken by discovery
+    order. Every client gets the maximum achievable bottleneck bandwidth to
+    the PS among all its paths.
+    """
+    parent, via = _dijkstra(
+        graph,
+        lambda idx: -float(graph.bandwidth_bps[idx]),
+        lambda path_cost, edge_cost: max(path_cost, edge_cost),
+        exclude, start_cost=-math.inf)
+    return extract_tree(graph, parent, via)
+
+
+def extract_tree(graph: ConstellationGraph, parent_of_node: dict,
+                 via_edge: Optional[dict] = None) -> AggTree:
+    """Relabel a {node: parent_node} map into client index space.
+
+    Clients are the non-PS nodes of the *full* graph in ascending node-id
+    order (stable across failures, matching the simulator's [K, d] rows).
+    Unreachable clients (dead or disconnected) become depth-1 stubs with
+    parent = PS and zero uplink bandwidth; callers must zero their
+    ``participate`` mask.
+    """
+    nodes = graph.client_nodes()
+    index_of = {int(v): i for i, v in enumerate(nodes)}
+    k = len(nodes)
+    parent = np.full((k,), PS, np.int64)
+    bw = np.zeros((k,), np.float64)
+    lat = np.zeros((k,), np.float64)
+    reachable = np.zeros((k,), bool)
+    for i, v in enumerate(nodes):
+        v = int(v)
+        if v in parent_of_node:
+            p = int(parent_of_node[v])
+            parent[i] = PS if p == graph.ps else index_of[p]
+            reachable[i] = True
+            if via_edge is not None and v in via_edge:
+                idx = via_edge[v]
+                bw[i] = float(graph.bandwidth_bps[idx])
+                lat[i] = float(graph.latency_s[idx])
+        else:
+            parent[i] = PS       # stranded stub; participate must be 0
+    return AggTree(parent=tuple(int(p) for p in parent),
+                   uplink_bw_bps=tuple(float(b) for b in bw),
+                   uplink_latency_s=tuple(float(l) for l in lat),
+                   reachable=tuple(bool(r) for r in reachable))

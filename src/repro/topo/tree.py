@@ -1,0 +1,265 @@
+"""Tree-structured sparse incremental aggregation (``run_chain`` → trees).
+
+An :class:`AggTree` is an aggregation tree over clients ``0..K-1`` rooted at
+the parameter server (parent sentinel :data:`PS`). Aggregation semantics are
+the natural generalization of the paper's chain recursion: node k receives
+the *sum* of its children's partial aggregates γ_c as its incoming γ, applies
+the configured Algorithm 1–5 node step (EF included), and forwards γ_k to
+its parent; the PS receives the sum over its children.
+
+On a path graph this is exactly the chain: one child per node, incoming sum
+degenerates to pass-through, and :func:`run_tree` is **bit-exact** against
+:func:`repro.core.chain.run_chain` for all five algorithms (tested).
+
+Execution: nodes are grouped by depth into levels; a ``lax.scan`` walks
+levels deepest-first while a ``vmap`` over the level width runs every node of
+the level concurrently — the tree-parallel analogue of the chain's
+``reverse=True`` scan (wall-clock O(depth) node steps instead of O(K)).
+Schedules are host-side static per tree, so each distinct tree is one jit
+specialization — rebuilding after a relay failure is a recompile, matching
+how topology changes work elsewhere in the repo (healed chain orders).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.algorithms import AggConfig, HopStats, NodeCtx, node_step
+
+Array = jax.Array
+
+#: ``parent[i] == PS`` marks a client whose parent is the parameter server.
+PS = -1
+
+
+@dataclasses.dataclass(frozen=True)
+class AggTree:
+    """Aggregation tree over clients 0..K−1 (hashable → jit-cache friendly).
+
+    ``parent[i]`` is the client index of i's parent, or :data:`PS`.
+    ``uplink_bw_bps`` / ``uplink_latency_s`` describe client i's link to its
+    parent (0 when unknown); ``reachable[i]`` is False for stranded stubs
+    parked at the PS after a partition (their ``participate`` must be 0).
+    """
+
+    parent: tuple
+    uplink_bw_bps: Optional[tuple] = None
+    uplink_latency_s: Optional[tuple] = None
+    reachable: Optional[tuple] = None
+
+    def __post_init__(self):
+        # compute depths eagerly: validates acyclicity/range at build time
+        # and avoids caching (trees are built per round under failures)
+        k = len(self.parent)
+        depth = [0] * k
+        for i, p in enumerate(self.parent):
+            d, node, hops = 1, i, 0
+            while self.parent[node] != PS:
+                node = self.parent[node]
+                if not 0 <= node < k:
+                    raise ValueError(f"parent index {node} out of range")
+                d += 1
+                hops += 1
+                if hops > k:
+                    raise ValueError("cycle in aggregation tree")
+            depth[i] = d
+        object.__setattr__(self, "_depth", tuple(depth))
+
+    @property
+    def num_clients(self) -> int:
+        return len(self.parent)
+
+    def depths(self) -> np.ndarray:
+        """depth[i] = #links from client i to the PS (≥ 1)."""
+        return np.asarray(self._depth, np.int64)
+
+    def children(self) -> list:
+        """children[i] = client indices whose parent is i."""
+        ch: list = [[] for _ in range(self.num_clients)]
+        for i, p in enumerate(self.parent):
+            if p != PS:
+                ch[p].append(i)
+        return ch
+
+    def ps_children(self) -> list:
+        return [i for i, p in enumerate(self.parent) if p == PS]
+
+    def subtree_sizes(self) -> np.ndarray:
+        """size[i] = #clients in the subtree rooted at i (incl. i itself).
+
+        On a path graph this is (K, K−1, …, 1) from the PS outward — the
+        per-hop aggregate counts of the chain cost model.
+        """
+        k = self.num_clients
+        size = np.ones((k,), np.int64)
+        order = np.argsort(-self.depths())        # deepest first
+        for i in order:
+            p = self.parent[i]
+            if p != PS:
+                size[p] += size[i]
+        return size
+
+    def max_depth(self) -> int:
+        return int(self.depths().max()) if self.num_clients else 0
+
+
+def path_tree(num_clients: int) -> AggTree:
+    """The paper chain as a tree: client 0 at the PS, i's parent is i−1."""
+    return AggTree(parent=tuple([PS] + list(range(num_clients - 1))))
+
+
+def star_tree(num_clients: int) -> AggTree:
+    """Every client a direct child of the PS (depth-1 FedAvg topology)."""
+    return AggTree(parent=(PS,) * num_clients)
+
+
+# ---------------------------------------------------------------------------
+# Level schedule
+# ---------------------------------------------------------------------------
+
+class TreeSchedule(NamedTuple):
+    """Static level schedule: L levels × W slots, deepest level first.
+
+    ``node_id[l, w]`` is the client run in slot w of level l (padding slots
+    hold K, a zero dummy row); ``slot_mask`` is 1.0 for real slots;
+    ``parent_row[l, w]`` is the inbox row receiving that slot's γ (client
+    index, K for the PS, K+1 trash row for padding). ``flat_pos[k]`` is
+    client k's flattened (level, slot) position, for mapping scan outputs
+    back to client index order.
+    """
+
+    node_id: np.ndarray       # [L, W] int32
+    slot_mask: np.ndarray     # [L, W] float32
+    parent_row: np.ndarray    # [L, W] int32
+    flat_pos: np.ndarray      # [K] int64
+
+
+def build_schedule(tree: AggTree) -> TreeSchedule:
+    k = tree.num_clients
+    depth = tree.depths()
+    lmax = tree.max_depth()
+    levels = [np.where(depth == l)[0] for l in range(lmax, 0, -1)]
+    w = max((len(lv) for lv in levels), default=1)
+
+    node_id = np.full((lmax, w), k, np.int32)             # pad → dummy row K
+    slot_mask = np.zeros((lmax, w), np.float32)
+    parent_row = np.full((lmax, w), k + 1, np.int32)      # pad → trash row
+    flat_pos = np.zeros((k,), np.int64)
+    for li, members in enumerate(levels):
+        for wi, node in enumerate(members):
+            node_id[li, wi] = node
+            slot_mask[li, wi] = 1.0
+            p = tree.parent[node]
+            parent_row[li, wi] = k if p == PS else p
+            flat_pos[node] = li * w + wi
+    return TreeSchedule(node_id=node_id, slot_mask=slot_mask,
+                        parent_row=parent_row, flat_pos=flat_pos)
+
+
+# ---------------------------------------------------------------------------
+# run_tree
+# ---------------------------------------------------------------------------
+
+class TreeResult(NamedTuple):
+    aggregate: Array      # what the PS receives (Σ over its children), [d]
+    e_new: Array          # updated EF memory, [K, d] (client index order)
+    stats: HopStats       # per-hop stats, leaves [K] (client index order)
+
+
+def run_tree(
+    cfg: AggConfig,
+    tree: AggTree,
+    grads: Array,                  # [K, d] per-client effective gradients g_k
+    e: Array,                      # [K, d] EF memory
+    weights: Array,                # [K]    D_k
+    *,
+    global_mask: Optional[Array] = None,   # [d] TCS mask m^t (TC algorithms)
+    participate: Optional[Array] = None,   # [K] 0/1 straggler mask
+) -> TreeResult:
+    """One aggregation round over an arbitrary tree (chain generalization).
+
+    Same contract as :func:`repro.core.chain.run_chain` plus the ``tree``
+    argument; ``run_tree(cfg, path_tree(K), ...)`` is bit-exact to
+    ``run_chain(cfg, ...)``.
+    """
+    k, d = grads.shape
+    if tree.num_clients != k:
+        raise ValueError(f"tree has {tree.num_clients} clients, grads {k}")
+    if global_mask is None:
+        global_mask = jnp.zeros((d,), grads.dtype)
+    if participate is None:
+        participate = jnp.ones((k,), grads.dtype)
+    sched = build_schedule(tree)
+    step = node_step(cfg)
+
+    # one zero dummy row (index K) backs the padding slots
+    zrow = jnp.zeros((1, d), grads.dtype)
+    g_ext = jnp.concatenate([grads, zrow])
+    e_ext = jnp.concatenate([e, zrow])
+    w_ext = jnp.concatenate([weights, jnp.zeros((1,), weights.dtype)])
+    p_ext = jnp.concatenate(
+        [participate, jnp.zeros((1,), participate.dtype)])
+
+    def one(g_row, gamma_in, e_row, w_row, p_row):
+        ctx = NodeCtx(global_mask=global_mask, participate=p_row)
+        return step(cfg, g_row, gamma_in, e_row, w_row, ctx)
+
+    vstep = jax.vmap(one)
+
+    def body(inbox, xs):
+        ids, mask, par = xs
+        gamma_out, e_new, stats = vstep(
+            g_ext[ids], inbox[ids], e_ext[ids], w_ext[ids], p_ext[ids])
+        # children's partial aggregates merge at each parent; padding slots
+        # are masked to 0 and target the trash row, so they are no-ops
+        inbox = inbox.at[par].add(gamma_out * mask[:, None])
+        return inbox, (e_new, stats)
+
+    # inbox rows: 0..K−1 per-client incoming sums, K = PS, K+1 = trash
+    inbox0 = jnp.zeros((k + 2, d), grads.dtype)
+    inbox, (e_lvl, st_lvl) = jax.lax.scan(
+        body, inbox0,
+        (jnp.asarray(sched.node_id), jnp.asarray(sched.slot_mask),
+         jnp.asarray(sched.parent_row)))
+
+    # scan outputs are [L, W, ...] in schedule order → client index order
+    pos = jnp.asarray(sched.flat_pos)
+    e_new = e_lvl.reshape(-1, d)[pos]
+    stats = jax.tree.map(
+        lambda s: s.reshape((-1,) + s.shape[2:])[pos], st_lvl)
+    return TreeResult(aggregate=inbox[k], e_new=e_new, stats=stats)
+
+
+# ---------------------------------------------------------------------------
+# Latency model (per-link attributes → round time)
+# ---------------------------------------------------------------------------
+
+def round_latency_s(tree: AggTree, bits_per_hop: Sequence[float]) -> float:
+    """Critical-path aggregation latency of one round.
+
+    Node i becomes ready at ``max(children ready) + serialize + propagate``
+    over its uplink; the round ends when the last PS child arrives. Uses the
+    tree's per-link attributes (zero-bandwidth stubs are skipped).
+    """
+    if tree.uplink_bw_bps is None or tree.uplink_latency_s is None:
+        raise ValueError("tree has no link attributes (built by hand?)")
+    ready = [0.0] * tree.num_clients
+    order = np.argsort(-tree.depths())
+    for i in order:
+        i = int(i)
+        bw = tree.uplink_bw_bps[i]
+        if bw <= 0:
+            continue
+        tx = float(bits_per_hop[i]) / bw + tree.uplink_latency_s[i]
+        ready[i] += tx
+        p = tree.parent[i]
+        if p != PS:
+            ready[p] = max(ready[p], ready[i])
+    ps_kids = [i for i in tree.ps_children()
+               if (tree.uplink_bw_bps[i] or 0) > 0]
+    return max((ready[i] for i in ps_kids), default=0.0)

@@ -3,9 +3,12 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
-from jax.sharding import AxisType
+import pytest
 
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro import compat
 from repro.core.flat_layout import FlatLayout
 from repro.configs.base import ModelConfig
 from repro.models import model as model_mod
@@ -13,8 +16,7 @@ from repro.models import partition
 
 
 def _mesh11():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    return compat.make_mesh((1, 1), ("data", "model"))
 
 
 @settings(max_examples=8, deadline=None)

@@ -2,13 +2,14 @@
 
 HIER = r"""
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import PartitionSpec as P, AxisType
+from jax.sharding import PartitionSpec as P
+from repro import compat
 from repro.core.algorithms import AggConfig, AggKind
 from repro.core.hierarchical import hierarchical_ring_local, HierStats
 from repro.core.ring import RingStats
 
 KP, KD, n = 2, 4, 4 * 2 * 16      # per-rank slice length 128
-mesh = jax.make_mesh((KP, KD), ("pod", "data"), axis_types=(AxisType.Auto,)*2)
+mesh = compat.make_mesh((KP, KD), ("pod", "data"))
 
 for kind in (AggKind.CL_SIA, AggKind.DENSE_IA):
     cfg = AggConfig(kind=kind, q=4)
@@ -27,12 +28,12 @@ for kind in (AggKind.CL_SIA, AggKind.DENSE_IA):
     stats_specs = HierStats(
         intra=jax.tree.map(lambda _: P(), RingStats(0., 0., 0.)),
         inter=jax.tree.map(lambda _: P(), RingStats(0., 0., 0.)))
-    seg, ef_new, pef_new, st = jax.jit(jax.shard_map(
+    seg, ef_new, pef_new, st = jax.jit(compat.shard_map(
         fn, mesh=mesh,
         in_specs=(P(("pod", "data")), P(("pod", "data")), P(("pod", "data"))),
         out_specs=(P(("pod", "data")), P(("pod", "data")),
                    P(("pod", "data")), stats_specs),
-        axis_names={"pod", "data"}, check_vma=False))(G, EF, PEF)
+        axis_names={"pod", "data"}))(G, EF, PEF)
 
     # mass conservation across BOTH stages:
     #   Σ aggregate + Σ client-EF' + Σ pod-EF' = Σ (w·g + EF)

@@ -8,13 +8,14 @@ error feedback, AND bit accounting.
 RING_EQUIV = r"""
 import os
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import PartitionSpec as P, AxisType
+from jax.sharding import PartitionSpec as P
+from repro import compat
 from repro.core import ring as ring_mod
 from repro.core.algorithms import AggConfig, AggKind
 from repro.core.chain import run_chain
 
 K, n = 8, 8 * 64           # 8 ranks, 64-long segments
-mesh = jax.make_mesh((K,), ("data",), axis_types=(AxisType.Auto,))
+mesh = compat.make_mesh((K,), ("data",))
 
 for kind in (AggKind.CL_SIA, AggKind.SIA, AggKind.RE_SIA, AggKind.DENSE_IA):
     cfg = AggConfig(kind=kind, q=5)
@@ -28,11 +29,11 @@ for kind in (AggKind.CL_SIA, AggKind.SIA, AggKind.RE_SIA, AggKind.DENSE_IA):
         stats = jax.tree.map(lambda s: jax.lax.psum(s, "data"), stats)
         return final[None], ef_new[None], stats
 
-    final, ef_new, stats = jax.jit(jax.shard_map(
+    final, ef_new, stats = jax.jit(compat.shard_map(
         ring_fn, mesh=mesh, in_specs=(P("data"), P("data")),
         out_specs=(P("data"), P("data"),
                    jax.tree.map(lambda _: P(), ring_mod.RingStats(0., 0., 0.))),
-        axis_names={"data"}, check_vma=False))(G, EF)
+        axis_names={"data"}))(G, EF)
 
     # reference: per-segment chains. Ring chain for segment s visits ranks
     # s, s+1, ..., s+K-1; chain.run_chain walks k=K→1, i.e. row 0 = LAST

@@ -1,0 +1,313 @@
+"""repro.topo: graph builders, routing, and tree aggregation.
+
+Key contracts (ISSUE acceptance criteria):
+* path-graph ``run_tree`` is **bit-exact** to ``run_chain`` for all five
+  Algorithm 1–5 node steps (aggregate, EF, and ``HopStats.bits``);
+* star-graph mass conservation;
+* measured tree bits equal the ``comm_cost`` tree closed forms for dense IA
+  (and CL-SIA) on non-path trees;
+* tree closed forms reduce to the chain closed forms on a path.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import comm_cost as cc
+from repro.core.algorithms import AggConfig, AggKind
+from repro.core.chain import run_chain
+from repro.topo import graph as tg
+from repro.topo.routing import shortest_path_tree, widest_path_tree
+from repro.topo.tree import (PS, AggTree, path_tree, round_latency_s,
+                             run_tree, star_tree)
+
+ALL_KINDS = [AggKind.SIA, AggKind.RE_SIA, AggKind.CL_SIA, AggKind.TC_SIA,
+             AggKind.CL_TC_SIA]
+
+K, D = 7, 96
+
+
+def _inputs(k=K, d=D, seed=0):
+    g = jax.random.normal(jax.random.PRNGKey(seed), (k, d))
+    e = 0.1 * jax.random.normal(jax.random.PRNGKey(seed + 1), (k, d))
+    w = jnp.ones((k,), jnp.float32)
+    return g, e, w
+
+
+def _cfg(kind, q=11):
+    return AggConfig(kind=kind, q=q)
+
+
+def _gmask(cfg, d):
+    if cfg.kind in (AggKind.TC_SIA, AggKind.CL_TC_SIA):
+        return jnp.zeros((d,)).at[jnp.arange(cfg.q_global)].set(1.0)
+    return None
+
+
+# ---------------------------------------------------------------------------
+# run_tree ≡ run_chain on a path graph (bit-exact)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ALL_KINDS + [AggKind.DENSE_IA])
+def test_path_tree_bit_exact_vs_chain(kind):
+    cfg = _cfg(kind)
+    g, e, w = _inputs()
+    gm = _gmask(cfg, D)
+    chain = run_chain(cfg, g, e, w, global_mask=gm)
+    tree = run_tree(cfg, path_tree(K), g, e, w, global_mask=gm)
+    np.testing.assert_array_equal(np.asarray(chain.aggregate),
+                                  np.asarray(tree.aggregate))
+    np.testing.assert_array_equal(np.asarray(chain.e_new),
+                                  np.asarray(tree.e_new))
+    np.testing.assert_array_equal(np.asarray(chain.stats.bits),
+                                  np.asarray(tree.stats.bits))
+    np.testing.assert_array_equal(np.asarray(chain.stats.nnz_out),
+                                  np.asarray(tree.stats.nnz_out))
+
+
+@pytest.mark.parametrize("kind", ALL_KINDS)
+def test_path_tree_bit_exact_with_stragglers(kind):
+    cfg = _cfg(kind)
+    g, e, w = _inputs(seed=3)
+    gm = _gmask(cfg, D)
+    part = jnp.asarray([1, 0, 1, 1, 0, 1, 1], jnp.float32)
+    chain = run_chain(cfg, g, e, w, global_mask=gm, participate=part)
+    tree = run_tree(cfg, path_tree(K), g, e, w, global_mask=gm,
+                    participate=part)
+    np.testing.assert_array_equal(np.asarray(chain.aggregate),
+                                  np.asarray(tree.aggregate))
+    np.testing.assert_array_equal(np.asarray(chain.e_new),
+                                  np.asarray(tree.e_new))
+
+
+# ---------------------------------------------------------------------------
+# Mass conservation / EF telescoping on non-path trees
+# ---------------------------------------------------------------------------
+
+def test_star_dense_mass_conservation():
+    cfg = _cfg(AggKind.DENSE_IA)
+    g, e, w = _inputs()
+    res = run_tree(cfg, star_tree(K), g, e, w)
+    want = np.asarray((w[:, None] * g + e).sum(0))
+    np.testing.assert_allclose(np.asarray(res.aggregate), want, atol=1e-5)
+    assert float(jnp.abs(res.e_new).max()) == 0.0
+
+
+@pytest.mark.parametrize("kind", ALL_KINDS)
+def test_tree_mass_conservation_with_ef(kind):
+    """Σ contributions = aggregate + Σ EF (the telescoping identity that
+    makes EF unbiased) on a branchy tree."""
+    cfg = _cfg(kind)
+    #       PS ── 0 ── 1 ─┬─ 2
+    #              │      └─ 3 ── 4
+    #              └─ 5 ── 6
+    tree = AggTree(parent=(PS, 0, 1, 1, 3, 0, 5))
+    g, e, w = _inputs(seed=5)
+    gm = _gmask(cfg, D)
+    res = run_tree(cfg, tree, g, e, w, global_mask=gm)
+    total_in = np.asarray((w[:, None] * g + e).sum(0))
+    total_out = np.asarray(res.aggregate) + np.asarray(res.e_new.sum(0))
+    np.testing.assert_allclose(total_out, total_in, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Measured bits match the tree closed forms
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("make_tree", [
+    lambda: star_tree(6),
+    lambda: AggTree(parent=(PS, 0, 1, 1, 3, 0, 5)),
+    lambda: shortest_path_tree(tg.grid_graph(2, 3)),
+])
+def test_dense_ia_bits_match_closed_form(make_tree):
+    tree = make_tree()
+    k = tree.num_clients
+    cfg = _cfg(AggKind.DENSE_IA)
+    g, e, w = _inputs(k=k)
+    res = run_tree(cfg, tree, g, e, w)
+    got = float(jnp.sum(res.stats.bits))
+    want = cc.dense_ia_bits_tree(k, D, cfg.omega)
+    assert got == want, (got, want)
+
+
+def test_cl_sia_bits_match_closed_form_on_tree():
+    tree = shortest_path_tree(tg.walker_delta(2, 3))
+    k = tree.num_clients
+    cfg = _cfg(AggKind.CL_SIA, q=9)
+    g, e, w = _inputs(k=k, seed=11)
+    res = run_tree(cfg, tree, g, e, w)
+    got = float(jnp.sum(res.stats.bits))
+    want = cc.cl_sia_bits_tree(k, D, cfg.q, cfg.omega)
+    assert got == want, (got, want)
+
+
+def test_sia_bits_below_worst_case_on_tree():
+    tree = shortest_path_tree(tg.grid_graph(2, 3))
+    cfg = _cfg(AggKind.SIA, q=5)
+    g, e, w = _inputs(k=tree.num_clients, seed=2)
+    res = run_tree(cfg, tree, g, e, w)
+    got = float(jnp.sum(res.stats.bits))
+    cap = cc.sia_bits_worst_case_tree(tree.subtree_sizes(), D, cfg.q,
+                                      cfg.omega)
+    assert got <= cap
+
+
+# ---------------------------------------------------------------------------
+# Tree closed forms reduce to the chain closed forms on a path
+# ---------------------------------------------------------------------------
+
+def test_tree_closed_forms_reduce_to_chain():
+    k, d, q, omega = 12, 7850, 78, 32
+    tree = path_tree(k)
+    depths = tree.depths()
+    sub = tree.subtree_sizes()
+    assert list(depths) == list(range(1, k + 1))
+    assert sorted(sub) == list(range(1, k + 1))
+    assert cc.routing_dense_bits_tree(depths, d, omega) == \
+        cc.routing_dense_bits(k, d, omega)
+    assert cc.routing_sparse_bits_tree(depths, d, q, omega) == \
+        cc.routing_sparse_bits(k, d, q, omega)
+    assert cc.dense_ia_bits_tree(k, d, omega) == cc.dense_ia_bits(k, d, omega)
+    assert cc.cl_sia_bits_tree(k, d, q, omega) == \
+        cc.cl_sia_bits(k, d, q, omega)
+    qg, ql = 70, 8
+    np.testing.assert_allclose(
+        cc.expected_lambda_nnz_bound_tree(sub, d, qg, ql),
+        cc.expected_lambda_nnz_bound(k, d, qg, ql), rtol=1e-9)
+    assert cc.sia_bits_worst_case_tree(sub, d, q, omega) == \
+        cc.sia_bits_worst_case(k, d, q, omega)
+
+
+# ---------------------------------------------------------------------------
+# Graph builders + routing
+# ---------------------------------------------------------------------------
+
+def test_walker_delta_is_torus():
+    g = tg.walker_delta(3, 4)
+    assert g.num_clients == 12
+    assert g.is_connected()
+    # torus: every satellite has degree 4 (+ gateway's ground link)
+    deg = np.zeros(g.num_nodes, int)
+    for u, v in g.edges:
+        deg[u] += 1
+        deg[v] += 1
+    sats = [v for v in range(g.num_nodes) if v != g.ps]
+    assert all(deg[v] in (4, 5) for v in sats)
+    assert deg[g.ps] == 1
+
+
+def test_walker_star_has_seam():
+    delta = tg.walker_delta(3, 4)
+    star = tg.walker_star(3, 4)
+    assert star.edges.shape[0] == delta.edges.shape[0] - 4  # seam links gone
+    assert star.is_connected()
+
+
+def test_shortest_path_tree_depths_are_graph_distances():
+    g = tg.grid_graph(3, 3)
+    tree = shortest_path_tree(g, metric="hops")
+    # grid with PS at corner (0,0): client (r,c) is r+c+1 hops from PS
+    depths = tree.depths()
+    nodes = g.client_nodes()
+    for i, v in enumerate(nodes):
+        r, c = divmod(int(v) - 1, 3)
+        assert depths[i] == r + c + 1
+
+
+def test_widest_path_tree_maximizes_bottleneck():
+    # PS —(thin)— a, PS —(wide)— b —(wide)— a: widest tree routes a via b
+    edges = np.asarray([[0, 1], [0, 2], [1, 2]])
+    g = tg.ConstellationGraph(num_nodes=3, edges=edges,
+                              bandwidth_bps=[1e6, 100e6, 100e6],
+                              latency_s=[0.01, 0.01, 0.01], ps=0)
+    tree = widest_path_tree(g)
+    # client 0 = node 1 (a), client 1 = node 2 (b)
+    assert tree.parent == (1, PS)
+    assert tree.uplink_bw_bps[0] == 100e6
+    # shortest-path (hops) takes the thin direct link instead
+    spt = shortest_path_tree(g, metric="hops")
+    assert spt.parent == (PS, PS)
+
+
+def test_rerouting_around_dead_relay():
+    g = tg.grid_graph(2, 3)
+    full = shortest_path_tree(g)
+    # kill the relay at grid position (0, 1) — node 2, client index 1; its
+    # downstream column re-roots through row 1
+    dead_node = int(g.client_nodes()[1])
+    healed = shortest_path_tree(g, exclude=[dead_node])
+    assert healed.reachable is not None
+    alive = [i for i, v in enumerate(g.client_nodes()) if int(v) != dead_node]
+    assert all(healed.reachable[i] for i in alive)
+    assert not healed.reachable[1]
+    assert healed.parent[1] == PS          # stub parked at the PS
+    assert healed.max_depth() >= full.max_depth()
+
+
+def test_gateway_loss_strands_single_uplink_grid():
+    """The grid has one ground link; losing that gateway strands everyone."""
+    g = tg.grid_graph(2, 3)
+    gateway = int(g.client_nodes()[0])
+    healed = shortest_path_tree(g, exclude=[gateway])
+    assert not any(healed.reachable)
+
+
+def test_disconnected_clients_become_stubs():
+    # two clients, one only reachable through the other
+    edges = np.asarray([[0, 1], [1, 2]])
+    g = tg.ConstellationGraph(num_nodes=3, edges=edges,
+                              bandwidth_bps=1e6, latency_s=0.01, ps=0)
+    healed = shortest_path_tree(g, exclude=[1])
+    assert healed.parent == (PS, PS)
+    assert healed.reachable == (False, False)
+
+
+def test_cycle_detection():
+    with pytest.raises(ValueError, match="cycle"):
+        AggTree(parent=(1, 0))
+
+
+def test_round_latency_depth_scaling():
+    """Critical path shrinks with tree depth at equal per-hop payload."""
+    bits = [1e6] * 12
+    # equal link classes so only the topology differs
+    chain = shortest_path_tree(tg.path_graph(12, bandwidth_bps=50e6,
+                                             latency_s=10e-3))
+    star = shortest_path_tree(tg.star_graph(12, bandwidth_bps=50e6,
+                                            latency_s=10e-3))
+    # 12 serialized hops vs 1: exactly 12× the per-hop time
+    np.testing.assert_allclose(round_latency_s(chain, bits),
+                               12 * round_latency_s(star, bits))
+
+
+# ---------------------------------------------------------------------------
+# Simulator wiring (tree mode + failure re-rooting)
+# ---------------------------------------------------------------------------
+
+def test_simulator_tree_mode_and_failure():
+    from repro.configs import PAPER
+    from repro.data.federated import partition_iid
+    from repro.data.synthetic import make_synthetic_mnist
+    from repro.fed.simulator import Simulator
+    from repro.fed.topology import FailureSchedule, TreeTopology
+
+    g = tg.walker_delta(2, 3, gateways=(1, 4))
+    k = g.num_clients
+    pc = dataclasses.replace(PAPER, num_clients=k)
+    train = make_synthetic_mnist(jax.random.PRNGKey(0), k * 40)
+    fed = partition_iid(jax.random.PRNGKey(2), train, k)
+    topo = TreeTopology(g, routing="widest")
+    sim = Simulator(pc, AggConfig(kind=AggKind.CL_SIA, q=pc.q), fed,
+                    local_lr=pc.lr, tree_topology=topo)
+    fails = FailureSchedule(k, {3: ([0], []), 6: ([], [0])})
+    out = sim.run(8, failure_schedule=fails)
+    assert out["loss"][-1] < out["loss"][0]
+    # CL-SIA constant-length: exactly Q(ω+⌈log₂d⌉) per live uplink — the
+    # re-rooted tree drops the dead node from the route entirely
+    full = cc.cl_sia_bits_tree(k, pc.d, pc.q, 32)
+    healed = cc.cl_sia_bits_tree(k - 1, pc.d, pc.q, 32)
+    assert [b for b in out["bits"]] == \
+        [full] * 3 + [healed] * 3 + [full] * 2

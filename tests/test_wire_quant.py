@@ -2,13 +2,14 @@
 
 WIRE = r"""
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import PartitionSpec as P, AxisType
+from jax.sharding import PartitionSpec as P
+from repro import compat
 from repro.core import ring as ring_mod
 from repro.core import sparsify as sp
 from repro.core.algorithms import AggConfig, AggKind
 
 K, n = 8, 8 * 64
-mesh = jax.make_mesh((K,), ("data",), axis_types=(AxisType.Auto,))
+mesh = compat.make_mesh((K,), ("data",))
 G = jax.random.normal(jax.random.PRNGKey(0), (K, n))
 EF = jnp.zeros((K, n))
 w = jnp.float32(1.0)
@@ -21,11 +22,11 @@ def run(wire_dtype):
             cfg, g_l[0], ef_l[0], w, axis="data")
         stats = jax.tree.map(lambda s: jax.lax.psum(s, "data"), stats)
         return final[None], ef_new[None], stats
-    return jax.jit(jax.shard_map(
+    return jax.jit(compat.shard_map(
         fn, mesh=mesh, in_specs=(P("data"), P("data")),
         out_specs=(P("data"), P("data"),
                    jax.tree.map(lambda _: P(), ring_mod.RingStats(0., 0., 0.))),
-        axis_names={"data"}, check_vma=False))(G, EF)
+        axis_names={"data"}))(G, EF)
 
 f32_seg, f32_ef, f32_st = run("float32")
 bf16_seg, bf16_ef, bf16_st = run("bfloat16")
