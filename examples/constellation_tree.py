@@ -37,9 +37,12 @@ fed = partition_iid(jax.random.PRNGKey(2), train, K)
 
 topo = TreeTopology(g, routing="widest")
 tree = topo.tree()
+plan = topo.plan()
 print("aggregation tree (client → parent, PS = -1):", tree.parent)
 print(f"depth {tree.max_depth()} vs chain depth {K} — "
-      f"{K / tree.max_depth():.1f}× shorter critical path\n")
+      f"{K / tree.max_depth():.1f}× shorter critical path")
+print(f"compiled plan: level schedule (L, W) = {plan.shape} — one jit "
+      f"specialization per padded shape\n")
 
 sim = Simulator(pc, AggConfig(kind=AggKind.CL_SIA, q=pc.q), fed,
                 local_lr=pc.lr, tree_topology=topo)

@@ -1,0 +1,21 @@
+"""Plan/execute aggregation API — one entry point for every topology.
+
+``compile_plan(topology)`` lowers a chain, permuted chain order, routed
+:class:`~repro.topo.tree.AggTree`, or constellation graph into one canonical
+padded ``(L, W)`` level schedule (:class:`AggPlan`); ``execute(cfg, plan,
+...)`` runs one aggregation round over it — bit-exact to the paper chain and
+to the tree engine it subsumes. :class:`TopologySchedule` strings plans over
+time (graph-per-round or link up/down events) under a single jit
+specialization; :class:`Aggregator` is the pytree-aware object API on top.
+"""
+
+from repro.agg.aggregator import AggState, Aggregator, RoundOut, flat_dim
+from repro.agg.plan import (AggPlan, RoundResult, as_tree, bandwidth_budgets,
+                            compile_plan, execute)
+from repro.agg.schedule import TopologySchedule, common_shape
+
+__all__ = [
+    "AggPlan", "RoundResult", "compile_plan", "execute", "as_tree",
+    "bandwidth_budgets", "TopologySchedule", "common_shape",
+    "Aggregator", "AggState", "RoundOut", "flat_dim",
+]

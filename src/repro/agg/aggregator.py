@@ -1,0 +1,137 @@
+"""Pytree-aware, topology-polymorphic aggregator object.
+
+:class:`Aggregator` wraps ``compile_plan``/``execute`` with the cross-round
+state the five algorithms need (error feedback, TCS reference point) and
+pytree plumbing, so callers hand it stacked per-client gradients in any
+shape over any topology — chain, permuted chain, or routed tree — and get
+back the PS-side aggregate with exact §V bit accounting. It replaces the
+chain-only ``ChainAggregator`` (kept in :mod:`repro.core.api` as a
+deprecated alias).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from repro.agg.plan import AggPlan, RoundResult, compile_plan, execute
+from repro.core import tcs as tcs_mod
+from repro.core.algorithms import AggConfig, AggKind, HopStats
+
+Array = jax.Array
+
+
+class AggState(NamedTuple):
+    """Cross-round aggregator state (checkpointed as part of TrainState)."""
+
+    ef: Array                        # [K, d] error-feedback memory
+    tcs_prev: Optional[Array]        # [d] w^{t-1} (TC algorithms) or None
+
+
+class RoundOut(NamedTuple):
+    aggregate: Any                   # pytree (or flat) — Σ_k D_k g_k estimate
+    state: AggState
+    stats: HopStats                  # per-hop, leaves [K]
+    total_bits: Array                # Σ_k bits — scalar float32
+
+
+def _needs_tcs(kind: AggKind) -> bool:
+    return kind in (AggKind.TC_SIA, AggKind.CL_TC_SIA)
+
+
+class Aggregator:
+    """Multi-hop aggregator for K clients over a d-dim model, on any
+    topology.
+
+    ``topology`` accepts whatever ``compile_plan`` does — an ``AggTree``, a
+    chain order, a ``ConstellationGraph``, or nothing (the paper's identity
+    chain). A precompiled ``plan`` takes precedence; ``round`` also takes a
+    per-call ``plan`` so one Aggregator can follow a
+    :class:`~repro.agg.schedule.TopologySchedule`.
+    """
+
+    def __init__(self, cfg: AggConfig, num_clients: int, dim: int, *,
+                 topology: Any = None, plan: Optional[AggPlan] = None):
+        self.cfg = cfg
+        self.num_clients = num_clients
+        self.dim = dim
+        if plan is None:
+            plan = compile_plan(
+                num_clients if topology is None else topology,
+                num_clients=num_clients)
+        if plan.num_clients != num_clients:
+            raise ValueError(f"plan is for {plan.num_clients} clients, "
+                             f"aggregator for {num_clients}")
+        self.plan = plan
+
+    # -- state ------------------------------------------------------------
+    def init_state(self, params: Any = None, dtype=jnp.float32) -> AggState:
+        ef = jnp.zeros((self.num_clients, self.dim), dtype)
+        tcs_prev = None
+        if _needs_tcs(self.cfg.kind):
+            if params is None:
+                tcs_prev = jnp.zeros((self.dim,), dtype)
+            else:
+                tcs_prev = ravel_pytree(params)[0].astype(dtype)
+        return AggState(ef=ef, tcs_prev=tcs_prev)
+
+    # -- one round ----------------------------------------------------------
+    def round(
+        self,
+        grads: Any,                    # [K, d] array OR list/stacked pytree
+        state: AggState,
+        weights: Array,                # [K] D_k
+        *,
+        params: Any = None,            # current params (TC algorithms)
+        participate: Optional[Array] = None,
+        plan: Optional[AggPlan] = None,
+    ) -> RoundOut:
+        flat, unravel = _as_flat_stack(grads, self.num_clients, self.dim)
+
+        global_mask = None
+        tcs_prev = state.tcs_prev
+        if _needs_tcs(self.cfg.kind):
+            if params is None:
+                raise ValueError(f"{self.cfg.kind} needs current params for "
+                                 "the TCS global mask")
+            flat_params = ravel_pytree(params)[0].astype(flat.dtype)
+            global_mask = tcs_mod.global_mask(
+                tcs_mod.TCSState(tcs_prev), flat_params, self.cfg.q_global,
+                topq_mask_fn=lambda x, q: self.cfg.topq_mask_fn()(x, q))
+            tcs_prev = flat_params
+
+        res: RoundResult = execute(
+            self.cfg, self.plan if plan is None else plan,
+            flat, state.ef, weights,
+            global_mask=global_mask, participate=participate)
+
+        agg = unravel(res.aggregate) if unravel is not None else res.aggregate
+        return RoundOut(
+            aggregate=agg,
+            state=AggState(ef=res.e_new, tcs_prev=tcs_prev),
+            stats=res.stats,
+            total_bits=jnp.sum(res.stats.bits),
+        )
+
+
+def _as_flat_stack(grads: Any, num_clients: int, dim: int):
+    """Accept [K,d] arrays, or a pytree whose leaves have leading dim K."""
+    if isinstance(grads, jax.Array) and grads.ndim == 2:
+        assert grads.shape == (num_clients, dim), (grads.shape, num_clients, dim)
+        return grads, None
+    # stacked pytree: vmap ravel over the leading axis
+    leaves = jax.tree.leaves(grads)
+    assert all(l.shape[0] == num_clients for l in leaves), "leading dim must be K"
+    one = jax.tree.map(lambda l: l[0], grads)
+    _, unravel = ravel_pytree(one)
+    flat = jax.vmap(lambda t: ravel_pytree(t)[0])(grads)
+    assert flat.shape == (num_clients, dim)
+    return flat, unravel
+
+
+def flat_dim(params: Any) -> int:
+    """Total parameter count d of a pytree (the paper's model dimension)."""
+    return int(sum(jnp.size(l) for l in jax.tree.leaves(params)))

@@ -1,0 +1,298 @@
+"""Topology-polymorphic aggregation: ``compile_plan`` + one ``execute``.
+
+Every aggregation topology the repo knows — the paper's linear chain, a
+permuted/healed chain order, or a routed constellation :class:`AggTree` —
+lowers to one canonical representation, the :class:`AggPlan`: a padded
+``(L, W)`` level schedule (L levels run sequentially, up to W nodes per
+level run concurrently). ``execute(cfg, plan, ...)`` is the single round
+entry point; it is bit-exact to :func:`repro.core.chain.run_chain` on
+chain plans and subsumes :func:`repro.topo.tree.run_tree` (which now
+delegates here).
+
+The plan's arrays are *traced* jit arguments, not Python constants, so the
+compiled round is specialized only on the padded ``(L, W)`` shape — every
+topology padded to the same shape shares one XLA executable. That is what
+makes time-varying topologies (:class:`repro.agg.schedule.TopologySchedule`)
+cheap: a round-per-graph LEO schedule re-routes continuously but triggers
+exactly one trace.
+
+Plans optionally carry per-client ``q_budget`` (int32 [K]) — the
+bandwidth-aware Top-Q budgets of :func:`bandwidth_budgets`, where narrow
+uplinks get proportionally smaller local budgets. Without a budget the node
+steps run the paper's static-``q`` exact Top-Q, bit-identical to before.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.algorithms import AggConfig, AggKind, HopStats, NodeCtx, node_step
+from repro.topo.tree import PS, AggTree, build_schedule, path_tree
+
+Array = jax.Array
+
+Topology = Union[int, AggTree, Sequence, np.ndarray]
+
+
+@dataclasses.dataclass(frozen=True)
+class AggPlan:
+    """Canonical padded level schedule — the compiled form of a topology.
+
+    ``node_id[l, w]`` is the client run in slot w of level l, deepest level
+    first (padding slots hold K, a zero dummy row); ``slot_mask`` is 1.0 for
+    real slots; ``parent_row[l, w]`` is the inbox row receiving that slot's
+    γ (client index, K for the PS, K+1 trash row for padding);
+    ``flat_pos[k]`` maps client k back out of schedule order. ``alive[k]``
+    is 0.0 for stranded stubs (clients routing could not reach) — folded
+    into ``participate`` by :func:`execute`. ``q_budget`` (optional
+    int32 [K]) carries per-client local Top-Q budgets.
+
+    Registered as a jax pytree: arrays are leaves (traced jit arguments),
+    ``num_clients`` is static. Two plans with the same ``(L, W)`` and leaf
+    dtypes therefore share one jit specialization.
+    """
+
+    node_id: np.ndarray       # [L, W] int32
+    slot_mask: np.ndarray     # [L, W] float32
+    parent_row: np.ndarray    # [L, W] int32
+    flat_pos: np.ndarray      # [K] int32
+    alive: np.ndarray         # [K] float32
+    q_budget: Optional[np.ndarray] = None   # [K] int32
+    num_clients: int = 0
+
+    @property
+    def shape(self) -> tuple:
+        """The padded ``(L, W)`` — the jit-specialization key."""
+        return tuple(self.node_id.shape)
+
+    def pad(self, shape: tuple) -> "AggPlan":
+        """Re-pad to a larger ``(L, W)`` (bit-exact: padding slots are
+        no-ops — they run the zero dummy row and scatter into the trash
+        row)."""
+        big_l, big_w = shape
+        l, w = self.shape
+        if (big_l, big_w) == (l, w):
+            return self
+        if big_l < l or big_w < w:
+            raise ValueError(f"cannot shrink plan {self.shape} to {shape}")
+        k = self.num_clients
+        node_id = np.full((big_l, big_w), k, np.int32)
+        slot_mask = np.zeros((big_l, big_w), np.float32)
+        parent_row = np.full((big_l, big_w), k + 1, np.int32)
+        node_id[:l, :w] = self.node_id
+        slot_mask[:l, :w] = self.slot_mask
+        parent_row[:l, :w] = self.parent_row
+        li, wi = np.divmod(np.asarray(self.flat_pos, np.int64), w)
+        flat_pos = (li * big_w + wi).astype(np.int32)
+        return AggPlan(node_id=node_id, slot_mask=slot_mask,
+                       parent_row=parent_row, flat_pos=flat_pos,
+                       alive=self.alive, q_budget=self.q_budget,
+                       num_clients=k)
+
+
+def _plan_flatten(p: AggPlan):
+    return ((p.node_id, p.slot_mask, p.parent_row, p.flat_pos, p.alive,
+             p.q_budget), p.num_clients)
+
+
+def _plan_unflatten(num_clients, leaves):
+    node_id, slot_mask, parent_row, flat_pos, alive, q_budget = leaves
+    return AggPlan(node_id=node_id, slot_mask=slot_mask,
+                   parent_row=parent_row, flat_pos=flat_pos, alive=alive,
+                   q_budget=q_budget, num_clients=num_clients)
+
+
+jax.tree_util.register_pytree_node(AggPlan, _plan_flatten, _plan_unflatten)
+
+
+# ---------------------------------------------------------------------------
+# compile_plan
+# ---------------------------------------------------------------------------
+
+def _order_to_tree(order: np.ndarray, num_clients: Optional[int]) -> AggTree:
+    """A (possibly permuted) chain order → the equivalent path tree.
+
+    ``order[0]`` is the client adjacent to the PS; ``order[-1]`` the far
+    end (matching ``run_chain_with_topology``). Must be a full permutation —
+    express exclusions via ``participate`` or by routing a tree.
+    """
+    order = np.asarray(order, np.int64).reshape(-1)
+    k = num_clients if num_clients is not None else len(order)
+    if sorted(order.tolist()) != list(range(k)):
+        raise ValueError(
+            f"chain order must be a permutation of 0..{k - 1}; got "
+            f"{order.tolist()} (exclude nodes via participate, not order)")
+    parent = np.empty((k,), np.int64)
+    parent[order[0]] = PS
+    parent[order[1:]] = order[:-1]
+    return AggTree(parent=tuple(int(p) for p in parent))
+
+
+def as_tree(topology: Topology, num_clients: Optional[int] = None) -> AggTree:
+    """Coerce any supported topology description to an :class:`AggTree`.
+
+    * ``int K`` — the paper's identity chain over K clients;
+    * :class:`AggTree` — used as-is;
+    * 1-D int sequence — a (healed/permuted) chain visiting order;
+    * anything with a ``.tree()`` method (``repro.fed.topology``'s
+      ``TreeTopology``) or a ``ConstellationGraph`` — routed via the
+      shortest-path policy.
+    """
+    if isinstance(topology, AggTree):
+        return topology
+    if isinstance(topology, int):
+        return path_tree(topology)
+    if hasattr(topology, "tree") and callable(topology.tree):
+        return topology.tree()
+    if hasattr(topology, "client_nodes"):         # ConstellationGraph
+        from repro.topo.routing import shortest_path_tree
+        return shortest_path_tree(topology)
+    if hasattr(topology, "order") and callable(topology.order):
+        return _order_to_tree(np.asarray(topology.order()), num_clients)
+    return _order_to_tree(np.asarray(topology), num_clients)
+
+
+def compile_plan(topology: Topology, *,
+                 num_clients: Optional[int] = None,
+                 pad_to: Optional[tuple] = None,
+                 q_budget: Optional[np.ndarray] = None) -> AggPlan:
+    """Lower a topology to its canonical :class:`AggPlan`.
+
+    ``pad_to=(L, W)`` pads the level schedule so plans from different
+    topologies share one jit specialization (see
+    :class:`repro.agg.schedule.TopologySchedule`). ``q_budget`` attaches
+    per-client local Top-Q budgets (:func:`bandwidth_budgets`).
+    """
+    tree = as_tree(topology, num_clients)
+    k = tree.num_clients
+    sched = build_schedule(tree)
+    alive = (np.ones((k,), np.float32) if tree.reachable is None
+             else np.asarray(tree.reachable, np.float32))
+    qb = None
+    if q_budget is not None:
+        qb = np.asarray(q_budget, np.int32).reshape(-1)
+        if qb.shape != (k,):
+            raise ValueError(f"q_budget must be [K={k}]; got {qb.shape}")
+    plan = AggPlan(node_id=np.asarray(sched.node_id, np.int32),
+                   slot_mask=np.asarray(sched.slot_mask, np.float32),
+                   parent_row=np.asarray(sched.parent_row, np.int32),
+                   flat_pos=np.asarray(sched.flat_pos, np.int32),
+                   alive=alive, q_budget=qb, num_clients=k)
+    if pad_to is not None:
+        plan = plan.pad(tuple(pad_to))
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# Bandwidth-aware budgets
+# ---------------------------------------------------------------------------
+
+def bandwidth_budgets(cfg: AggConfig, tree: AggTree, *,
+                      floor: int = 1) -> np.ndarray:
+    """Per-client local Top-Q budgets scaled by uplink bandwidth.
+
+    ``q_k = max(floor, round(q_base · bw_k / max bw))`` where ``q_base`` is
+    the algorithm's local budget (``q``, or ``q_local`` for the TC
+    variants). Narrow uplinks transmit fewer nonzeros, so total §V bits
+    drop versus the uniform budget on any heterogeneous-bandwidth tree
+    (zero-bandwidth stubs get the floor; they never transmit anyway).
+    """
+    if tree.uplink_bw_bps is None:
+        raise ValueError("tree has no per-link bandwidth (built by hand?) — "
+                         "route it from a ConstellationGraph")
+    bw = np.asarray(tree.uplink_bw_bps, np.float64)
+    base = (cfg.q_local if cfg.kind in (AggKind.TC_SIA, AggKind.CL_TC_SIA)
+            else cfg.q)
+    pos = bw[bw > 0]
+    if pos.size == 0:
+        return np.full((tree.num_clients,), floor, np.int32)
+    scaled = np.round(base * bw / pos.max())
+    return np.where(bw > 0, np.maximum(floor, scaled),
+                    floor).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# execute — the single round entry point
+# ---------------------------------------------------------------------------
+
+class RoundResult(NamedTuple):
+    aggregate: Array      # what the PS receives (Σ over its children), [d]
+    e_new: Array          # updated EF memory, [K, d] (client index order)
+    stats: HopStats       # per-hop stats, leaves [K] (client index order)
+
+
+def execute(
+    cfg: AggConfig,
+    plan: AggPlan,
+    grads: Array,                  # [K, d] per-client effective gradients g_k
+    e: Array,                      # [K, d] EF memory
+    weights: Array,                # [K]    D_k
+    *,
+    global_mask: Optional[Array] = None,   # [d] TCS mask m^t (TC algorithms)
+    participate: Optional[Array] = None,   # [K] 0/1 straggler mask
+) -> RoundResult:
+    """One aggregation round over a compiled plan (any topology).
+
+    Same contract as :func:`repro.core.chain.run_chain` with the topology
+    factored into ``plan``; bit-exact to ``run_chain`` on chain plans and
+    invariant under padding. A ``lax.scan`` walks the L levels deepest
+    first while a ``vmap`` over the W slots runs every node of a level
+    concurrently; children's partial aggregates merge at each parent via a
+    masked scatter-add (padding slots run the zero dummy row and target the
+    trash row, so they are no-ops).
+    """
+    k, d = grads.shape
+    if plan.num_clients != k:
+        raise ValueError(f"plan has {plan.num_clients} clients, grads {k}")
+    if global_mask is None:
+        global_mask = jnp.zeros((d,), grads.dtype)
+    if participate is None:
+        participate = jnp.ones((k,), grads.dtype)
+    participate = participate * jnp.asarray(plan.alive, grads.dtype)
+    step = node_step(cfg)
+
+    # one zero dummy row (index K) backs the padding slots
+    zrow = jnp.zeros((1, d), grads.dtype)
+    g_ext = jnp.concatenate([grads, zrow])
+    e_ext = jnp.concatenate([e, zrow])
+    w_ext = jnp.concatenate([weights, jnp.zeros((1,), weights.dtype)])
+    p_ext = jnp.concatenate(
+        [participate, jnp.zeros((1,), participate.dtype)])
+    q_ext = None
+    if plan.q_budget is not None:
+        q_ext = jnp.concatenate([jnp.asarray(plan.q_budget, jnp.int32),
+                                 jnp.zeros((1,), jnp.int32)])
+
+    def one(g_row, gamma_in, e_row, w_row, p_row, qb_row=None):
+        ctx = NodeCtx(global_mask=global_mask, participate=p_row,
+                      q_budget=qb_row)
+        return step(cfg, g_row, gamma_in, e_row, w_row, ctx)
+
+    def body(inbox, xs):
+        ids, mask, par = xs
+        args = (g_ext[ids], inbox[ids], e_ext[ids], w_ext[ids], p_ext[ids])
+        if q_ext is None:
+            gamma_out, e_new, stats = jax.vmap(one)(*args)
+        else:
+            gamma_out, e_new, stats = jax.vmap(one)(*args, q_ext[ids])
+        inbox = inbox.at[par].add(gamma_out * mask[:, None])
+        return inbox, (e_new, stats)
+
+    # inbox rows: 0..K−1 per-client incoming sums, K = PS, K+1 = trash
+    inbox0 = jnp.zeros((k + 2, d), grads.dtype)
+    inbox, (e_lvl, st_lvl) = jax.lax.scan(
+        body, inbox0,
+        (jnp.asarray(plan.node_id), jnp.asarray(plan.slot_mask),
+         jnp.asarray(plan.parent_row)))
+
+    # scan outputs are [L, W, ...] in schedule order → client index order
+    pos = jnp.asarray(plan.flat_pos)
+    e_new = e_lvl.reshape(-1, d)[pos]
+    stats = jax.tree.map(
+        lambda s: s.reshape((-1,) + s.shape[2:])[pos], st_lvl)
+    return RoundResult(aggregate=inbox[k], e_new=e_new, stats=stats)

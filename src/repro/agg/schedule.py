@@ -1,0 +1,140 @@
+"""Time-varying topologies: a schedule of plans sharing one jit shape.
+
+LEO constellations re-route continuously — the chain the PS sees this round
+is not the tree it sees the next (Razmi et al., arXiv:2501.11385 make the
+satellite scenario explicitly time-varying). A :class:`TopologySchedule`
+compiles a sequence of topologies (explicit graphs/trees, or a base graph
+plus link up/down events) into :class:`repro.agg.plan.AggPlan`s padded to a
+common ``(L, W)``, so a round loop that swaps plans per round stays inside
+**one** jit specialization no matter how often the route changes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Optional, Sequence
+
+import numpy as np
+
+from repro.agg.plan import AggPlan, compile_plan
+from repro.topo.graph import ConstellationGraph
+
+
+def common_shape(plans: Iterable[AggPlan]) -> tuple:
+    """Elementwise-max ``(L, W)`` over a set of plans."""
+    shapes = [p.shape for p in plans]
+    if not shapes:
+        raise ValueError("no plans")
+    return (max(s[0] for s in shapes), max(s[1] for s in shapes))
+
+
+@dataclasses.dataclass(frozen=True)
+class TopologySchedule:
+    """Per-round aggregation plans, padded to one ``(L, W)``.
+
+    ``plan_at(r)`` returns round r's plan: cyclic over the sequence when
+    ``cyclic`` (a repeating orbital period), else clamped to the last entry
+    (a one-shot event timeline). ``round_index[j]`` names the plan used at
+    round j — distinct rounds may share a plan, so an N-round timeline with
+    few distinct routes stores each route once.
+    """
+
+    plans: tuple                  # tuple[AggPlan, ...], one shape
+    round_index: tuple            # per-round index into ``plans``
+    cyclic: bool = True
+
+    def __post_init__(self):
+        if not self.plans:
+            raise ValueError("empty schedule")
+        shape = self.plans[0].shape
+        k = self.plans[0].num_clients
+        budgeted = self.plans[0].q_budget is not None
+        for p in self.plans:
+            if p.shape != shape or p.num_clients != k:
+                raise ValueError(
+                    f"schedule plans must share one (L, W) and K; got "
+                    f"{p.shape}/{p.num_clients} vs {shape}/{k}")
+            if (p.q_budget is not None) != budgeted:
+                # a None q_budget changes the plan's pytree structure, and a
+                # structure flip between rounds would retrace the jitted
+                # round — the recompilation this class exists to prevent
+                raise ValueError("schedule plans must either all carry a "
+                                 "q_budget or none of them")
+        if any(not 0 <= i < len(self.plans) for i in self.round_index):
+            raise ValueError("round_index out of range")
+
+    @property
+    def shape(self) -> tuple:
+        """The shared ``(L, W)`` — one jit specialization for the whole
+        schedule."""
+        return self.plans[0].shape
+
+    @property
+    def num_clients(self) -> int:
+        return self.plans[0].num_clients
+
+    def __len__(self) -> int:
+        return len(self.round_index)
+
+    def plan_at(self, r: int) -> AggPlan:
+        n = len(self.round_index)
+        j = r % n if self.cyclic else min(r, n - 1)
+        return self.plans[self.round_index[j]]
+
+    # -- constructors -------------------------------------------------------
+
+    @classmethod
+    def from_topologies(cls, topologies: Sequence, *,
+                        num_clients: Optional[int] = None,
+                        q_budgets: Optional[Sequence] = None,
+                        cyclic: bool = True) -> "TopologySchedule":
+        """One plan per topology (graph, tree, chain order, or int K),
+        padded to the common shape."""
+        if q_budgets is None:
+            q_budgets = [None] * len(topologies)
+        plans = [compile_plan(t, num_clients=num_clients, q_budget=qb)
+                 for t, qb in zip(topologies, q_budgets)]
+        shape = common_shape(plans)
+        return cls(plans=tuple(p.pad(shape) for p in plans),
+                   round_index=tuple(range(len(plans))), cyclic=cyclic)
+
+    @classmethod
+    def from_link_events(cls, graph: ConstellationGraph, events: dict, *,
+                         rounds: int, routing: str = "latency",
+                         cyclic: bool = False) -> "TopologySchedule":
+        """A base constellation plus a link up/down timeline.
+
+        ``events[r] = ([down_links], [up_links])`` applied before round r,
+        cumulative (a link stays down until an up event restores it); links
+        are ``(u, v)`` node pairs. Each distinct down-set is routed and
+        compiled once; routing around a lost link re-roots the affected
+        subtree, and clients a partition strands become non-participating
+        stubs (``plan.alive`` zeros them).
+        """
+        from repro.topo.routing import shortest_path_tree, widest_path_tree
+
+        def route(g):
+            if routing == "widest":
+                return widest_path_tree(g)
+            return shortest_path_tree(g, metric=routing)
+
+        down: set = set()
+        compiled: dict = {}
+        plans: list = []
+        round_index = []
+        for r in range(rounds):
+            if r in events:
+                downs, ups = events[r]
+                down |= {(min(int(u), int(v)), max(int(u), int(v)))
+                         for u, v in downs}
+                down -= {(min(int(u), int(v)), max(int(u), int(v)))
+                         for u, v in ups}
+            key = frozenset(down)
+            if key not in compiled:
+                g = graph.without_links(down) if down else graph
+                compiled[key] = len(plans)
+                plans.append(compile_plan(route(g)))
+            round_index.append(compiled[key])
+        shape = common_shape(plans)
+        return cls(plans=tuple(p.pad(shape) for p in plans),
+                   round_index=tuple(round_index), cyclic=cyclic)

@@ -34,8 +34,52 @@ def axis_size(axis) -> int:
     return jax.lax.psum(1, axis)
 
 
+def set_mesh(mesh):
+    """Ambient-mesh context manager on any jax version.
+
+    Modern jax exposes ``jax.set_mesh(mesh)`` as a context manager; on
+    0.4.x the ``Mesh`` object itself is the context manager that installs
+    the ambient mesh, so we hand it back unchanged.
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
+def tree_flatten_with_path(tree):
+    """``jax.tree.flatten_with_path`` (0.6+) / ``jax.tree_util`` (0.4.x)."""
+    if hasattr(jax.tree, "flatten_with_path"):
+        return jax.tree.flatten_with_path(tree)
+    return jax.tree_util.tree_flatten_with_path(tree)
+
+
+def abstract_mesh():
+    """The ambient mesh, or None outside any mesh context.
+
+    0.6+ tracks an abstract mesh (``jax.sharding.get_abstract_mesh``);
+    0.4.x tracks the physical mesh installed by the ``with mesh:`` context.
+    Callers must treat axis types as Auto when the mesh doesn't carry them.
+    """
+    get = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get is not None:
+        return get()
+    try:
+        from jax._src.mesh import thread_resources
+        mesh = thread_resources.env.physical_mesh
+        return None if mesh.empty else mesh
+    except Exception:
+        return None
+
+
 def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None):
-    """Fully-manual shard_map (replication checking off) on any jax."""
+    """shard_map (replication checking off) on any jax.
+
+    ``axis_names`` selects the *manual* axes (the 0.6+ vocabulary); axes
+    not named stay automatic inside the body. The 0.4.x fallback expresses
+    the same split through ``auto=`` (its complement).
+    """
+    auto = (frozenset(mesh.axis_names) - frozenset(axis_names)
+            if axis_names is not None else frozenset())
     if hasattr(jax, "shard_map"):
         kwargs = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                       check_vma=False)
@@ -43,9 +87,25 @@ def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None):
             kwargs["axis_names"] = axis_names
         try:
             return jax.shard_map(f, **kwargs)
-        except TypeError:
+        except TypeError as exc:
+            if auto:
+                # dropping axis_names would run the auto axes as manual —
+                # missing collectives inside the body, silently wrong
+                raise NotImplementedError(
+                    f"this jax's shard_map has no axis_names support "
+                    f"(needed for auto axes {sorted(auto)})") from exc
             kwargs.pop("axis_names", None)
             return jax.shard_map(f, **kwargs)
     from jax.experimental.shard_map import shard_map as _sm
-    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-               check_rep=False)
+    kwargs = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=False)
+    if auto:
+        try:
+            return _sm(f, auto=auto, **kwargs)
+        except TypeError as exc:
+            # running auto axes as manual would silently change the
+            # body's semantics (missing collectives) — fail loudly
+            raise NotImplementedError(
+                f"this jax's shard_map has no partial-auto support "
+                f"(needed for auto axes {sorted(auto)})") from exc
+    return _sm(f, **kwargs)

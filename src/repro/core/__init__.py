@@ -1,12 +1,23 @@
 """Core library: the paper's sparse incremental-aggregation algorithms."""
 
 from repro.core.algorithms import AggConfig, AggKind, HopStats, NodeCtx, node_step
-from repro.core.api import (AggState, ChainAggregator, RoundOut, flat_dim,
-                            make_aggregator)
 from repro.core.chain import ChainResult, run_chain, run_chain_with_topology
+
+# The aggregator object API lives in repro.agg (which itself builds on
+# repro.core.algorithms); resolve its re-exports lazily (PEP 562) so
+# `import repro.agg` and `import repro.core` can bootstrap in either order.
+_AGG_API = ("AggState", "Aggregator", "ChainAggregator", "RoundOut",
+            "flat_dim", "make_aggregator")
 
 __all__ = [
     "AggConfig", "AggKind", "HopStats", "NodeCtx", "node_step",
-    "AggState", "ChainAggregator", "RoundOut", "flat_dim", "make_aggregator",
     "ChainResult", "run_chain", "run_chain_with_topology",
+    *_AGG_API,
 ]
+
+
+def __getattr__(name):
+    if name in _AGG_API:
+        from repro.core import api
+        return getattr(api, name)
+    raise AttributeError(f"module 'repro.core' has no attribute {name!r}")

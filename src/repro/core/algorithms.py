@@ -111,11 +111,15 @@ class NodeCtx(NamedTuple):
     ``global_mask`` is the TCS mask m^t = s(w^t − w^{t−1}, Q_G) (zeros for
     non-TC algorithms). ``participate`` ∈ {0.,1.}: straggler/failure mask —
     a non-participating node forwards γ unchanged and banks its entire g̃
-    into error feedback (see DESIGN §6).
+    into error feedback (see DESIGN §6). ``q_budget`` (optional, traced
+    int32) overrides the node's *local* Top-Q budget (``q`` / ``q_local``) —
+    the bandwidth-aware path where narrow uplinks get smaller budgets; None
+    keeps the static-``q`` exact Top-Q, bit-identical to the paper setting.
     """
 
     global_mask: Array
     participate: Array
+    q_budget: Optional[Array] = None
 
 
 def index_bits(d: int) -> int:
@@ -130,6 +134,20 @@ def _bits(cfg: AggConfig, d: int, nnz_global: Array, nnz_local: Array) -> Array:
     ib = index_bits(d)
     return (cfg.omega * nnz_global.astype(jnp.float32)
             + (cfg.omega + ib) * nnz_local.astype(jnp.float32))
+
+
+def _topq_local(cfg: AggConfig, ctx: NodeCtx, x: Array, q: int) -> Array:
+    """Local Top-Q values under the node's effective budget."""
+    if ctx.q_budget is None:
+        return cfg.topq_fn()(x, q)
+    return sp.topq_dynamic(x, ctx.q_budget)
+
+
+def _topq_mask_local(cfg: AggConfig, ctx: NodeCtx, x: Array, q: int) -> Array:
+    """Local Top-Q mask under the node's effective budget."""
+    if ctx.q_budget is None:
+        return cfg.topq_mask_fn()(x, q)
+    return sp.topq_mask_dynamic(x, ctx.q_budget)
 
 
 # ---------------------------------------------------------------------------
@@ -159,7 +177,7 @@ def step_sia(cfg: AggConfig, g: Array, gamma_in: Array, e: Array,
     """Alg 1 — SoA sparse IA: local Top-Q then add."""
     d = g.shape[-1]
     gt = weight * g + e                               # line 2
-    gbar = cfg.topq_fn()(gt, cfg.q)                   # line 3
+    gbar = _topq_local(cfg, ctx, gt, cfg.q)           # line 3
     gbar = gbar * ctx.participate
     e_new = gt - gbar                                 # line 4
     gamma_out = gbar + gamma_in                       # line 5
@@ -171,7 +189,7 @@ def step_re_sia(cfg: AggConfig, g: Array, gamma_in: Array, e: Array,
     """Alg 2 — reduced-error: transmit inside union(local Top-Q, incoming)."""
     d = g.shape[-1]
     gt = weight * g + e                               # line 2
-    m_local = cfg.topq_mask_fn()(gt, cfg.q)           # line 3
+    m_local = _topq_mask_local(cfg, ctx, gt, cfg.q)   # line 3
     m_in = sp.support(gamma_in)                       # line 4
     m = sp.mask_union(m_local, m_in)                  # line 5
     gbar = m * gt * ctx.participate
@@ -186,7 +204,7 @@ def step_cl_sia(cfg: AggConfig, g: Array, gamma_in: Array, e: Array,
     d = g.shape[-1]
     gt = weight * g + e                               # line 2
     gamma_tilde = ctx.participate * gt + gamma_in     # line 3
-    gamma_out = cfg.topq_fn()(gamma_tilde, cfg.q)     # line 4
+    gamma_out = _topq_local(cfg, ctx, gamma_tilde, cfg.q)   # line 4
     e_new = gamma_tilde - gamma_out                   # line 5
     # Straggler semantics (model (a), DESIGN §6): the node computed g but
     # missed the transmit deadline → γ forwarded unchanged, the *entire*
@@ -202,7 +220,7 @@ def step_tc_sia(cfg: AggConfig, g: Array, gamma_in: Array, e: Array,
     d = g.shape[-1]
     m = ctx.global_mask                                # line 3 (precomputed)
     gt = weight * g + e                                # line 2
-    m_k = cfg.topq_mask_fn()((1 - m) * gt, cfg.q_local)   # line 4
+    m_k = _topq_mask_local(cfg, ctx, (1 - m) * gt, cfg.q_local)   # line 4
     m_in = jnp.clip(sp.support(gamma_in) - m, 0, 1)    # line 5
     mm = sp.mask_union(m, m_k, m_in)                   # line 6
     gbar = mm * gt * ctx.participate
@@ -225,7 +243,7 @@ def step_cl_tc_sia(cfg: AggConfig, g: Array, gamma_in: Array, e: Array,
     contrib = ctx.participate * gt
     gamma_g = m * (gamma_in + contrib)                 # line 4: Γ_k
     lam_tilde = (1 - m) * (gamma_in + contrib)         # line 5: Λ̃_k
-    lam = cfg.topq_fn()(lam_tilde, cfg.q_local)        # line 5: Λ_k = S(Λ̃,Q_L)
+    lam = _topq_local(cfg, ctx, lam_tilde, cfg.q_local)  # line 5: Λ_k = S(Λ̃,Q_L)
     e_new = lam_tilde - lam                            # line 6
     gamma_out = gamma_g + lam
     gamma_out = jnp.where(ctx.participate > 0, gamma_out, gamma_in)

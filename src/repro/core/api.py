@@ -1,123 +1,39 @@
-"""Public API: pytree-aware aggregator objects.
+"""Public API shims: the pytree-aware aggregator object now lives in
+:mod:`repro.agg` (topology-polymorphic plan/execute).
 
-``make_aggregator(cfg)`` returns a :class:`ChainAggregator` whose ``round``
-method performs one multi-hop aggregation round over stacked per-client
-gradients (pytrees or flat vectors) with error feedback and optional TCS,
-returning the PS-side aggregate plus exact bit accounting.
-
-The distributed (mesh) counterpart with identical semantics is
-``repro.core.ring.ring_aggregate`` — see ``tests/test_ring_shardmap.py`` for
-the equivalence proof.
+``Aggregator`` accepts any topology ``compile_plan`` understands; the names
+kept here — :class:`ChainAggregator` and :func:`make_aggregator` — are
+deprecated thin wrappers that pin the paper's identity chain, preserved so
+old call sites keep working. The distributed (mesh) counterpart with
+identical semantics is ``repro.core.ring.ring_aggregate`` — see
+``tests/test_ring_shardmap.py`` for the equivalence proof.
 """
 
 from __future__ import annotations
 
-from typing import Any, NamedTuple, Optional
+import warnings
 
-import jax
-import jax.numpy as jnp
-from jax.flatten_util import ravel_pytree
-
-from repro.core import tcs as tcs_mod
-from repro.core.algorithms import AggConfig, AggKind, HopStats
-from repro.core.chain import ChainResult, run_chain
-
-Array = jax.Array
+from repro.agg.aggregator import (AggState, Aggregator, RoundOut,  # noqa: F401
+                                  flat_dim)
+from repro.core.algorithms import AggConfig
 
 
-class AggState(NamedTuple):
-    """Cross-round aggregator state (checkpointed as part of TrainState)."""
-
-    ef: Array                        # [K, d] error-feedback memory
-    tcs_prev: Optional[Array]        # [d] w^{t-1} (TC algorithms) or None
-
-
-class RoundOut(NamedTuple):
-    aggregate: Any                   # pytree (or flat) — Σ_k D_k g_k estimate
-    state: AggState
-    stats: HopStats                  # per-hop, leaves [K]
-    total_bits: Array                # Σ_k bits — scalar float32
-
-
-def _needs_tcs(kind: AggKind) -> bool:
-    return kind in (AggKind.TC_SIA, AggKind.CL_TC_SIA)
-
-
-class ChainAggregator:
-    """Multi-hop chain aggregator for K clients over a d-dim model."""
+class ChainAggregator(Aggregator):
+    """Deprecated: use :class:`repro.agg.Aggregator` (chain is its default
+    topology)."""
 
     def __init__(self, cfg: AggConfig, num_clients: int, dim: int):
-        self.cfg = cfg
-        self.num_clients = num_clients
-        self.dim = dim
-
-    # -- state ------------------------------------------------------------
-    def init_state(self, params: Any = None, dtype=jnp.float32) -> AggState:
-        ef = jnp.zeros((self.num_clients, self.dim), dtype)
-        tcs_prev = None
-        if _needs_tcs(self.cfg.kind):
-            if params is None:
-                tcs_prev = jnp.zeros((self.dim,), dtype)
-            else:
-                tcs_prev = ravel_pytree(params)[0].astype(dtype)
-        return AggState(ef=ef, tcs_prev=tcs_prev)
-
-    # -- one round ----------------------------------------------------------
-    def round(
-        self,
-        grads: Any,                    # [K, d] array OR list/stacked pytree
-        state: AggState,
-        weights: Array,                # [K] D_k
-        *,
-        params: Any = None,            # current params (TC algorithms)
-        participate: Optional[Array] = None,
-    ) -> RoundOut:
-        flat, unravel = _as_flat_stack(grads, self.num_clients, self.dim)
-
-        global_mask = None
-        tcs_prev = state.tcs_prev
-        if _needs_tcs(self.cfg.kind):
-            if params is None:
-                raise ValueError(f"{self.cfg.kind} needs current params for "
-                                 "the TCS global mask")
-            flat_params = ravel_pytree(params)[0].astype(flat.dtype)
-            global_mask = tcs_mod.global_mask(
-                tcs_mod.TCSState(tcs_prev), flat_params, self.cfg.q_global,
-                topq_mask_fn=lambda x, q: self.cfg.topq_mask_fn()(x, q))
-            tcs_prev = flat_params
-
-        res: ChainResult = run_chain(
-            self.cfg, flat, state.ef, weights,
-            global_mask=global_mask, participate=participate)
-
-        agg = unravel(res.aggregate) if unravel is not None else res.aggregate
-        return RoundOut(
-            aggregate=agg,
-            state=AggState(ef=res.e_new, tcs_prev=tcs_prev),
-            stats=res.stats,
-            total_bits=jnp.sum(res.stats.bits),
-        )
+        warnings.warn(
+            "ChainAggregator is deprecated; use repro.agg.Aggregator, which "
+            "defaults to the chain topology and also takes trees/graphs",
+            DeprecationWarning, stacklevel=2)
+        super().__init__(cfg, num_clients, dim)
 
 
-def _as_flat_stack(grads: Any, num_clients: int, dim: int):
-    """Accept [K,d] arrays, or a pytree whose leaves have leading dim K."""
-    if isinstance(grads, jax.Array) and grads.ndim == 2:
-        assert grads.shape == (num_clients, dim), (grads.shape, num_clients, dim)
-        return grads, None
-    # stacked pytree: vmap ravel over the leading axis
-    leaves = jax.tree.leaves(grads)
-    assert all(l.shape[0] == num_clients for l in leaves), "leading dim must be K"
-    one = jax.tree.map(lambda l: l[0], grads)
-    _, unravel = ravel_pytree(one)
-    flat = jax.vmap(lambda t: ravel_pytree(t)[0])(grads)
-    assert flat.shape == (num_clients, dim)
-    return flat, unravel
-
-
-def make_aggregator(cfg: AggConfig, num_clients: int, dim: int) -> ChainAggregator:
-    return ChainAggregator(cfg, num_clients, dim)
-
-
-def flat_dim(params: Any) -> int:
-    """Total parameter count d of a pytree (the paper's model dimension)."""
-    return int(sum(jnp.size(l) for l in jax.tree.leaves(params)))
+def make_aggregator(cfg: AggConfig, num_clients: int, dim: int) -> Aggregator:
+    """Deprecated: construct :class:`repro.agg.Aggregator` directly."""
+    warnings.warn(
+        "make_aggregator is deprecated; construct repro.agg.Aggregator "
+        "directly (pass topology=... for non-chain aggregation)",
+        DeprecationWarning, stacklevel=2)
+    return Aggregator(cfg, num_clients, dim)

@@ -78,6 +78,39 @@ def nnz(x: Array) -> Array:
 
 
 # ---------------------------------------------------------------------------
+# Dynamic-budget Top-Q (traced q — per-node bandwidth-aware budgets)
+# ---------------------------------------------------------------------------
+
+def _dynamic_keep(x: Array, q: Array) -> Array:
+    """Boolean Top-q support of ``x`` for a *traced* budget ``q``.
+
+    Single source of truth for both the value and mask sparsifiers: τ = the
+    q-th largest magnitude by full sort, keep |x| ≥ τ. Ties at τ may keep
+    slightly more than q entries (same over-selection contract as
+    :func:`topq_by_threshold`); q ≤ 0 keeps nothing, q ≥ d everything.
+    """
+    d = x.shape[-1]
+    qc = jnp.clip(jnp.asarray(q, jnp.int32), 0, d)
+    mag = jnp.abs(x)
+    tau = jnp.sort(mag)[::-1][jnp.maximum(qc - 1, 0)]
+    return (mag >= tau) & (mag > 0) & (qc > 0)
+
+
+def topq_dynamic(x: Array, q: Array) -> Array:
+    """``S(x, q)`` with a traced scalar budget ``q`` (int32).
+
+    ``lax.top_k`` needs a static k, so per-node budgets (one vmapped lane
+    per aggregation-tree slot) go through :func:`_dynamic_keep` instead.
+    """
+    return jnp.where(_dynamic_keep(x, q), x, 0)
+
+
+def topq_mask_dynamic(x: Array, q: Array) -> Array:
+    """``s(x, q)`` 0/1 mask counterpart of :func:`topq_dynamic`."""
+    return _dynamic_keep(x, q).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
 # Threshold-based Top-Q (distributable)
 # ---------------------------------------------------------------------------
 

@@ -1,17 +1,21 @@
 """Multi-hop FL simulator — the paper's §VI experiment engine.
 
-K clients on a chain train a d=7850 logistic-regression model on
-(synthetic-)MNIST. Per round:
+K clients train a d=7850 logistic-regression model on (synthetic-)MNIST.
+Per round:
 
   1. every client takes one SGD step on its local minibatch → effective
      gradient g_k = w_k − w  (= −lr·∇_k);
-  2. the chain aggregates {D_k·g_k} with the configured Algorithm 1–5
-     (error feedback persists across rounds);
+  2. the round's aggregation topology — chain, permuted chain, or routed
+     constellation tree, compiled to an :class:`repro.agg.AggPlan` —
+     aggregates {D_k·g_k} with the configured Algorithm 1–5 (error feedback
+     persists across rounds);
   3. the PS applies w ← w + γ_1 / D and broadcasts.
 
-The round is one jitted function; the host loop only logs. Topology events
-(stragglers, relay failures → healed chains) enter through per-round
-``participate`` masks and ``order`` permutations.
+The round is ONE jitted function for every topology: the plan's arrays are
+traced arguments, so switching topologies per round (healed chains via
+``order_fn``, relay deaths via ``failure_schedule``, LEO re-routing via
+``topology_schedule``) re-traces only when the padded ``(L, W)`` schedule
+shape grows — plans padded to a common shape share the executable.
 """
 
 from __future__ import annotations
@@ -21,14 +25,14 @@ from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.agg import AggPlan, TopologySchedule, compile_plan, execute
 from repro.configs.paper_mnist import PaperConfig
 from repro.core import tcs as tcs_mod
 from repro.core.algorithms import AggConfig, AggKind
-from repro.core.chain import run_chain, run_chain_with_topology
 from repro.data.federated import FederatedData, client_minibatch
 from repro.fed.topology import FailureSchedule, TreeTopology
-from repro.topo.tree import AggTree, run_tree
 
 Array = jax.Array
 
@@ -82,15 +86,45 @@ class RoundLog(NamedTuple):
     err_sq: Array           # Σ_k ‖e_k‖²
 
 
+class _PlanCache:
+    """Host-side plan store keyed by topology identity, re-padded in place.
+
+    All cached plans share one ``(L, W)`` (the running elementwise max), so
+    the jitted round retraces only when a new topology *grows* the schedule
+    shape — never when flipping between already-seen topologies.
+    """
+
+    def __init__(self, num_clients: int):
+        self.k = num_clients
+        self._plans: dict = {}
+        self._shape: Optional[tuple] = None
+
+    def get(self, key, build: Callable[[], Any]) -> AggPlan:
+        plan = self._plans.get(key)
+        if plan is None:
+            plan = compile_plan(build(), num_clients=self.k)
+            shape = (plan.shape if self._shape is None else
+                     (max(self._shape[0], plan.shape[0]),
+                      max(self._shape[1], plan.shape[1])))
+            self._shape = shape
+            self._plans[key] = plan
+            # a growing shape re-pads everything already cached so the whole
+            # cache keeps sharing one specialization
+            self._plans = {kk: pp.pad(shape)
+                           for kk, pp in self._plans.items()}
+        return self._plans[key]
+
+
 @dataclasses.dataclass
 class Simulator:
-    """Multi-hop FL simulator over a chain (default) or an aggregation tree.
+    """Multi-hop FL simulator over any aggregation topology.
 
-    With ``tree_topology`` set, rounds aggregate over the routed
-    constellation tree via :func:`repro.topo.tree.run_tree`; relay deaths
-    from a ``failure_schedule`` passed to :meth:`run` re-route the tree
-    (re-rooting the severed subtree through surviving ISLs — each distinct
-    dead-set is one jit specialization, cached across rounds).
+    The default topology is the paper's identity chain. ``tree_topology``
+    routes a constellation graph instead; relay deaths from a
+    ``failure_schedule`` passed to :meth:`run` re-route the tree (re-rooting
+    the severed subtree through surviving ISLs). Every topology goes through
+    ``repro.agg.compile_plan`` into one shared jitted round — per-dead-set
+    recompiles of the old engine collapse into a host-side plan lookup.
     """
 
     pc: PaperConfig
@@ -113,14 +147,18 @@ class Simulator:
                         tcs_prev=flat, rng=jax.random.PRNGKey(seed))
 
     # -- one jitted round ---------------------------------------------------
-    def round_fn(self, tree: Optional[AggTree] = None) -> Callable:
-        """One-round closure; ``tree`` switches chain → tree aggregation."""
+    def round_fn(self) -> Callable:
+        """One-round closure ``(state, plan, participate) -> (state, log)``.
+
+        Topology-polymorphic: the plan is a traced argument, so one jit of
+        this closure serves chains, healed chains, and routed trees alike.
+        """
         pc, agg_cfg, k = self.pc, self.agg, self.k
         fed, weights, lr = self.fed, self.weights, self.local_lr
         needs_tcs = agg_cfg.kind in (AggKind.TC_SIA, AggKind.CL_TC_SIA)
 
-        def one_round(state: SimState, participate: Optional[Array] = None,
-                      order: Optional[Array] = None):
+        def one_round(state: SimState, plan: AggPlan,
+                      participate: Optional[Array] = None):
             rng, kb = jax.random.split(state.rng)
             params = unflatten_lr(state.flat_w, pc)
             bx, by = client_minibatch(fed, kb, pc.batch_size)
@@ -140,21 +178,12 @@ class Simulator:
                     agg_cfg.q_global)
                 tcs_prev = state.flat_w
 
-            if tree is not None:
-                res = run_tree(agg_cfg, tree, g, state.ef, weights,
-                               global_mask=global_mask,
-                               participate=participate)
-            elif order is None:
-                res = run_chain(agg_cfg, g, state.ef, weights,
-                                global_mask=global_mask,
-                                participate=participate)
-            else:
-                res = run_chain_with_topology(
-                    agg_cfg, g, state.ef, weights, order,
-                    global_mask=global_mask, participate=participate)
+            res = execute(agg_cfg, plan, g, state.ef, weights,
+                          global_mask=global_mask, participate=participate)
 
-            d_total = jnp.sum(weights) if participate is None else \
-                jnp.maximum(jnp.sum(weights * participate), 1e-9)
+            alive = jnp.asarray(plan.alive, weights.dtype)
+            part = alive if participate is None else participate * alive
+            d_total = jnp.maximum(jnp.sum(weights * part), 1e-9)
             flat_new = state.flat_w + res.aggregate / d_total
 
             new_state = SimState(round=state.round + 1, flat_w=flat_new,
@@ -175,39 +204,60 @@ class Simulator:
     def run(self, rounds: int, *, seed: int = 0, eval_every: int = 10,
             test_x: Optional[Array] = None, test_y: Optional[Array] = None,
             participate_fn: Optional[Callable] = None,
-            failure_schedule: Optional[FailureSchedule] = None):
+            failure_schedule: Optional[FailureSchedule] = None,
+            order_fn: Optional[Callable] = None,
+            topology_schedule: Optional[TopologySchedule] = None):
         """→ dict of curves (accuracy, loss, bits/round).
 
-        ``failure_schedule`` (tree mode only): relay deaths re-route the
-        aggregation tree around the dead node and zero its participation;
-        its banked EF mass transmits after recovery, as on the chain.
+        Per-round topology sources (mutually exclusive):
+
+        * ``failure_schedule`` (needs ``tree_topology``): relay deaths
+          re-route the aggregation tree around the dead node and zero its
+          participation; its banked EF mass transmits after recovery, as on
+          the chain;
+        * ``order_fn(r, state) -> [K] int`` permutation: healed/rotated
+          chain visiting orders, compiled and cached per distinct order;
+        * ``topology_schedule``: a pre-padded
+          :class:`~repro.agg.TopologySchedule` — graph-per-round or link
+          up/down events, one jit specialization for the whole schedule.
         """
         state = self.init(seed)
         topo = self.tree_topology
         if failure_schedule is not None and topo is None:
             raise ValueError("failure_schedule needs tree_topology (chain "
-                             "failures go through participate_fn + order)")
-        steps: dict = {}
+                             "failures go through participate_fn + order_fn)")
+        if order_fn is not None and (topo is not None
+                                     or topology_schedule is not None):
+            raise ValueError("order_fn is a chain-mode knob; trees and "
+                             "schedules carry their own topology")
+        if topology_schedule is not None and topo is not None:
+            raise ValueError("pass either tree_topology or "
+                             "topology_schedule, not both")
 
-        def step_for(dead: tuple):
-            if dead not in steps:
-                tree = None if topo is None else topo.tree(dead=dead)
-                alive = None if topo is None else topo.alive_mask(tree, dead)
-                steps[dead] = (jax.jit(self.round_fn(tree)), alive)
-            return steps[dead]
+        step = jax.jit(self.round_fn())
+        cache = _PlanCache(self.k)
+
+        def plan_for(r: int, state: SimState) -> AggPlan:
+            if topology_schedule is not None:
+                return topology_schedule.plan_at(r)
+            if topo is not None:
+                dead = (tuple(failure_schedule.dead_at(r))
+                        if failure_schedule is not None else ())
+                return cache.get(("tree", dead), lambda: topo.tree(dead=dead))
+            if order_fn is not None:
+                order = np.asarray(order_fn(r, state), np.int32)
+                return cache.get(("order", tuple(order.tolist())),
+                                 lambda: order)
+            return cache.get(("chain",), lambda: self.k)
 
         accs, losses, bits, nnzs = [], [], [], []
         for r in range(rounds):
-            dead = (tuple(failure_schedule.dead_at(r))
-                    if failure_schedule is not None else ())
-            step, alive = step_for(dead)
+            plan = plan_for(r, state)
             part = None
             if participate_fn is not None:
                 part = participate_fn(r, state)
-            if alive is not None and (part is not None or alive.min() < 1):
-                part = jnp.asarray(alive) if part is None \
-                    else part * jnp.asarray(alive)
-            state, log = step(state, part)
+            # stranded/dead clients are masked inside execute via plan.alive
+            state, log = step(state, plan, part)
             losses.append(float(log.loss))
             bits.append(float(log.bits))
             nnzs.append(float(log.nnz))

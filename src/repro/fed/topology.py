@@ -33,6 +33,11 @@ class ChainTopology:
         return np.asarray([i for i in range(self.num_clients)
                            if i not in set(dead)], dtype=np.int32)
 
+    def plan(self, *, pad_to: Optional[tuple] = None):
+        """Compiled :class:`repro.agg.AggPlan` of the identity chain."""
+        from repro.agg import compile_plan
+        return compile_plan(self.num_clients, pad_to=pad_to)
+
 
 @dataclasses.dataclass
 class TreeTopology:
@@ -64,6 +69,25 @@ class TreeTopology:
             return widest_path_tree(self.graph, exclude=exclude)
         return shortest_path_tree(self.graph, metric=self.routing,
                                   exclude=exclude)
+
+    def plan(self, dead: tuple = (), *, pad_to: Optional[tuple] = None,
+             bandwidth_aware: bool = False, cfg=None):
+        """Compiled :class:`repro.agg.AggPlan` of the routed tree.
+
+        ``bandwidth_aware`` attaches per-client Top-Q budgets scaled by each
+        uplink's bandwidth (needs ``cfg`` for the base budget). The plan's
+        ``alive`` mask already zeros dead/stranded clients — ``execute``
+        folds it into ``participate``.
+        """
+        from repro.agg import bandwidth_budgets, compile_plan
+        tree = self.tree(dead=dead)
+        qb = None
+        if bandwidth_aware:
+            if cfg is None:
+                raise ValueError("bandwidth_aware plans need cfg for the "
+                                 "base Top-Q budget")
+            qb = bandwidth_budgets(cfg, tree)
+        return compile_plan(tree, pad_to=pad_to, q_budget=qb)
 
     def alive_mask(self, tree: AggTree, dead: tuple = ()) -> np.ndarray:
         """[K] 0/1 — zero for dead clients and stranded (unreachable) ones."""

@@ -1,27 +1,24 @@
 """Production mesh construction (function, not constant — importing this
-module never touches jax device state)."""
+module never touches jax device state). Mesh/axis-type API drift is bridged
+by :mod:`repro.compat`, so these run on 0.4.x and 0.6+ runtimes alike."""
 
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+from repro import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16×16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def make_mesh(shape, axes):
     """Arbitrary (test-sized) mesh with the same axis conventions."""
-    return jax.make_mesh(tuple(shape), tuple(axes),
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return compat.make_mesh(tuple(shape), tuple(axes))
 
 
 def make_host_mesh():
     """Single-device mesh (CPU smoke tests / examples)."""
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    return compat.make_mesh((1, 1), ("data", "model"))

@@ -12,6 +12,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.configs import ARCHS, get_config
 from repro.launch.mesh import make_mesh
 from repro.models import model as model_mod
@@ -31,7 +32,7 @@ def main() -> None:
     mesh = make_mesh((len(jax.devices()), 1), ("data", "model"))
     max_len = args.prompt_len + args.gen
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         params = model_mod.init_params(cfg, jax.random.PRNGKey(args.seed))
         prompts = jax.random.randint(jax.random.PRNGKey(1),
                                      (args.batch, args.prompt_len), 0,

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import checkpoint as ckpt
+from repro import compat
 from repro.configs import ARCHS, get_config
 from repro.core.algorithms import AggConfig, AggKind
 from repro.data.synthetic import lm_batch, make_bigram_lm
@@ -66,7 +67,7 @@ def main() -> None:
         ef_dtype="float32" if args.smoke else "bfloat16",
     )
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         state = init_state(cfg, tc, mesh, jax.random.PRNGKey(args.seed))
         shardings = state_shardings(cfg, tc, mesh)
         state = jax.device_put(state, shardings)

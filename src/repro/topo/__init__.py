@@ -18,6 +18,9 @@ inter-satellite links (ISLs). This subsystem generalizes the linear chain of
 Closed-form tree communication costs live in :mod:`repro.core.comm_cost`
 (``*_tree`` variants); federated-simulator wiring (tree scenarios, relay
 failure → re-rooting) in :mod:`repro.fed.topology` / :mod:`repro.fed.simulator`.
+Trees (and chains, and graphs) compile into canonical padded level-schedule
+plans via :mod:`repro.agg` — ``run_tree`` is a thin wrapper over
+``compile_plan`` + ``execute`` there.
 """
 
 from repro.topo.graph import (ConstellationGraph, grid_graph, path_graph,

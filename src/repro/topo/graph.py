@@ -86,6 +86,23 @@ class ConstellationGraph:
             adj[v].append((u, idx))
         return adj
 
+    def without_links(self, links: Iterable[tuple]) -> "ConstellationGraph":
+        """Copy of the graph with the given ``(u, v)`` links removed.
+
+        Link endpoints are canonicalized (order-insensitive); unknown links
+        are ignored. This is the LEO link-outage primitive: a handover or
+        occlusion drops an ISL while both satellites stay up (contrast
+        ``adjacency(exclude=...)``, which drops whole nodes).
+        """
+        down = {(min(int(u), int(v)), max(int(u), int(v))) for u, v in links}
+        keep = [i for i, (u, v) in enumerate(self.edges)
+                if (int(u), int(v)) not in down]
+        return ConstellationGraph(num_nodes=self.num_nodes,
+                                  edges=self.edges[keep],
+                                  bandwidth_bps=self.bandwidth_bps[keep],
+                                  latency_s=self.latency_s[keep],
+                                  ps=self.ps)
+
     def is_connected(self, exclude: Iterable[int] = ()) -> bool:
         dead = set(exclude)
         alive = [v for v in range(self.num_nodes) if v not in dead]

@@ -15,9 +15,11 @@ Execution: nodes are grouped by depth into levels; a ``lax.scan`` walks
 levels deepest-first while a ``vmap`` over the level width runs every node of
 the level concurrently — the tree-parallel analogue of the chain's
 ``reverse=True`` scan (wall-clock O(depth) node steps instead of O(K)).
-Schedules are host-side static per tree, so each distinct tree is one jit
-specialization — rebuilding after a relay failure is a recompile, matching
-how topology changes work elsewhere in the repo (healed chain orders).
+:func:`run_tree` is a thin wrapper over :mod:`repro.agg` — the level
+schedule becomes an :class:`~repro.agg.plan.AggPlan` whose arrays are traced
+jit arguments, so jit specializations are keyed by the padded ``(L, W)``
+shape, not by tree identity: rebuilding after a relay failure reuses the
+compiled round whenever the healed schedule fits the same shape.
 """
 
 from __future__ import annotations
@@ -26,10 +28,9 @@ import dataclasses
 from typing import NamedTuple, Optional, Sequence
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.algorithms import AggConfig, HopStats, NodeCtx, node_step
+from repro.core.algorithms import AggConfig, HopStats
 
 Array = jax.Array
 
@@ -186,53 +187,19 @@ def run_tree(
     Same contract as :func:`repro.core.chain.run_chain` plus the ``tree``
     argument; ``run_tree(cfg, path_tree(K), ...)`` is bit-exact to
     ``run_chain(cfg, ...)``.
+
+    Thin wrapper over the plan/execute API (:mod:`repro.agg`): the tree is
+    compiled to its canonical level-schedule plan and run through the single
+    ``execute`` entry point. Note ``execute`` folds the tree's stranded-stub
+    mask (``reachable``) into ``participate`` automatically.
     """
-    k, d = grads.shape
-    if tree.num_clients != k:
-        raise ValueError(f"tree has {tree.num_clients} clients, grads {k}")
-    if global_mask is None:
-        global_mask = jnp.zeros((d,), grads.dtype)
-    if participate is None:
-        participate = jnp.ones((k,), grads.dtype)
-    sched = build_schedule(tree)
-    step = node_step(cfg)
+    # function-level import: repro.agg.plan imports AggTree from this module
+    from repro.agg.plan import compile_plan, execute
 
-    # one zero dummy row (index K) backs the padding slots
-    zrow = jnp.zeros((1, d), grads.dtype)
-    g_ext = jnp.concatenate([grads, zrow])
-    e_ext = jnp.concatenate([e, zrow])
-    w_ext = jnp.concatenate([weights, jnp.zeros((1,), weights.dtype)])
-    p_ext = jnp.concatenate(
-        [participate, jnp.zeros((1,), participate.dtype)])
-
-    def one(g_row, gamma_in, e_row, w_row, p_row):
-        ctx = NodeCtx(global_mask=global_mask, participate=p_row)
-        return step(cfg, g_row, gamma_in, e_row, w_row, ctx)
-
-    vstep = jax.vmap(one)
-
-    def body(inbox, xs):
-        ids, mask, par = xs
-        gamma_out, e_new, stats = vstep(
-            g_ext[ids], inbox[ids], e_ext[ids], w_ext[ids], p_ext[ids])
-        # children's partial aggregates merge at each parent; padding slots
-        # are masked to 0 and target the trash row, so they are no-ops
-        inbox = inbox.at[par].add(gamma_out * mask[:, None])
-        return inbox, (e_new, stats)
-
-    # inbox rows: 0..K−1 per-client incoming sums, K = PS, K+1 = trash
-    inbox0 = jnp.zeros((k + 2, d), grads.dtype)
-    inbox, (e_lvl, st_lvl) = jax.lax.scan(
-        body, inbox0,
-        (jnp.asarray(sched.node_id), jnp.asarray(sched.slot_mask),
-         jnp.asarray(sched.parent_row)))
-
-    # scan outputs are [L, W, ...] in schedule order → client index order
-    pos = jnp.asarray(sched.flat_pos)
-    e_new = e_lvl.reshape(-1, d)[pos]
-    stats = jax.tree.map(
-        lambda s: s.reshape((-1,) + s.shape[2:])[pos], st_lvl)
-    return TreeResult(aggregate=inbox[k], e_new=e_new, stats=stats)
+    res = execute(cfg, compile_plan(tree), grads, e, weights,
+                  global_mask=global_mask, participate=participate)
+    return TreeResult(aggregate=res.aggregate, e_new=res.e_new,
+                      stats=res.stats)
 
 
 # ---------------------------------------------------------------------------

@@ -32,6 +32,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.configs.base import ModelConfig
 from repro.core import ring as ring_mod
 from repro.core import sparsify as sp
@@ -122,9 +123,9 @@ def _master_from_params(cfg: ModelConfig, mesh, layout: FlatLayout, params):
             return jax.lax.dynamic_slice(col, (r * seg,), (seg,))
         return col
 
-    return jax.shard_map(
+    return compat.shard_map(
         fn, mesh=mesh, in_specs=(layout.param_in_specs(),),
-        out_specs=flat_spec(mesh), axis_names=manual, check_vma=False,
+        out_specs=flat_spec(mesh), axis_names=manual,
     )(params)
 
 
@@ -262,7 +263,7 @@ def build_train_step(cfg: ModelConfig, tc: TrainConfig, mesh):
             participate = jnp.ones((k_dp,), jnp.float32)
 
         # phase 1 — per-client grads (model axis auto inside)
-        grads_stacked, loss = jax.shard_map(
+        grads_stacked, loss = compat.shard_map(
             per_client,
             mesh=mesh,
             in_specs=(jax.tree.map(lambda _: P(), state.params),
@@ -271,7 +272,6 @@ def build_train_step(cfg: ModelConfig, tc: TrainConfig, mesh):
             out_specs=(jax.tree.map(
                 lambda l: P(dp, *([None] * l.ndim)), state.params), P()),
             axis_names=set(dp),
-            check_vma=False,
         )(state.params, batch)
 
         # phase 2 — ring aggregation (manual over every axis; the in_specs
@@ -279,7 +279,7 @@ def build_train_step(cfg: ModelConfig, tc: TrainConfig, mesh):
         # model-axis grad all-reduce for model-replicated leaves)
         params_in = state.params
         prev_in = state.tcs_prev if needs_tcs else state.params
-        agg_flat, ef_new, stats = jax.shard_map(
+        agg_flat, ef_new, stats = compat.shard_map(
             ring_fn,
             mesh=mesh,
             in_specs=(layout.grads_in_specs(dp), P(dp, "model"), P(dp),
@@ -289,7 +289,6 @@ def build_train_step(cfg: ModelConfig, tc: TrainConfig, mesh):
                        jax.tree.map(lambda _: P(), ring_mod.RingStats(
                            0., 0., 0.))),
             axis_names=manual_axes,
-            check_vma=False,
         )(grads_stacked, state.ef, weights, participate, params_in, prev_in)
 
         # phase 3 — ZeRO flat optimizer
@@ -303,10 +302,9 @@ def build_train_step(cfg: ModelConfig, tc: TrainConfig, mesh):
             master_new, NamedSharding(mesh, fs))
 
         # downlink — w^{t+1} broadcast
-        params_new = jax.shard_map(
+        params_new = compat.shard_map(
             downlink_fn, mesh=mesh, in_specs=(fs,),
             out_specs=layout.param_out_specs(), axis_names=manual_axes,
-            check_vma=False,
         )(master_new)
 
         tcs_prev_new = state.tcs_prev

@@ -1,0 +1,345 @@
+"""repro.agg: plan/execute equivalence, schedules, budgets, jit amortization.
+
+Key contracts (ISSUE acceptance criteria):
+* ``execute(compile_plan(t), ...)`` is **bit-exact** to ``run_chain`` /
+  ``run_chain_with_topology`` / ``run_tree`` for all five Algorithm 1–5
+  node steps, including plans padded to a larger ``(L, W)``;
+* a ``TopologySchedule`` over ≥3 distinct graphs triggers exactly one jit
+  specialization (traced-side-effect counter);
+* bandwidth-scaled per-client Top-Q budgets strictly reduce total §V bits
+  vs the uniform budget on a heterogeneous-bandwidth graph;
+* the simulator's ``order_fn`` (healed/permuted chains) actually reaches
+  the aggregation path.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.agg import (Aggregator, TopologySchedule, bandwidth_budgets,
+                       compile_plan, execute)
+from repro.core.algorithms import AggConfig, AggKind, NodeCtx, node_step
+from repro.core.chain import run_chain, run_chain_with_topology
+from repro.topo import graph as tg
+from repro.topo.routing import shortest_path_tree, widest_path_tree
+from repro.topo.tree import PS, AggTree, run_tree
+
+ALL_KINDS = [AggKind.SIA, AggKind.RE_SIA, AggKind.CL_SIA, AggKind.TC_SIA,
+             AggKind.CL_TC_SIA]
+
+K, D = 7, 96
+
+
+def _inputs(k=K, d=D, seed=0):
+    g = jax.random.normal(jax.random.PRNGKey(seed), (k, d))
+    e = 0.1 * jax.random.normal(jax.random.PRNGKey(seed + 1), (k, d))
+    w = jnp.ones((k,), jnp.float32)
+    return g, e, w
+
+
+def _cfg(kind, q=11):
+    return AggConfig(kind=kind, q=q)
+
+
+def _gmask(cfg, d):
+    if cfg.kind in (AggKind.TC_SIA, AggKind.CL_TC_SIA):
+        return jnp.zeros((d,)).at[jnp.arange(cfg.q_global)].set(1.0)
+    return None
+
+
+def _assert_same(a, b):
+    np.testing.assert_array_equal(np.asarray(a.aggregate),
+                                  np.asarray(b.aggregate))
+    np.testing.assert_array_equal(np.asarray(a.e_new), np.asarray(b.e_new))
+    np.testing.assert_array_equal(np.asarray(a.stats.bits),
+                                  np.asarray(b.stats.bits))
+    np.testing.assert_array_equal(np.asarray(a.stats.nnz_out),
+                                  np.asarray(b.stats.nnz_out))
+
+
+# ---------------------------------------------------------------------------
+# execute(compile_plan(·)) ≡ run_chain / run_chain_with_topology / run_tree
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ALL_KINDS + [AggKind.DENSE_IA])
+def test_chain_plan_bit_exact(kind):
+    cfg = _cfg(kind)
+    g, e, w = _inputs()
+    gm = _gmask(cfg, D)
+    chain = run_chain(cfg, g, e, w, global_mask=gm)
+    plan = compile_plan(K)
+    assert plan.shape == (K, 1)
+    _assert_same(chain, execute(cfg, plan, g, e, w, global_mask=gm))
+
+
+@pytest.mark.parametrize("kind", ALL_KINDS)
+def test_padded_chain_plan_bit_exact(kind):
+    """Padding slots are no-ops: same bits, same EF, same aggregate."""
+    cfg = _cfg(kind)
+    g, e, w = _inputs(seed=2)
+    gm = _gmask(cfg, D)
+    chain = run_chain(cfg, g, e, w, global_mask=gm)
+    padded = compile_plan(K, pad_to=(K + 4, 3))
+    assert padded.shape == (K + 4, 3)
+    _assert_same(chain, execute(cfg, padded, g, e, w, global_mask=gm))
+
+
+@pytest.mark.parametrize("kind", ALL_KINDS)
+def test_permuted_chain_plan_bit_exact(kind):
+    cfg = _cfg(kind)
+    g, e, w = _inputs(seed=3)
+    gm = _gmask(cfg, D)
+    order = np.asarray([3, 1, 0, 6, 4, 2, 5], np.int32)
+    want = run_chain_with_topology(cfg, g, e, w, jnp.asarray(order),
+                                   global_mask=gm)
+    got = execute(cfg, compile_plan(order), g, e, w, global_mask=gm)
+    _assert_same(want, got)
+
+
+@pytest.mark.parametrize("kind", ALL_KINDS)
+def test_routed_tree_padded_plan_bit_exact(kind):
+    """Padded tree plan ≡ run_tree (natural shape) on a routed grid."""
+    cfg = _cfg(kind)
+    tree = shortest_path_tree(tg.grid_graph(2, 3))
+    k = tree.num_clients
+    g, e, w = _inputs(k=k, seed=4)
+    gm = _gmask(cfg, D)
+    want = run_tree(cfg, tree, g, e, w, global_mask=gm)
+    pad = (tree.max_depth() + 2, k)
+    got = execute(cfg, compile_plan(tree, pad_to=pad), g, e, w,
+                  global_mask=gm)
+    _assert_same(want, got)
+
+
+def test_stragglers_through_plan():
+    cfg = _cfg(AggKind.CL_SIA)
+    g, e, w = _inputs(seed=5)
+    part = jnp.asarray([1, 0, 1, 1, 0, 1, 1], jnp.float32)
+    chain = run_chain(cfg, g, e, w, participate=part)
+    got = execute(cfg, compile_plan(K), g, e, w, participate=part)
+    _assert_same(chain, got)
+
+
+def test_compile_plan_rejects_partial_order():
+    with pytest.raises(ValueError, match="permutation"):
+        compile_plan(np.asarray([0, 2]), num_clients=3)
+
+
+def test_plan_is_a_pytree():
+    plan = compile_plan(K, pad_to=(K + 1, 2))
+    leaves, treedef = jax.tree.flatten(plan)
+    again = jax.tree.unflatten(treedef, leaves)
+    assert again.shape == plan.shape
+    assert again.num_clients == plan.num_clients
+    np.testing.assert_array_equal(np.asarray(again.node_id),
+                                  np.asarray(plan.node_id))
+
+
+# ---------------------------------------------------------------------------
+# Pure-python reference (independent oracle for tree semantics)
+# ---------------------------------------------------------------------------
+
+def _ref_tree(cfg, tree, g, e, w, global_mask=None):
+    """Node-by-node recursion with the raw node steps — no scan, no vmap."""
+    k, d = g.shape
+    gm = jnp.zeros((d,), g.dtype) if global_mask is None else global_mask
+    step = node_step(cfg)
+    inbox = [jnp.zeros((d,), g.dtype) for _ in range(k + 1)]  # [k] = PS
+    e_new = [None] * k
+    bits = [None] * k
+    depth = tree.depths()
+    for i in sorted(range(k), key=lambda i: (-depth[i], i)):
+        ctx = NodeCtx(global_mask=gm, participate=jnp.float32(1))
+        gamma, e_i, st = step(cfg, g[i], inbox[i], e[i], w[i], ctx)
+        e_new[i] = e_i
+        bits[i] = st.bits
+        p = tree.parent[i]
+        inbox[k if p == PS else p] = inbox[k if p == PS else p] + gamma
+    return inbox[k], jnp.stack(e_new), jnp.stack(bits)
+
+
+@pytest.mark.parametrize("kind", ALL_KINDS)
+def test_tree_plan_matches_python_reference(kind):
+    cfg = _cfg(kind)
+    #       PS ── 0 ── 1 ─┬─ 2
+    #              │      └─ 3 ── 4
+    #              └─ 5 ── 6
+    tree = AggTree(parent=(PS, 0, 1, 1, 3, 0, 5))
+    g, e, w = _inputs(seed=6)
+    gm = _gmask(cfg, D)
+    agg_ref, e_ref, bits_ref = _ref_tree(cfg, tree, g, e, w, gm)
+    got = execute(cfg, compile_plan(tree), g, e, w, global_mask=gm)
+    np.testing.assert_allclose(np.asarray(got.aggregate),
+                               np.asarray(agg_ref), rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(got.e_new), np.asarray(e_ref),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(got.stats.bits),
+                               np.asarray(bits_ref), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# TopologySchedule: one jit specialization for many graphs
+# ---------------------------------------------------------------------------
+
+def test_schedule_single_jit_specialization():
+    """5 plans from ≥3 distinct graphs padded to one (L, W) → one trace."""
+    k = 12
+    graphs = [tg.path_graph(k), tg.star_graph(k), tg.grid_graph(3, 4),
+              tg.walker_delta(3, 4), tg.random_geometric(k, seed=7)]
+    sched = TopologySchedule.from_topologies(graphs)
+    assert len(sched.plans) == 5
+    assert len({p.shape for p in sched.plans}) == 1
+
+    cfg = _cfg(AggKind.CL_SIA, q=9)
+    g, e, w = _inputs(k=k, seed=8)
+    traces = []
+
+    @jax.jit
+    def round_step(plan, g, e, w):
+        traces.append(1)            # runs at trace time only
+        return execute(cfg, plan, g, e, w).aggregate
+
+    outs = [round_step(sched.plan_at(r), g, e, w) for r in range(10)]
+    assert len(traces) == 1
+    assert all(o.shape == (D,) for o in outs)
+
+
+def test_schedule_from_link_events_reroutes():
+    g = tg.grid_graph(2, 3)
+    # drop the (1, 2) ISL for rounds 2-3; every client must stay reachable
+    sched = TopologySchedule.from_link_events(
+        g, {2: ([(1, 2)], []), 4: ([], [(1, 2)])}, rounds=6)
+    assert len(sched.plans) == 2          # base route + re-route, deduped
+    assert sched.round_index == (0, 0, 1, 1, 0, 0)
+    assert len({p.shape for p in sched.plans}) == 1
+    for p in sched.plans:
+        assert float(np.asarray(p.alive).min()) == 1.0
+
+
+def test_schedule_rejects_mixed_shapes():
+    p1 = compile_plan(3)
+    p2 = compile_plan(5)
+    with pytest.raises(ValueError, match="share one"):
+        TopologySchedule(plans=(p1, p2), round_index=(0, 1))
+
+
+# ---------------------------------------------------------------------------
+# Bandwidth-aware budgets
+# ---------------------------------------------------------------------------
+
+def test_bandwidth_budgets_reduce_bits():
+    """Narrow uplinks get smaller Top-Q budgets → total bits strictly drop
+    vs the uniform budget on a heterogeneous-bandwidth constellation."""
+    g = tg.walker_delta(3, 4)      # intra 200M / inter 100M / ground 50M bps
+    tree = widest_path_tree(g)
+    cfg = _cfg(AggKind.CL_SIA, q=9)
+    qb = bandwidth_budgets(cfg, tree)
+    bw = np.asarray(tree.uplink_bw_bps)
+    assert qb.shape == (tree.num_clients,)
+    assert qb.max() == cfg.q                      # widest link: full budget
+    assert qb[bw < bw.max()].max() < cfg.q        # narrow links: scaled down
+    grads, e, w = _inputs(k=tree.num_clients, seed=9)
+    uni = execute(cfg, compile_plan(tree), grads, e, w)
+    bwa = execute(cfg, compile_plan(tree, q_budget=qb), grads, e, w)
+    assert float(jnp.sum(bwa.stats.bits)) < float(jnp.sum(uni.stats.bits))
+
+
+def test_bandwidth_budget_caps_nnz_per_hop():
+    g = tg.walker_delta(3, 4)
+    tree = widest_path_tree(g)
+    cfg = _cfg(AggKind.CL_SIA, q=9)
+    qb = bandwidth_budgets(cfg, tree)
+    grads, e, w = _inputs(k=tree.num_clients, seed=10)
+    res = execute(cfg, compile_plan(tree, q_budget=qb), grads, e, w)
+    nnz = np.asarray(res.stats.nnz_out)
+    assert (nnz <= np.asarray(qb)).all(), (nnz, qb)
+
+
+# ---------------------------------------------------------------------------
+# Aggregator object + deprecated wrappers
+# ---------------------------------------------------------------------------
+
+def test_aggregator_is_topology_polymorphic():
+    tree = shortest_path_tree(tg.grid_graph(2, 3))
+    k = tree.num_clients
+    cfg = _cfg(AggKind.CL_SIA)
+    g, e, w = _inputs(k=k, seed=11)
+    agg = Aggregator(cfg, k, D, topology=tree)
+    out = agg.round(g, agg.init_state(), w)
+    want = run_tree(cfg, tree, g, jnp.zeros((k, D)), w)
+    np.testing.assert_array_equal(np.asarray(out.aggregate),
+                                  np.asarray(want.aggregate))
+    # per-round plan override (schedule-driven training)
+    out2 = agg.round(g, agg.init_state(), w, plan=compile_plan(k))
+    want2 = run_chain(cfg, g, jnp.zeros((k, D)), w)
+    np.testing.assert_array_equal(np.asarray(out2.aggregate),
+                                  np.asarray(want2.aggregate))
+
+
+def test_deprecated_wrappers_still_work():
+    from repro.core.api import ChainAggregator, make_aggregator
+    g, e, w = _inputs()
+    with pytest.warns(DeprecationWarning):
+        agg = make_aggregator(_cfg(AggKind.SIA), K, D)
+    out = agg.round(g, agg.init_state(), w)
+    want = run_chain(_cfg(AggKind.SIA), g, jnp.zeros((K, D)), w)
+    np.testing.assert_array_equal(np.asarray(out.aggregate),
+                                  np.asarray(want.aggregate))
+    with pytest.warns(DeprecationWarning):
+        ChainAggregator(_cfg(AggKind.SIA), K, D)
+
+
+# ---------------------------------------------------------------------------
+# Simulator wiring: order_fn (the previously-unreachable chain permutations)
+# ---------------------------------------------------------------------------
+
+def _sim(k=6, kind=AggKind.CL_SIA):
+    from repro.configs import PAPER
+    from repro.data.federated import partition_iid
+    from repro.data.synthetic import make_synthetic_mnist
+    from repro.fed.simulator import Simulator
+
+    pc = dataclasses.replace(PAPER, num_clients=k)
+    train = make_synthetic_mnist(jax.random.PRNGKey(0), k * 40)
+    fed = partition_iid(jax.random.PRNGKey(2), train, k)
+    return Simulator(pc, AggConfig(kind=kind, q=pc.q), fed, local_lr=pc.lr)
+
+
+def test_simulator_order_fn_identity_matches_default():
+    k = 6
+    base = _sim(k).run(5, seed=1)
+    perm = _sim(k).run(5, seed=1,
+                       order_fn=lambda r, s: np.arange(k, dtype=np.int32))
+    np.testing.assert_array_equal(base["loss"], perm["loss"])
+    np.testing.assert_array_equal(base["bits"], perm["bits"])
+
+
+def test_simulator_order_fn_rotating_chain():
+    """Rotating visiting orders (healed-chain machinery) reach the
+    aggregation path and still train; CL-SIA bits stay constant-length."""
+    k = 6
+    rng = np.random.default_rng(0)
+    orders = [rng.permutation(k).astype(np.int32) for _ in range(3)]
+    out = _sim(k).run(9, seed=1, order_fn=lambda r, s: orders[r % 3])
+    assert out["loss"][-1] < out["loss"][0]
+    assert len(set(out["bits"][2:])) == 1     # constant-length property
+
+
+def test_simulator_order_fn_guardrails():
+    sim = _sim(4)
+    sched = TopologySchedule.from_topologies([4, 4])
+    with pytest.raises(ValueError, match="order_fn"):
+        sim.run(2, order_fn=lambda r, s: np.arange(4),
+                topology_schedule=sched)
+
+
+def test_simulator_topology_schedule_mode():
+    k = 6
+    sched = TopologySchedule.from_topologies(
+        [tg.path_graph(k), tg.star_graph(k), tg.grid_graph(2, 3)])
+    out = _sim(k).run(6, seed=1, topology_schedule=sched)
+    assert out["loss"][-1] < out["loss"][0]
+    assert len(out["bits"]) == 6

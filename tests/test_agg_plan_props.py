@@ -1,0 +1,78 @@
+"""Property test (hypothesis): ``execute(compile_plan(t), ...)`` is
+bit-exact to ``run_chain``/``run_chain_with_topology`` on random visiting
+orders and to ``run_tree`` on random attachment trees, for all five
+algorithms, including plans padded to a larger ``(L, W)``."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.agg import compile_plan, execute
+from repro.core.algorithms import AggConfig, AggKind
+from repro.core.chain import run_chain, run_chain_with_topology
+from repro.topo.tree import PS, AggTree, run_tree
+
+ALL_KINDS = [AggKind.SIA, AggKind.RE_SIA, AggKind.CL_SIA, AggKind.TC_SIA,
+             AggKind.CL_TC_SIA]
+
+D = 32
+
+
+def _gmask(cfg, d):
+    if cfg.kind in (AggKind.TC_SIA, AggKind.CL_TC_SIA):
+        return jnp.zeros((d,)).at[jnp.arange(cfg.q_global)].set(1.0)
+    return None
+
+
+@settings(max_examples=20, deadline=None)
+@given(data=st.data(),
+       kind=st.sampled_from(ALL_KINDS),
+       seed=st.integers(0, 2**16))
+def test_plan_execute_bit_exact_on_random_topologies(data, kind, seed):
+    cfg = AggConfig(kind=kind, q=7)
+    k = data.draw(st.integers(2, 8), label="k")
+    g = jax.random.normal(jax.random.PRNGKey(seed), (k, D))
+    e = 0.1 * jax.random.normal(jax.random.PRNGKey(seed + 1), (k, D))
+    w = jnp.ones((k,), jnp.float32)
+    gm = _gmask(cfg, D)
+
+    # identity chain ≡ run_chain
+    want_c = run_chain(cfg, g, e, w, global_mask=gm)
+    got_c = execute(cfg, compile_plan(k), g, e, w, global_mask=gm)
+    np.testing.assert_array_equal(np.asarray(want_c.aggregate),
+                                  np.asarray(got_c.aggregate))
+
+    # random permuted chain ≡ run_chain_with_topology, bit-exact
+    order = np.asarray(data.draw(st.permutations(list(range(k))),
+                                 label="order"), np.int32)
+    want = run_chain_with_topology(cfg, g, e, w, jnp.asarray(order),
+                                   global_mask=gm)
+    got = execute(cfg, compile_plan(order), g, e, w, global_mask=gm)
+    np.testing.assert_array_equal(np.asarray(want.aggregate),
+                                  np.asarray(got.aggregate))
+    np.testing.assert_array_equal(np.asarray(want.e_new),
+                                  np.asarray(got.e_new))
+    np.testing.assert_array_equal(np.asarray(want.stats.bits),
+                                  np.asarray(got.stats.bits))
+
+    # random attachment tree ≡ run_tree, padded (L, W) plan included
+    rng = np.random.default_rng(seed)
+    parent = [PS] + [int(rng.integers(-1, i)) for i in range(1, k)]
+    tree = AggTree(parent=tuple(parent))
+    want_t = run_tree(cfg, tree, g, e, w, global_mask=gm)
+    pad_l = data.draw(st.integers(0, 3), label="pad_l")
+    pad_w = data.draw(st.integers(0, 2), label="pad_w")
+    nat = compile_plan(tree).shape
+    got_t = execute(cfg, compile_plan(tree, pad_to=(nat[0] + pad_l,
+                                                    nat[1] + pad_w)),
+                    g, e, w, global_mask=gm)
+    np.testing.assert_array_equal(np.asarray(want_t.aggregate),
+                                  np.asarray(got_t.aggregate))
+    np.testing.assert_array_equal(np.asarray(want_t.e_new),
+                                  np.asarray(got_t.e_new))
+    np.testing.assert_array_equal(np.asarray(want_t.stats.bits),
+                                  np.asarray(got_t.stats.bits))

@@ -2,13 +2,14 @@
 
 LAYOUT_ROUNDTRIP = r"""
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import PartitionSpec as P, AxisType
+from jax.sharding import PartitionSpec as P
+from repro import compat
 from repro.core.flat_layout import FlatLayout
 from repro.configs.base import ModelConfig
 from repro.models import model as model_mod
 from repro.models import partition
 
-mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+mesh = compat.make_mesh((2, 4), ("data", "model"))
 # num_heads=6 NOT divisible by model=4 → exercises the replicated-leaf path
 cfg = ModelConfig(name="t", family="dense", num_layers=2, d_model=32,
                   num_heads=6, num_kv_heads=2, d_ff=64, vocab_size=128,
@@ -24,11 +25,11 @@ def roundtrip(p):
     leaves = layout.local_unflatten(col, m_idx)
     return layout.treedef.unflatten(leaves)
 
-f = jax.shard_map(roundtrip, mesh=mesh,
-                  in_specs=(layout.param_in_specs(),),
-                  out_specs=layout.param_out_specs(),
-                  axis_names={"data", "model"}, check_vma=False)
-with jax.set_mesh(mesh):
+f = compat.shard_map(roundtrip, mesh=mesh,
+                     in_specs=(layout.param_in_specs(),),
+                     out_specs=layout.param_out_specs(),
+                     axis_names={"data", "model"})
+with compat.set_mesh(mesh):
     out = jax.jit(f)(params)
 for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(out)):
     np.testing.assert_allclose(np.asarray(a, np.float32),
