@@ -9,12 +9,25 @@ over per-link bandwidth/latency) — the quantity tree routing actually
 optimizes: CL-SIA bits are topology-invariant, but a Walker tree finishes
 the round ~depth/K sooner than the chain.
 
+A final section sweeps the *device* path: the chain ring vs routed tree
+plans lowered onto an 8-fake-device shard_map mesh
+(`repro.agg.device.run_plan_segments_local`), reporting exact §V bits, the
+modeled `round_latency_s` critical path, and measured wall-clock per round.
+
     PYTHONPATH=src python benchmarks/fig_tree_topologies.py
 """
 
 from __future__ import annotations
 
+import os
+
+# must precede the first jax import: the device sweep runs the lowered
+# plans on 8 fake host devices
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
 import dataclasses
+import time
 
 from repro.agg import TopologySchedule, bandwidth_budgets, compile_plan, execute
 from repro.configs import PAPER
@@ -114,17 +127,97 @@ def measure_bandwidth_aware() -> list[str]:
             f"bw_budget,walker-delta-3x4,bw-scaled,{float(bwa.stats.bits.sum()):.0f},-"]
 
 
+def measure_device_plans() -> list[str]:
+    """Chain ring vs routed tree plans on the device (shard_map) path.
+
+    Every plan runs through ``run_plan_segments_local`` on an 8-device
+    mesh: the chain plan IS the historic rotated ring; the tree plans are
+    the new multi-device topologies. CL-SIA §V bits are topology-invariant,
+    so what the tree buys is the critical path — ``round_latency_s`` drops
+    with depth while the measured per-round wall clock stays flat (same
+    node-step count, same number of level collectives per level).
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro import compat
+    from repro.agg.device import ring_chain_plan, run_plan_segments_local
+    from repro.agg import compile_plan
+    from repro.core.ring import RingStats, segment_budget
+
+    K = 8
+    if len(jax.devices()) < K:
+        return [f"device,unavailable,needs {K} devices,-,-"]
+    n = K * 4096
+    pc = dataclasses.replace(PAPER, num_clients=K)
+    mesh = compat.make_mesh((K,), ("data",))
+    G = jax.random.normal(jax.random.PRNGKey(0), (K, n))
+    EF = jnp.zeros((K, n))
+    cfg = dataclasses.replace(agg_config(ALGS["CL-SIA"]),
+                              q=segment_budget(pc.q * K, K))
+
+    graphs = {"chain-ring": None,
+              "grid-2x4": tg.grid_graph(2, 4),
+              "walker-delta-2x4": tg.walker_delta(2, 4)}
+    lines = []
+    for name, g in graphs.items():
+        if g is None:
+            plan, tree = ring_chain_plan(K), None
+        else:
+            tree = widest_path_tree(g)
+            plan = compile_plan(tree)
+
+        def ring_fn(g_l, ef_l):
+            final, ef_new, st = run_plan_segments_local(
+                cfg, plan, g_l[0], ef_l[0], jnp.float32(1.0), axis="data",
+                transport="static")
+            return final[None], ef_new[None], jax.tree.map(
+                lambda s: jax.lax.psum(s, "data"), st)
+
+        step = jax.jit(compat.shard_map(
+            ring_fn, mesh=mesh, in_specs=(P("data"), P("data")),
+            out_specs=(P("data"), P("data"),
+                       jax.tree.map(lambda _: P(), RingStats(0., 0., 0.))),
+            axis_names={"data"}))
+        final, ef, st = step(G, EF)
+        jax.block_until_ready(final)
+        t0 = time.time()
+        reps = 10
+        for _ in range(reps):
+            final, ef, st = step(G, EF)
+        jax.block_until_ready(final)
+        ms = (time.time() - t0) / reps * 1e3
+
+        if tree is not None:
+            per_hop = [cc.cl_sia_bits(1, n, cfg.q * K, pc.omega)] * K
+            lat = round_latency_s(tree, per_hop) * 1e3
+            depth = tree.max_depth()
+        else:
+            chain = widest_path_tree(tg.path_graph(K))
+            per_hop = [cc.cl_sia_bits(1, n, cfg.q * K, pc.omega)] * K
+            lat = round_latency_s(chain, per_hop) * 1e3
+            depth = K
+        lines.append(f"device,{name},CL-SIA,{float(st.bits):.0f} bits,"
+                     f"depth {depth}, crit-path {lat:.2f} ms, "
+                     f"measured {ms:.1f} ms/round")
+    return lines
+
+
 def main() -> list[str]:
     lines = ["fig_tree,topology,algorithm,bits_per_round_or_ms,depth"]
     for name, g in TOPOLOGIES.items():
         lines.extend(measure(name, g))
     lines.extend(measure_time_varying())
     lines.extend(measure_bandwidth_aware())
+    lines.extend(measure_device_plans())
     print("\n".join(lines))
     # headline: CL-SIA bits are topology-invariant (closed form holds on
     # every tree), while critical-path latency tracks tree depth; the
     # schedule section shows all six topologies served by one specialization
-    # and bandwidth-scaled budgets undercutting the uniform-q bit cost.
+    # and bandwidth-scaled budgets undercutting the uniform-q bit cost; the
+    # device section runs the same plans on the 8-device shard_map ring —
+    # chain vs tree bits match, the tree wins the critical path.
     return lines
 
 

@@ -10,6 +10,9 @@ specialization; :class:`Aggregator` is the pytree-aware object API on top.
 """
 
 from repro.agg.aggregator import AggState, Aggregator, RoundOut, flat_dim
+from repro.agg.device import (client_mesh, execute_sharded, ring_chain_plan,
+                              run_plan_clients_local,
+                              run_plan_segments_local)
 from repro.agg.plan import (AggPlan, RoundResult, as_tree, bandwidth_budgets,
                             compile_plan, execute)
 from repro.agg.schedule import TopologySchedule, common_shape
@@ -18,4 +21,6 @@ __all__ = [
     "AggPlan", "RoundResult", "compile_plan", "execute", "as_tree",
     "bandwidth_budgets", "TopologySchedule", "common_shape",
     "Aggregator", "AggState", "RoundOut", "flat_dim",
+    "client_mesh", "execute_sharded", "ring_chain_plan",
+    "run_plan_clients_local", "run_plan_segments_local",
 ]

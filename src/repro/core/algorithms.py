@@ -63,13 +63,26 @@ class AggConfig:
 
     def __post_init__(self):
         if self.kind in (AggKind.TC_SIA, AggKind.CL_TC_SIA):
-            if self.q_global <= 0 and self.q_local <= 0:
+            if self.q_global <= 0 and self.q_local <= 0 and self.q > 0:
                 # paper's default split
                 ql = max(1, round(0.1 * self.q))
                 object.__setattr__(self, "q_local", ql)
                 object.__setattr__(self, "q_global", self.q - ql)
-        if self.q <= 0 and self.kind not in (AggKind.DENSE_IA, AggKind.ROUTING):
-            raise ValueError("q must be positive for sparsified aggregation")
+        # q == 0 is a degenerate-but-valid budget (nothing transmitted,
+        # everything banks into EF) — it arises when a global budget is
+        # split over more ring segments than it has coordinates
+        # (core.ring.segment_budget clamps rather than inflate §V bits).
+        # Warn loudly: a hand-built q=0 config trains a flat loss curve.
+        if self.kind not in (AggKind.DENSE_IA, AggKind.ROUTING):
+            if self.q < 0:
+                raise ValueError("q must be non-negative for sparsified "
+                                 "aggregation")
+            if self.q == 0:
+                import warnings
+                warnings.warn(
+                    "AggConfig q=0: nothing will be transmitted and the "
+                    "model will not update (valid only as the clamped "
+                    "too-small-global-budget edge case)", stacklevel=2)
 
     def topq_fn(self) -> Callable[[Array, int], Array]:
         if self.topq_impl == "exact":

@@ -14,27 +14,28 @@ Semantics: per segment, the value path is *identical* to
 segments (block-wise Top-Q — the standard distributed adaptation; DESIGN
 §2.5).
 
-This module provides the *local* (inside-shard_map) function plus the flat
-layout helpers; train/step.py assembles the full 3-phase step.
+Since the device-plan lowering (:mod:`repro.agg.device`) the ring is the
+*chain specialization* of the plan-driven kernel:
+``rotated_ring_local`` compiles the ring's visiting order to an
+:class:`~repro.agg.plan.AggPlan` (every transport offset +1) and runs
+:func:`repro.agg.device.run_plan_segments_local`, which emits the same
+per-level ``ppermute`` + compact ``(values, indices)`` wire program the
+historic hand-written loop did — bit-exact, and generalizing to routed
+trees/graphs/schedules. This module keeps the flat layout helpers;
+train/step.py assembles the full 3-phase step.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Any, NamedTuple, Optional, Sequence
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro import compat
-from repro.core import sparsify as sp
-from repro.core.algorithms import AggConfig, AggKind, NodeCtx, node_step
 
 Array = jax.Array
-
-# Algorithms whose per-hop payload is bounded by the budget → eligible for
-# compact (values, indices) wire transport, the paper's ω+⌈log₂d⌉ format.
-_COMPACT_KINDS = (AggKind.CL_SIA, AggKind.CL_TC_SIA)
 
 
 class RingStats(NamedTuple):
@@ -51,7 +52,7 @@ def ring_hops(num_ranks: int) -> int:
 
 
 def rotated_ring_local(
-    cfg: AggConfig,
+    cfg,
     flat_local: Array,                # [n] this rank's gradient slice
     ef_local: Array,                  # [n] this rank's EF memory
     weight: Array,                    # scalar D_k
@@ -65,80 +66,21 @@ def rotated_ring_local(
     Must be called inside shard_map with ``axis`` manual. ``n % K == 0``
     (train/step.py pads the flat layout). After return, rank r holds the
     fully-aggregated segment r.
+
+    Chain specialization of the plan-driven kernel: segment rotation is the
+    path plan with rotated start ranks, so this lowers the ring's chain
+    plan (:func:`repro.agg.device.ring_chain_plan` — every transport offset
+    +1) through :func:`repro.agg.device.run_plan_segments_local`, emitting
+    one ``ppermute(+1)`` per level exactly as the historic loop did.
     """
+    # function-level import: repro.agg.device imports RingStats from here
+    from repro.agg.device import ring_chain_plan, run_plan_segments_local
+
     K = compat.axis_size(axis)
-    r = jax.lax.axis_index(axis)
-    n = flat_local.shape[0]
-    assert n % K == 0, (n, K)
-    seg = n // K
-
-    # Keep the full-size buffers in their storage dtype (bf16 by default —
-    # a full f32 upcast here would materialize 2× the gradient shard);
-    # per-segment slices are upcast to f32 inside the loop.
-    x = flat_local.reshape(K, seg)
-    ef = ef_local.reshape(K, seg)
-    gm = (None if global_mask_local is None
-          else global_mask_local.reshape(K, seg))
-    p = jnp.float32(1) if participate is None else participate.astype(
-        jnp.float32)
-
-    step_fn = node_step(cfg)
-    perm = None  # filled lazily (needs K)
-
-    gamma = jnp.zeros((seg,), jnp.float32)
-    bits = jnp.float32(0)
-    nnz = jnp.float32(0)
-    err = jnp.float32(0)
-
-    for t in range(K):
-        s = (r - t) % K
-        g_seg = jax.lax.dynamic_slice(x, (s, 0), (1, seg))[0].astype(
-            jnp.float32)
-        e_seg = jax.lax.dynamic_slice(ef, (s, 0), (1, seg))[0].astype(
-            jnp.float32)
-        m_seg = (jnp.zeros((seg,), jnp.float32) if gm is None else
-                 jax.lax.dynamic_slice(gm, (s, 0), (1, seg))[0].astype(
-                     jnp.float32))
-        ctx = NodeCtx(global_mask=m_seg, participate=p)
-        gamma_out, e_new, st = step_fn(cfg, g_seg, gamma, e_seg, weight, ctx)
-        ef = jax.lax.dynamic_update_slice(
-            ef, e_new.astype(ef.dtype)[None], (s, 0))
-        bits = bits + st.bits
-        nnz = nnz + st.nnz_out.astype(jnp.float32)
-        err = err + st.err_sq
-        if perm is None:
-            perm = [(i, (i + 1) % K) for i in range(K)]
-        if t < K - 1:
-            gamma = _send(cfg, gamma_out, seg, axis, perm)
-        else:
-            gamma = gamma_out
-
-    # ownership shift: rank r currently holds segment (r+1) mod K
-    final = _send(cfg, gamma, seg, axis, perm)
-    return final, ef.reshape(n), RingStats(bits=bits, nnz=nnz, err_sq=err)
-
-
-def _wire_budget(cfg: AggConfig) -> int:
-    if cfg.kind == AggKind.CL_TC_SIA:
-        return cfg.q_global + cfg.q_local
-    return cfg.q
-
-
-def _send(cfg: AggConfig, gamma: Array, seg: int, axis, perm) -> Array:
-    """One ring hop. CL algorithms guarantee ‖γ‖₀ ≤ budget, so the wire
-    carries compact (values[q], indices[q]) — the paper's ω+⌈log₂d⌉ payload
-    — instead of the dense segment (d/Q ≈ 100× wire reduction; this is the
-    paper-faithful transport, see EXPERIMENTS §Perf it.1). Unbounded
-    algorithms (SIA/RE-SIA/TC-SIA) ship the dense segment, which is
-    precisely the degradation the paper proves for them."""
-    q = _wire_budget(cfg)
-    if cfg.kind not in _COMPACT_KINDS or q >= seg // 2:
-        return jax.lax.ppermute(gamma, axis, perm)
-    vals, idx, _ = sp.compact(gamma, q)
-    vals = jax.lax.ppermute(vals.astype(jnp.dtype(cfg.wire_dtype)), axis,
-                            perm)
-    idx = jax.lax.ppermute(idx, axis, perm)
-    return sp.scatter(vals.astype(jnp.float32), idx, seg)
+    return run_plan_segments_local(
+        cfg, ring_chain_plan(K), flat_local, ef_local, weight, axis=axis,
+        global_mask_local=global_mask_local, participate=participate,
+        transport="static")
 
 
 # ---------------------------------------------------------------------------
@@ -191,5 +133,14 @@ def unflatten_tree(template: Any, flat: Array) -> Any:
 
 
 def segment_budget(q_total: int, num_segments: int) -> int:
-    """Per-segment per-hop budget (block-wise Top-Q; ≥1)."""
-    return max(1, q_total // num_segments)
+    """Per-segment per-hop budget (block-wise Top-Q).
+
+    Floor division, so summed per-segment budgets never exceed the global
+    §V budget: ``num_segments · segment_budget(q, n) ≤ q``. When
+    ``q_total < num_segments`` the budget is 0 — those segments transmit
+    nothing (the old ``max(1, ·)`` floor silently inflated the global
+    budget K-fold in that regime).
+    """
+    if num_segments <= 0:
+        raise ValueError(f"num_segments must be positive, got {num_segments}")
+    return max(0, q_total) // num_segments

@@ -16,6 +16,15 @@ traced arguments, so switching topologies per round (healed chains via
 ``order_fn``, relay deaths via ``failure_schedule``, LEO re-routing via
 ``topology_schedule``) re-traces only when the padded ``(L, W)`` schedule
 shape grows — plans padded to a common shape share the executable.
+
+``backend="device"`` runs the same rounds through the device-plan lowering
+(:func:`repro.agg.device.execute_sharded`): one local device per client
+(``XLA_FLAGS=--xla_force_host_platform_device_count=K`` fakes them on
+CPU), levels in lockstep over the mesh, compact wire transport. The
+lowered round is bit-exact to host ``execute`` on identical inputs
+(tested in tests/test_device_plan.py); whole training *trajectories* agree
+to float tolerance only, because XLA fuses the (identical) gradient math
+differently when a shard_map consumes it.
 """
 
 from __future__ import annotations
@@ -132,6 +141,10 @@ class Simulator:
     fed: FederatedData
     local_lr: float = 0.1
     tree_topology: Optional[TreeTopology] = None
+    # "host": repro.agg.execute (single-device reference);
+    # "device": repro.agg.device.execute_sharded — the plan lowered onto a
+    # one-device-per-client shard_map mesh, bit-exact to "host".
+    backend: str = "host"
 
     def __post_init__(self):
         self.k = self.fed.num_clients
@@ -139,6 +152,12 @@ class Simulator:
         # D_k = per-round contribution weight (uniform minibatches → B each;
         # weights normalized at the PS by D = Σ D_k)
         self.weights = jnp.full((self.k,), 1.0, jnp.float32)
+        if self.backend not in ("host", "device"):
+            raise ValueError(f"unknown backend {self.backend!r}")
+        self._mesh = None
+        if self.backend == "device":
+            from repro.agg.device import client_mesh
+            self._mesh = client_mesh(self.k)
 
     def init(self, seed: int = 0) -> SimState:
         flat = flatten_lr(lr_init(self.pc))
@@ -156,6 +175,17 @@ class Simulator:
         pc, agg_cfg, k = self.pc, self.agg, self.k
         fed, weights, lr = self.fed, self.weights, self.local_lr
         needs_tcs = agg_cfg.kind in (AggKind.TC_SIA, AggKind.CL_TC_SIA)
+        mesh = self._mesh
+        if mesh is None:
+            run_round = execute
+        else:
+            from repro.agg.device import execute_sharded
+
+            def run_round(cfg, plan, g, e, w, *, global_mask=None,
+                          participate=None):
+                return execute_sharded(cfg, plan, g, e, w, mesh=mesh,
+                                       global_mask=global_mask,
+                                       participate=participate)
 
         def one_round(state: SimState, plan: AggPlan,
                       participate: Optional[Array] = None):
@@ -178,8 +208,9 @@ class Simulator:
                     agg_cfg.q_global)
                 tcs_prev = state.flat_w
 
-            res = execute(agg_cfg, plan, g, state.ef, weights,
-                          global_mask=global_mask, participate=participate)
+            res = run_round(agg_cfg, plan, g, state.ef, weights,
+                            global_mask=global_mask,
+                            participate=participate)
 
             alive = jnp.asarray(plan.alive, weights.dtype)
             part = alive if participate is None else participate * alive

@@ -1,10 +1,46 @@
 """Production mesh construction (function, not constant — importing this
 module never touches jax device state). Mesh/axis-type API drift is bridged
-by :mod:`repro.compat`, so these run on 0.4.x and 0.6+ runtimes alike."""
+by :mod:`repro.compat`, so these run on 0.4.x and 0.6+ runtimes alike.
+
+A mesh also fixes the *aggregation client set*: the combined DP axes
+(``pod`` × ``data``) are the K clients of the multi-hop round.
+:func:`make_agg_plan` compiles any topology over exactly that client count,
+so launchers hand :func:`repro.train.step.build_train_step` an
+:class:`~repro.agg.plan.AggPlan` instead of assuming the ring."""
 
 from __future__ import annotations
 
+from typing import Any, Optional
+
 from repro import compat
+
+def dp_clients(mesh) -> int:
+    """Number of aggregation clients a mesh provides (pod × data size)."""
+    from repro.train.step import dp_size   # the one source of the DP rule
+    return dp_size(mesh)
+
+
+def make_agg_plan(mesh, topology: Any = None, *,
+                  pad_to: Optional[tuple] = None, q_budget=None):
+    """Compile ``topology`` into an AggPlan sized for ``mesh``'s DP ring.
+
+    ``None`` gives the rotated ring's chain plan (the paper baseline,
+    bit-exact to the historic ``rotated_ring_local``); an ``AggTree``,
+    chain order, ``ConstellationGraph``, or int K goes through
+    :func:`repro.agg.compile_plan` with ``num_clients`` pinned to the mesh.
+    """
+    from repro.agg import compile_plan
+    from repro.agg.device import ring_chain_plan, ring_chain_tree
+
+    k = dp_clients(mesh)
+    if topology is None:
+        # the ring chain even when padded/budgeted — NOT path_tree(k),
+        # whose reversed visiting order is a bitwise-different chain
+        if pad_to is None and q_budget is None:
+            return ring_chain_plan(k)
+        topology = ring_chain_tree(k)
+    return compile_plan(topology, num_clients=k, pad_to=pad_to,
+                        q_budget=q_budget)
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -22,13 +22,42 @@ from repro import compat
 from repro.configs import ARCHS, get_config
 from repro.core.algorithms import AggConfig, AggKind
 from repro.data.synthetic import lm_batch, make_bigram_lm
-from repro.launch.mesh import make_mesh
+from repro.launch.mesh import make_agg_plan, make_mesh
 from repro.models.stubs import audio_stub_embeds, vision_stub_embeds
 from repro.optim.optimizers import OptConfig
 from repro.runtime.fault import StragglerModel
 from repro.train.state import TrainConfig, TrainState
 from repro.train.step import (build_train_step, dp_size, init_state,
                               state_shardings)
+
+
+def _topology(name: str, k: int):
+    """CLI topology name → something ``compile_plan`` accepts (or None)."""
+    if name != "ring" and k <= 2:
+        print(f"topology {name!r} needs >2 DP clients (have {k}); "
+              f"falling back to the rotated ring")
+        name = "ring"
+    if name == "ring":
+        return None                      # the rotated ring (paper chain)
+    if name == "chain":
+        return k                         # identity chain, PS at client 0
+    from repro.topo import graph as tg
+    from repro.topo.tree import star_tree
+    if name == "star":
+        return star_tree(k)
+    rows = max(d for d in range(1, int(k ** 0.5) + 1) if k % d == 0)
+    if name == "grid":
+        if rows == 1:                    # prime K: a 1×K grid is a path
+            print(f"grid needs composite K (have {k}); the 1x{k} grid "
+                  f"degenerates to the chain")
+        return tg.grid_graph(rows, k // rows)
+    if name == "walker-delta":
+        if rows == 1:                    # prime K: no orbital planes
+            print(f"walker-delta needs composite K (have {k}); using the "
+                  f"star topology instead")
+            return star_tree(k)
+        return tg.walker_delta(rows, k // rows)
+    raise ValueError(f"unknown topology {name!r}")
 
 
 def main() -> None:
@@ -46,6 +75,11 @@ def main() -> None:
     ap.add_argument("--opt", default="adamw")
     ap.add_argument("--mesh", default="",
                     help="e.g. 2x2 → (data=2, model=2); default all-data")
+    ap.add_argument("--topology", default="ring",
+                    choices=["ring", "chain", "star", "grid",
+                             "walker-delta"],
+                    help="aggregation route over the K_dp clients (device-"
+                         "plan lowering; 'ring' = the rotated ring)")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--straggle-p", type=float, default=0.0)
@@ -67,6 +101,8 @@ def main() -> None:
         ef_dtype="float32" if args.smoke else "bfloat16",
     )
 
+    agg_plan = make_agg_plan(mesh, _topology(args.topology, dp_size(mesh)))
+
     with compat.set_mesh(mesh):
         state = init_state(cfg, tc, mesh, jax.random.PRNGKey(args.seed))
         shardings = state_shardings(cfg, tc, mesh)
@@ -77,7 +113,8 @@ def main() -> None:
             state = ckpt.restore(args.ckpt_dir, template,
                                  shardings=shardings)
             print(f"resumed from step {int(state.step)}")
-        step_fn = jax.jit(build_train_step(cfg, tc, mesh))
+        step_fn = jax.jit(build_train_step(cfg, tc, mesh,
+                                           topology=agg_plan))
 
         lm = make_bigram_lm(jax.random.PRNGKey(7), cfg.vocab_size)
         sm = StragglerModel(p_straggle=args.straggle_p)

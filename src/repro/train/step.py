@@ -92,9 +92,14 @@ def _segment_agg_cfg(tc: TrainConfig, mesh, d_flat: int) -> AggConfig:
     q_seg = ring_mod.segment_budget(q, n_segments)
     kw = dict(q=q_seg)
     if tc.needs_tcs():
-        ql = max(1, round(q_seg * tc.agg.q_local / max(tc.agg.q, 1))
-                 ) if tc.agg.q_local else max(1, q_seg // 10)
-        kw.update(q_local=ql, q_global=max(q_seg - ql, 1))
+        if q_seg == 0:
+            # global budget smaller than the segment count: nothing to
+            # split — the sub-budgets must not re-inflate §V bits
+            kw.update(q_local=0, q_global=0)
+        else:
+            ql = max(1, round(q_seg * tc.agg.q_local / max(tc.agg.q, 1))
+                     ) if tc.agg.q_local else max(1, q_seg // 10)
+            kw.update(q_local=ql, q_global=max(q_seg - ql, 1))
     return dataclasses.replace(tc.agg, **kw)
 
 
@@ -171,13 +176,36 @@ def state_shardings(cfg: ModelConfig, tc: TrainConfig, mesh):
 # Train step
 # ---------------------------------------------------------------------------
 
-def build_train_step(cfg: ModelConfig, tc: TrainConfig, mesh):
-    """Returns train_step(state, batch) → (state, metrics). jit-ready."""
+def build_train_step(cfg: ModelConfig, tc: TrainConfig, mesh,
+                     topology: Any = None):
+    """Returns train_step(state, batch) → (state, metrics). jit-ready.
+
+    ``topology`` selects the aggregation route over the K_dp clients:
+    ``None`` keeps the rotated ring (the paper chain, bit-exact to the
+    historic path), everything else — an :class:`repro.agg.AggPlan`, an
+    ``AggTree``, a chain order, or a ``ConstellationGraph`` — is compiled
+    via :func:`repro.agg.compile_plan` and lowered onto the same shard_map
+    ring by :func:`repro.agg.device.run_plan_segments_local`, so routed
+    constellation trees run multi-device with the ring's wire format and
+    §V accounting.
+    """
+    from repro.agg.device import ring_chain_plan, run_plan_segments_local
+    from repro.agg.plan import AggPlan, compile_plan
+
     layout = make_layout(cfg, mesh)
     dp = dp_axes(mesh)
     k_dp = dp_size(mesh)
     seg = layout.n_local // k_dp
     agg_cfg = _segment_agg_cfg(tc, mesh, layout.d_flat)
+    if topology is None:
+        agg_plan = ring_chain_plan(k_dp)
+    elif isinstance(topology, AggPlan):
+        agg_plan = topology
+    else:
+        agg_plan = compile_plan(topology, num_clients=k_dp)
+    if agg_plan.num_clients != k_dp:
+        raise ValueError(f"topology has {agg_plan.num_clients} clients but "
+                         f"the mesh provides {k_dp} DP ranks")
     fs = flat_spec(mesh)
     agg_dt = jnp.dtype(tc.agg_dtype)
     manual_axes = set(mesh.axis_names)
@@ -236,9 +264,10 @@ def build_train_step(cfg: ModelConfig, tc: TrainConfig, mesh):
                                  (jnp.abs(delta) >= tau_g).astype(agg_dt),
                                  jnp.zeros_like(delta, agg_dt))
 
-        final, ef_new, stats = ring_mod.rotated_ring_local(
-            agg_cfg, col, ef_l[0], w_l[0], axis=dp,
-            global_mask_local=mask_col, participate=part_l[0])
+        final, ef_new, stats = run_plan_segments_local(
+            agg_cfg, agg_plan, col, ef_l[0], w_l[0], axis=dp,
+            global_mask_local=mask_col, participate=part_l[0],
+            transport="static")
         stats = jax.tree.map(
             lambda s: jax.lax.psum(s, tuple(manual_axes)), stats)
         return final, ef_new[None], stats

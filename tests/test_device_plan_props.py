@@ -1,0 +1,84 @@
+"""Device-plan lowering property tests (hypothesis + multidev subprocess).
+
+Randomized version of tests/test_device_plan.py's equivalence contract:
+for *arbitrary* aggregation trees (random parent pointers), permuted chain
+orders, and algorithms, the shard_map-lowered execution on 8 forced host
+devices matches host ``agg.execute()`` bit-exactly. Each example bakes the
+sampled topology into a snippet run through the shared ``run_multidev``
+helper (tests/conftest.py).
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from conftest import run_multidev
+
+K = 8
+
+SNIPPET = r"""
+import jax, jax.numpy as jnp, numpy as np
+from repro.agg import compile_plan, execute, execute_sharded
+from repro.core.algorithms import AggConfig, AggKind
+from repro.topo.tree import AggTree, PS
+
+K = {k}
+topo = {topo}
+kind = AggKind("{kind}")
+cfg = AggConfig(kind=kind, q={q})
+g = jax.random.normal(jax.random.PRNGKey({seed}), (K, {d}))
+e = 0.1 * jax.random.normal(jax.random.PRNGKey({seed} + 1), (K, {d}))
+w = jnp.ones((K,), jnp.float32)
+gm = None
+if kind in (AggKind.TC_SIA, AggKind.CL_TC_SIA):
+    gm = jnp.zeros(({d},)).at[jnp.arange(cfg.q_global)].set(1.0)
+
+plan = compile_plan(topo, num_clients=K, pad_to={pad})
+want = execute(cfg, plan, g, e, w, global_mask=gm)
+got = jax.jit(lambda p, g, e, w: execute_sharded(
+    cfg, p, g, e, w, global_mask=gm))(plan, g, e, w)
+np.testing.assert_array_equal(np.asarray(want.aggregate),
+                              np.asarray(got.aggregate))
+np.testing.assert_array_equal(np.asarray(want.e_new), np.asarray(got.e_new))
+np.testing.assert_array_equal(np.asarray(want.stats.bits),
+                              np.asarray(got.stats.bits))
+print("PASS")
+"""
+
+
+def _random_tree_src(parent_choices):
+    """Acyclic by construction: parent[i] ∈ {PS} ∪ {0..i−1}."""
+    parent = [-1]
+    for i, c in enumerate(parent_choices, start=1):
+        parent.append(-1 if c >= i else c)
+    return f"AggTree(parent=tuple({parent}))"
+
+
+@settings(max_examples=6, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(
+    choices=st.tuples(*[st.integers(0, K - 1) for _ in range(K - 1)]),
+    kind=st.sampled_from(["sia", "re_sia", "cl_sia", "tc_sia", "cl_tc_sia"]),
+    q=st.integers(1, 13),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_random_tree_device_matches_host(choices, kind, q, seed):
+    src = SNIPPET.format(k=K, topo=_random_tree_src(choices), kind=kind,
+                         q=q, seed=seed, d=61, pad=(K + 1, K))
+    run_multidev(src, devices=K)
+
+
+@settings(max_examples=4, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(
+    perm=st.permutations(list(range(K))),
+    kind=st.sampled_from(["cl_sia", "re_sia"]),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_random_order_device_matches_host(perm, kind, seed):
+    topo = f"np.asarray({list(perm)}, np.int32)"
+    src = SNIPPET.format(k=K, topo=topo, kind=kind, q=7, seed=seed, d=61,
+                         pad=(K, 2))
+    run_multidev(src, devices=K)
