@@ -1,9 +1,21 @@
 """Kernel micro-benchmarks: wall-time of jnp-ref paths on this host CPU
-(indicative only) + the structural metric that transfers to TPU — HBM pass
-counts per aggregation node step (fused Pallas vs unfused jnp ops).
+(indicative only) + the structural metric that transfers to TPU — HBM
+sweeps per aggregation node step (fused Pallas vs unfused jnp ops; the
+per-algorithm table lives in ``bench_round.vector_passes``).
+
+Emits ``bench,name,us_per_call,derived`` CSV rows and writes the
+machine-readable ``BENCH_kernels.json`` (name → {us_per_call, passes}) at
+the repo root.
+
+    PYTHONPATH=src python -m benchmarks.run --dim 4000000 --reps 5
+    PYTHONPATH=src python benchmarks/bench_kernels.py --dim 100000
 """
 
 from __future__ import annotations
+
+import argparse
+import json
+import os
 
 import jax
 import jax.numpy as jnp
@@ -13,44 +25,73 @@ from repro.kernels import ops, ref
 
 from common import timed
 
-D = 1_000_000
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+#: streaming sweeps over the d-vector per call (the bench_round counting
+#: rule: one grid walk = one sweep, however many operand streams)
+PASSES = {
+    "ref_sparsify_ef": 1,        # fused select+EF (2 unfused)
+    "ref_chain_accum": 1,        # combine + support count (2 unfused)
+    "ref_cl_fuse": 1,            # whole CL node step given τ (4 unfused)
+    "exact_topq_1pct": 3,        # lax.top_k sort ≈3 sweeps
+    "threshold_topq_1pct": 3,    # hist_rounds streaming count sweeps
+    "count_ge_64": 1,
+}
 
 
-def main() -> list[str]:
+def main(dim: int = 1_000_000, reps: int = 3) -> list[str]:
     lines = ["bench,name,us_per_call,derived"]
     key = jax.random.PRNGKey(0)
-    g = jax.random.normal(key, (D,))
-    e = 0.1 * jax.random.normal(jax.random.fold_in(key, 1), (D,))
-    gi = jax.random.normal(jax.random.fold_in(key, 2), (D,)) * (
-        jax.random.uniform(jax.random.fold_in(key, 3), (D,)) < 0.01)
-    mask = jnp.zeros((D,))
+    g = jax.random.normal(key, (dim,))
+    e = 0.1 * jax.random.normal(jax.random.fold_in(key, 1), (dim,))
+    gi = jax.random.normal(jax.random.fold_in(key, 2), (dim,)) * (
+        jax.random.uniform(jax.random.fold_in(key, 3), (dim,)) < 0.01)
+    mask = jnp.zeros((dim,))
     w, tau = jnp.float32(1.0), jnp.float32(2.3)
+    q = max(1, dim // 100)
 
     fns = {
         "ref_sparsify_ef": jax.jit(lambda: ref.ref_sparsify_ef(
             g, e, mask, w, tau)),
         "ref_chain_accum": jax.jit(lambda: ref.ref_chain_accum(gi, g)),
         "ref_cl_fuse": jax.jit(lambda: ref.ref_cl_fuse(g, e, gi, w, tau)),
-        "exact_topq_1pct": jax.jit(lambda: sp.topq(g, D // 100)),
+        "exact_topq_1pct": jax.jit(lambda: sp.topq(g, q)),
         "threshold_topq_1pct": jax.jit(
-            lambda: sp.topq_by_threshold(g, D // 100)),
+            lambda: sp.topq_by_threshold(g, q)),
         "count_ge_64": jax.jit(lambda: ref.ref_count_ge(
             g, jnp.linspace(0.01, 3, 64))),
     }
+    results = {}
     for name, fn in fns.items():
-        _, us = timed(fn, reps=3)
-        lines.append(f"bench,{name},{us:.0f},d={D}")
+        _, us = timed(fn, reps=reps)
+        lines.append(f"bench,{name},{us:.0f},d={dim}")
+        results[name] = {"us_per_call": round(us, 1),
+                         "passes": PASSES[name]}
 
-    # structural metric: HBM passes per CL-SIA node step
-    #   unfused jnp: read g,e,γ; write g̃; read g̃ (topk/sort multi-pass ≈3);
-    #                write γ,e' ⇒ ≥8 vector passes
-    #   fused cl_fuse + 3-round threshold: 3 count passes + 1 fused pass
-    #                reading (g,e,γ) writing (γ,e') ⇒ 4 passes
-    lines.append("bench,cl_node_passes_unfused,8,vector-passes")
-    lines.append("bench,cl_node_passes_fused,4,vector-passes")
+    # structural metric: HBM sweeps per CL-SIA node step (see
+    # bench_round.vector_passes for the rule and the per-algorithm table)
+    from bench_round import vector_passes
+    unfused, fused = vector_passes("cl_sia", False), vector_passes(
+        "cl_sia", True)
+    lines.append(f"bench,cl_node_passes_unfused,{unfused},vector-passes")
+    lines.append(f"bench,cl_node_passes_fused,{fused},vector-passes")
+    results["cl_node_passes"] = {"unfused": unfused, "fused": fused}
+
+    out = os.path.join(REPO, "BENCH_kernels.json")
+    with open(out, "w") as f:
+        json.dump({"meta": {"d": dim, "reps": reps,
+                            "backend": jax.default_backend(),
+                            "jax": jax.__version__},
+                   "kernels": results}, f, indent=1, sort_keys=True)
+        f.write("\n")
     print("\n".join(lines))
+    print(f"wrote {out}")
     return lines
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dim", type=int, default=1_000_000)
+    ap.add_argument("--reps", type=int, default=3)
+    a = ap.parse_args()
+    main(dim=a.dim, reps=a.reps)

@@ -1,0 +1,253 @@
+"""Whole-round aggregation benchmark → ``BENCH_agg_round.json``.
+
+Measures one full aggregation round — every node step of the padded
+``(L, W)`` schedule — for all five algorithms over a chain plan and a
+routed-tree plan, on the host executor (``repro.agg.execute``) and on the
+8-device shard_map lowering (``repro.agg.execute_sharded``), with both the
+exact ``lax.top_k`` sparsifier and the streaming threshold sparsifier.
+Wall-times are what this machine can honestly measure; the metric that
+transfers to TPU is structural — **HBM sweeps per node step** — where the
+fused Pallas path is strictly smaller for every algorithm (the aggregation
+round is memory-bound, so sweep count bounds achievable wall-time).
+
+Sweep counting rule (one "sweep" = one streaming pass over a d-length
+vector, however many operand streams ride along — a fused kernel reading
+(g, e, γ_in) and writing (γ_out, e') in one grid walk is ONE sweep):
+
+    stage            unfused  fused  note
+    g̃/γ̃ materialize       1      1  sparsifier state needs it jnp-side
+    sparsifier (τ/mask)    3      3  top_k sort ≈3 sweeps; threshold =
+                                     hist_rounds count sweeps (kernel)
+    select + EF            2      1  γ̄=keep(g̃) and e'=g̃−γ̄ fuse into the
+                                     sparsify_ef / cl_fuse kernel
+    IA combine          1 (0)  1 (0)  γ_out=γ_in+γ̄; 0 for the CL family
+                                     (already inside γ̃ / cl_fuse)
+    §V support counts   1 (2)      0  nnz (+ off-mask nnz for TC) fuse
+                                     into the kernels' accumulators
+
+Run ``PYTHONPATH=src python benchmarks/bench_round.py`` (add ``--smoke``
+for the CI-sized instant version; ``--dim/--clients/--reps`` to scale).
+The JSON lands at the repo root so every future PR diffs against it.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+import time
+
+# 8 fake host devices for the device-round section — must precede the jax
+# import, so importing this module from an already-running jax process
+# (benchmarks/run.py) skips the device section instead of forcing flags.
+if "jax" not in sys.modules and "xla_force_host_platform_device_count" not \
+        in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=8"
+                               ).strip()
+
+import jax                                                    # noqa: E402
+import jax.numpy as jnp                                       # noqa: E402
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEVICES = 8
+
+ALG_NAMES = ["sia", "re_sia", "cl_sia", "tc_sia", "cl_tc_sia"]
+
+
+def vector_passes(kind: str, fused: bool) -> int:
+    """HBM sweeps per node step under the counting rule in the docstring."""
+    cl = kind in ("cl_sia", "cl_tc_sia")
+    tc = kind in ("tc_sia", "cl_tc_sia")
+    materialize = 1
+    sparsifier = 3
+    select_ef = 1 if fused else 2
+    combine = 0 if cl else 1
+    counts = 0 if fused else (2 if tc else 1)
+    return materialize + sparsifier + select_ef + combine + counts
+
+
+def _timed(fn, reps: int):
+    out = jax.block_until_ready(fn())          # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6       # µs
+
+
+def _plans(k: int):
+    from repro.agg import compile_plan
+    from repro.topo import graph as tg
+    from repro.topo.routing import shortest_path_tree
+    tree = shortest_path_tree(tg.grid_graph(2, k // 2))
+    pad = (max(k, tree.max_depth() + 1), max(1, k // 2))
+    return {"chain": compile_plan(k, pad_to=pad),
+            "tree": compile_plan(tree, pad_to=pad)}
+
+
+def _round_inputs(k: int, d: int):
+    g = jax.random.normal(jax.random.PRNGKey(0), (k, d))
+    e = 0.1 * jax.random.normal(jax.random.PRNGKey(1), (k, d))
+    w = jnp.ones((k,), jnp.float32)
+    return g, e, w
+
+
+def _cfg(name: str, q: int, impl: str, kernel_mode: str = "auto"):
+    from repro.core.algorithms import AggConfig, AggKind
+    return AggConfig(kind=AggKind(name), q=q, topq_impl=impl,
+                     kernel_mode=kernel_mode)
+
+
+def _gmask(cfg, d):
+    from repro.core.algorithms import AggKind
+    if cfg.kind in (AggKind.TC_SIA, AggKind.CL_TC_SIA):
+        return jnp.zeros((d,)).at[jnp.arange(cfg.q_global)].set(1.0)
+    return None
+
+
+def bench_host(k, d, q, reps, impls, kernel_mode="never"):
+    """µs per jitted host round, per algorithm × plan × sparsifier.
+
+    ``kernel_mode="never"`` pins the unfused jnp baseline regardless of
+    the caller's ``REPRO_PALLAS_INTERPRET`` environment — otherwise a
+    shell that still exports the parity-test knob would silently record
+    interpret-mode timings into the baseline JSON.
+    """
+    import functools
+    from repro.agg import execute
+    plans = _plans(k)
+    g, e, w = _round_inputs(k, d)
+    out = {}
+    for name in ALG_NAMES:
+        out[name] = {}
+        for plan_name, plan in plans.items():
+            out[name][plan_name] = {}
+            for impl in impls:
+                cfg = _cfg(name, q, impl, kernel_mode)
+                fn = jax.jit(functools.partial(
+                    execute, cfg, global_mask=_gmask(cfg, d)))
+                out[name][plan_name][impl] = round(
+                    _timed(lambda: fn(plan, g, e, w).aggregate, reps), 1)
+    return out
+
+
+def bench_device(k, d, q, reps):
+    """µs per jitted 8-device shard_map round (client-per-rank kernel)."""
+    import functools
+    from repro.agg import execute_sharded
+    from repro.agg.device import client_mesh
+    if jax.device_count() < k:
+        return {"skipped": f"needs {k} devices, have {jax.device_count()} "
+                           f"(set XLA_FLAGS before importing jax)"}
+    mesh = client_mesh(k)
+    plans = _plans(k)
+    g, e, w = _round_inputs(k, d)
+    out = {}
+    for name in ALG_NAMES:
+        out[name] = {}
+        for plan_name, plan in plans.items():
+            cfg = _cfg(name, q, "exact", "never")
+            fn = jax.jit(functools.partial(
+                execute_sharded, cfg, mesh=mesh,
+                global_mask=_gmask(cfg, d)))
+            out[name][plan_name] = round(
+                _timed(lambda: fn(plan, g, e, w).aggregate, reps), 1)
+    return out
+
+
+def smoke_fused_interpret(k, d, q):
+    """Run one fused (Pallas-interpret) round per algorithm and check it
+    against the unfused oracle — keeps the kernel path exercised by CI on
+    machines with no TPU. Returns µs per round (interpret overhead
+    included — NOT comparable to the compiled timings)."""
+    import functools
+    import numpy as np
+    from repro.agg import execute
+    plan = _plans(k)["tree"]
+    g, e, w = _round_inputs(k, d)
+    out = {}
+    for name in ALG_NAMES:
+        cfg_f = _cfg(name, q, "threshold", "always")
+        cfg_u = _cfg(name, q, "threshold", "never")
+        gm = _gmask(cfg_f, d)
+        run_f = jax.jit(functools.partial(execute, cfg_f, global_mask=gm))
+        run_u = jax.jit(functools.partial(execute, cfg_u, global_mask=gm))
+        rf, ru = run_f(plan, g, e, w), run_u(plan, g, e, w)
+        np.testing.assert_array_equal(np.asarray(rf.aggregate),
+                                      np.asarray(ru.aggregate),
+                                      err_msg=f"{name} fused != unfused")
+        out[name] = round(_timed(lambda: run_f(plan, g, e, w).aggregate,
+                                 1), 1)
+    return out
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--dim", type=int, default=1 << 15,
+                    help="flat gradient length d per client")
+    ap.add_argument("--clients", type=int, default=DEVICES)
+    ap.add_argument("--q", type=int, default=None,
+                    help="per-hop Top-Q budget (default d // 100)")
+    ap.add_argument("--reps", type=int, default=5)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny instant run (CI harness check); writes to a "
+                         "temp file so the recorded baseline is not "
+                         "clobbered")
+    ap.add_argument("--out", default=None,
+                    help="output path (default: repo-root "
+                         "BENCH_agg_round.json; temp file under --smoke)")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        args.dim, args.reps = 2048, 1
+    if args.out is None:
+        args.out = (os.path.join(tempfile.gettempdir(),
+                                 "BENCH_agg_round.smoke.json")
+                    if args.smoke
+                    else os.path.join(REPO, "BENCH_agg_round.json"))
+    d, k = args.dim, args.clients
+    q = args.q if args.q is not None else max(1, d // 100)
+
+    passes = {name: {"unfused": vector_passes(name, False),
+                     "fused": vector_passes(name, True)}
+              for name in ALG_NAMES}
+    assert all(p["fused"] < p["unfused"] for p in passes.values())
+
+    result = {
+        "meta": {
+            "jax": jax.__version__,
+            "backend": jax.default_backend(),
+            "device_count": jax.device_count(),
+            "d": d, "clients": k, "q": q, "reps": args.reps,
+            "smoke": bool(args.smoke),
+            "repro_pallas_interpret": os.environ.get(
+                "REPRO_PALLAS_INTERPRET", ""),
+        },
+        # The structural metric that transfers to TPU: HBM sweeps per node
+        # step (memory-bound round ⇒ sweeps bound wall-time). Fused is
+        # strictly smaller for every algorithm.
+        "vector_passes_per_node": passes,
+        "host_rounds_us": bench_host(k, d, q, args.reps,
+                                     ["exact", "threshold"]),
+        "device_rounds_us": bench_device(k, d, q, args.reps),
+        # fused path correctness + interpret-mode smoke (see docstring)
+        "fused_interpret_rounds_us": smoke_fused_interpret(
+            k, min(d, 4096), max(1, min(d, 4096) // 100)),
+    }
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {args.out}")
+    for name in ALG_NAMES:
+        h = result["host_rounds_us"][name]["chain"]
+        print(f"round,{name},host_chain_exact_us,{h['exact']}")
+        print(f"round,{name},host_chain_threshold_us,{h['threshold']}")
+        print(f"round,{name},passes_unfused,{passes[name]['unfused']}")
+        print(f"round,{name},passes_fused,{passes[name]['fused']}")
+    return result
+
+
+if __name__ == "__main__":
+    main()

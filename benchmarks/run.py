@@ -18,16 +18,25 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="paper-scale rounds/K (slower)")
+    ap.add_argument("--dim", type=int, default=1_000_000,
+                    help="kernel-bench vector length d")
+    ap.add_argument("--reps", type=int, default=3,
+                    help="kernel-bench timing repetitions")
     args = ap.parse_args()
 
     import bench_kernels
+    import bench_round
     import fig2a_comm_cost
     import fig2b_efficiency
     import fig3_convergence
     import fig4_equal_bandwidth
 
     print("== kernels ==")
-    bench_kernels.main()
+    bench_kernels.main(dim=args.dim, reps=args.reps)
+    print("\n== aggregation round (BENCH_agg_round.json) ==")
+    # device section auto-skips unless this process was launched with
+    # XLA_FLAGS=--xla_force_host_platform_device_count=8
+    bench_round.main(["--reps", str(args.reps)])
     print("\n== fig2a: transmitted bits vs K ==")
     fig2a_comm_cost.main()
     print("\n== fig2b: normalized efficiency vs K ==")

@@ -58,7 +58,7 @@ from repro import compat
 from repro.agg.plan import AggPlan, RoundResult, compile_plan
 from repro.core import sparsify as sp
 from repro.core.algorithms import (AggConfig, AggKind, HopStats, NodeCtx,
-                                   node_step)
+                                   level_step, node_step)
 from repro.core.ring import RingStats
 
 Array = jax.Array
@@ -76,10 +76,17 @@ def _wire_budget(cfg: AggConfig) -> int:
 
 
 def _compact_eligible(cfg: AggConfig, seg: int, budgeted: bool) -> bool:
-    """Wire-format eligibility (identical to the historic ring rule)."""
+    """Wire-format eligibility (identical to the historic ring rule).
+
+    Threshold Top-Q keeps ≥ q survivors (ties inside the final bisection
+    bin over-select), so the CL bound ‖γ‖₀ ≤ q that sizes the q compact
+    wire slots does not hold — only the exact ``lax.top_k`` sparsifier may
+    use the compact segment. Same reasoning excludes dynamic per-client
+    budgets (sort-threshold over-selection on ties).
+    """
     q = _wire_budget(cfg)
-    # dynamic per-client budgets may over-select on ties → no static bound
-    return (cfg.kind in _COMPACT_KINDS and not budgeted and q < seg // 2)
+    return (cfg.kind in _COMPACT_KINDS and not budgeted
+            and cfg.topq_impl == "exact" and q < seg // 2)
 
 
 def _use_compact(cfg: AggConfig, seg: int, plan: AggPlan,
@@ -102,11 +109,13 @@ def _use_compact(cfg: AggConfig, seg: int, plan: AggPlan,
         return False
     eligible = _compact_eligible(cfg, seg, plan.q_budget is not None)
     if wire == "compact":
-        if cfg.kind not in _COMPACT_KINDS or plan.q_budget is not None:
+        if (cfg.kind not in _COMPACT_KINDS or plan.q_budget is not None
+                or cfg.topq_impl != "exact"):
             raise ValueError(
-                f"wire='compact' needs a constant-length algorithm without "
-                f"dynamic budgets; got {cfg.kind} "
-                f"(q_budget={'set' if plan.q_budget is not None else 'none'})")
+                f"wire='compact' needs a constant-length algorithm with the "
+                f"exact Top-Q sparsifier and no dynamic budgets; got "
+                f"{cfg.kind} (topq_impl={cfg.topq_impl!r}, "
+                f"q_budget={'set' if plan.q_budget is not None else 'none'})")
         return eligible
     if wire != "auto":
         raise ValueError(f"unknown wire format {wire!r}")
@@ -360,14 +369,13 @@ def run_plan_segments_local(
     # accumulator (segment r), K+1 = trash, K+2 = zero dummy (read-only).
     inbox = jnp.zeros((K + 3, seg), jnp.float32)
 
-    step_fn = node_step(cfg)
+    lvl_fn = level_step(cfg)
+    w_bcast = jnp.broadcast_to(jnp.asarray(weight, jnp.float32), (W,))
+    p_bcast = jnp.broadcast_to(p_eff, (W,))
+    qb_bcast = None if qb is None else jnp.broadcast_to(qb, (W,))
     bits = jnp.float32(0)
     nnz = jnp.float32(0)
     err = jnp.float32(0)
-
-    def one(g, gam, e, m):
-        ctx = NodeCtx(global_mask=m, participate=p_eff, q_budget=qb)
-        return step_fn(cfg, g, gam, e, weight, ctx)
 
     for l in range(L):
         ids_l = node_id[l]                               # [W]
@@ -383,7 +391,8 @@ def run_plan_segments_local(
         m_lvl = (jnp.zeros((W, seg), jnp.float32) if gm_ext is None
                  else gm_ext[s_read].astype(jnp.float32))
 
-        gamma_out, e_new, st = jax.vmap(one)(g_lvl, gam_in, e_lvl, m_lvl)
+        gamma_out, e_new, st = lvl_fn(g_lvl, gam_in, e_lvl, w_bcast,
+                                      p_bcast, m_lvl, qb_bcast, mask_l)
 
         ef_ext = ef_ext.at[jnp.where(valid, s_w, K + 1)].set(
             e_new.astype(ef_ext.dtype))

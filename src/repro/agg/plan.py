@@ -31,7 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.algorithms import AggConfig, AggKind, HopStats, NodeCtx, node_step
+from repro.core.algorithms import AggConfig, AggKind, HopStats, level_step
 from repro.topo.tree import PS, AggTree, build_schedule, path_tree
 
 Array = jax.Array
@@ -241,10 +241,12 @@ def execute(
     Same contract as :func:`repro.core.chain.run_chain` with the topology
     factored into ``plan``; bit-exact to ``run_chain`` on chain plans and
     invariant under padding. A ``lax.scan`` walks the L levels deepest
-    first while a ``vmap`` over the W slots runs every node of a level
-    concurrently; children's partial aggregates merge at each parent via a
-    masked scatter-add (padding slots run the zero dummy row and target the
-    trash row, so they are no-ops).
+    first while :func:`repro.core.algorithms.level_step` runs every node
+    of a level concurrently — the historic ``vmap`` of the scalar node
+    step off-TPU, one batched Pallas call per level when the fused kernel
+    path is on; children's partial aggregates merge at each parent via a
+    masked scatter-add (padding slots run the zero dummy row and target
+    the trash row, so they are no-ops).
     """
     k, d = grads.shape
     if plan.num_clients != k:
@@ -254,7 +256,7 @@ def execute(
     if participate is None:
         participate = jnp.ones((k,), grads.dtype)
     participate = participate * jnp.asarray(plan.alive, grads.dtype)
-    step = node_step(cfg)
+    lvl = level_step(cfg)
 
     # one zero dummy row (index K) backs the padding slots
     zrow = jnp.zeros((1, d), grads.dtype)
@@ -268,18 +270,11 @@ def execute(
         q_ext = jnp.concatenate([jnp.asarray(plan.q_budget, jnp.int32),
                                  jnp.zeros((1,), jnp.int32)])
 
-    def one(g_row, gamma_in, e_row, w_row, p_row, qb_row=None):
-        ctx = NodeCtx(global_mask=global_mask, participate=p_row,
-                      q_budget=qb_row)
-        return step(cfg, g_row, gamma_in, e_row, w_row, ctx)
-
     def body(inbox, xs):
         ids, mask, par = xs
-        args = (g_ext[ids], inbox[ids], e_ext[ids], w_ext[ids], p_ext[ids])
-        if q_ext is None:
-            gamma_out, e_new, stats = jax.vmap(one)(*args)
-        else:
-            gamma_out, e_new, stats = jax.vmap(one)(*args, q_ext[ids])
+        gamma_out, e_new, stats = lvl(
+            g_ext[ids], inbox[ids], e_ext[ids], w_ext[ids], p_ext[ids],
+            global_mask, None if q_ext is None else q_ext[ids], mask)
         inbox = inbox.at[par].add(gamma_out * mask[:, None])
         return inbox, (e_new, stats)
 

@@ -1,6 +1,7 @@
 """Core library: the paper's sparse incremental-aggregation algorithms."""
 
-from repro.core.algorithms import AggConfig, AggKind, HopStats, NodeCtx, node_step
+from repro.core.algorithms import (AggConfig, AggKind, HopStats, NodeCtx,
+                                   fused_node_steps, level_step, node_step)
 from repro.core.chain import ChainResult, run_chain, run_chain_with_topology
 
 # The aggregator object API lives in repro.agg (which itself builds on
@@ -10,7 +11,8 @@ _AGG_API = ("AggState", "Aggregator", "ChainAggregator", "RoundOut",
             "flat_dim", "make_aggregator")
 
 __all__ = [
-    "AggConfig", "AggKind", "HopStats", "NodeCtx", "node_step",
+    "AggConfig", "AggKind", "HopStats", "NodeCtx", "fused_node_steps",
+    "level_step", "node_step",
     "ChainResult", "run_chain", "run_chain_with_topology",
     *_AGG_API,
 ]

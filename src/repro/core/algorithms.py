@@ -9,6 +9,16 @@ the zero pattern) with *bit-exact* communication accounting per §V — this is
 the semantics layer used by the simulator, the tests, and (per-shard) by the
 distributed ring. Static-shape compact transport lives in ``ring.py``.
 
+Two execution forms share the semantics: the scalar :func:`node_step`
+(one node, one d-vector — the chain scan, the ring's register loop, the
+client-per-rank device kernel) and the batched :func:`level_step` (all W
+slots of a padded schedule level at once — the plan executors). Both
+dispatch their sparsify+EF and IA-combine stages through the Pallas
+kernels of :mod:`repro.kernels` when ``AggConfig.kernel_mode`` resolves to
+them (TPU, or interpret mode under ``REPRO_PALLAS_INTERPRET=1``);
+otherwise the unfused jnp bodies below run unchanged and remain the
+bit-exact oracle.
+
 Naming (paper §VI): Alg1=SIA, Alg2=RE-SIA, Alg3=CL-SIA, Alg4=TC-SIA,
 Alg5=CL-TC-SIA.
 """
@@ -23,6 +33,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import sparsify as sp
+from repro.kernels import ops as kops
 
 Array = jax.Array
 
@@ -60,6 +71,12 @@ class AggConfig:
     # Wire dtype for compact ring transport values (f32 matches ω=32;
     # bfloat16 is the beyond-paper ω=16 quantization knob).
     wire_dtype: str = "float32"
+    # Fused-kernel dispatch for the node-step hot path (repro.kernels):
+    # "auto" = compiled Pallas on TPU, Pallas-interpret off-TPU only when
+    # REPRO_PALLAS_INTERPRET=1, pure-jnp otherwise (the host executors stay
+    # the bit-exact oracle); "always" = force the kernels (interpret mode
+    # off-TPU — parity tests); "never" = force the unfused jnp reference.
+    kernel_mode: str = "auto"
 
     def __post_init__(self):
         if self.kind in (AggKind.TC_SIA, AggKind.CL_TC_SIA):
@@ -73,6 +90,9 @@ class AggConfig:
         # split over more ring segments than it has coordinates
         # (core.ring.segment_budget clamps rather than inflate §V bits).
         # Warn loudly: a hand-built q=0 config trains a flat loss curve.
+        if self.kernel_mode not in ("auto", "always", "never"):
+            raise ValueError(f"unknown kernel_mode {self.kernel_mode!r} "
+                             f"(expected 'auto', 'always' or 'never')")
         if self.kind not in (AggKind.DENSE_IA, AggKind.ROUTING):
             if self.q < 0:
                 raise ValueError("q must be non-negative for sparsified "
@@ -164,6 +184,246 @@ def _topq_mask_local(cfg: AggConfig, ctx: NodeCtx, x: Array, q: int) -> Array:
 
 
 # ---------------------------------------------------------------------------
+# Fused whole-level node steps (the repro.kernels hot path)
+#
+# Each `_fused_level_*` runs one schedule level — up to W concurrent tree
+# nodes, inputs [W, d] — through the batched Pallas kernels: the EF +
+# sparsify and IA-combine stages stream HBM once per level instead of once
+# per jnp op (per-algorithm sweep table: benchmarks/bench_round.py::
+# vector_passes — e.g. CL-SIA 7 unfused → 5 fused). The
+# dispatch is trace-time (`cfg.kernel_mode` × backend, see
+# :func:`repro.kernels.ops.resolve`): off-TPU without
+# REPRO_PALLAS_INTERPRET=1 the unfused jnp bodies below run unchanged, so
+# the host executors remain the bit-exact oracle. In interpret mode the
+# fused outputs are bit-exact to the unfused bodies under jit (both sides
+# see XLA's FMA contraction of w·g+e; eager unfused differs by 1 ulp —
+# tests/test_fused_node_step.py pins this).
+#
+# All five sparsified algorithms are covered. Per-lane sparsifier state
+# (exact Top-Q masks, dynamic-budget sort masks, threshold-bisection τ) is
+# computed jnp-side on a single materialized g̃ — the exact/dynamic paths
+# need the full sort anyway, and the threshold path replaces it with
+# `hist_rounds` streaming count passes through `count_ge_level`.
+# ---------------------------------------------------------------------------
+
+#: Bit counts, error-feedback rows, aggregates and nnz/bits stats of the
+#: fused paths are bit-exact to the unfused bodies; err_sq is computed with
+#: the same vmapped jnp reduction on both paths (not in-kernel) to keep the
+#: full HopStats comparable bitwise.
+
+_FUSED_KINDS = (AggKind.SIA, AggKind.RE_SIA, AggKind.CL_SIA, AggKind.TC_SIA,
+                AggKind.CL_TC_SIA)
+
+
+def fused_node_steps(cfg: AggConfig, *operands) -> bool:
+    """True when ``cfg`` dispatches node steps through the Pallas kernels.
+
+    Trace-time decision: the algorithm has a fused form, the resolved
+    backend uses Pallas (see :func:`repro.kernels.ops.resolve`), and the
+    promoted compute dtype is float32 (the kernels compute in f32; an
+    all-bf16 operand set would change rounding, so it falls back to the
+    unfused jnp path).
+    """
+    if cfg.kind not in _FUSED_KINDS:
+        return False
+    if not kops.resolve(cfg.kernel_mode)[0]:
+        return False
+    return (not operands
+            or jnp.result_type(*operands) == jnp.float32)
+
+
+def _f32(x: Array) -> Array:
+    return jnp.asarray(x, jnp.float32)
+
+
+def _lane_inf(w: int) -> Array:
+    return jnp.full((w,), jnp.inf, jnp.float32)
+
+
+def _local_mask_tau(cfg: AggConfig, x: Array, q: int, p: Array,
+                    qb: Optional[Array]):
+    """Per-lane sparsifier state for batched x [W, d].
+
+    Returns ``(mask_in, tau)`` such that ``keep = (|x| >= tau) | mask_in``
+    reproduces the unfused ``_topq_local`` keep set lane by lane:
+
+    * dynamic budgets → the sort-threshold keep mask, τ = +inf;
+    * exact Top-Q     → the ``lax.top_k`` support mask, τ = +inf;
+    * threshold Top-Q → mask None, τ from the batched branch-and-bisect
+      (counts through the ``count_ge_level`` kernel when fused).
+
+    Non-participating lanes (p = 0) are zeroed out of mask/τ — the
+    sparsify_ef stage then banks the whole g̃ into error feedback, exactly
+    the unfused straggler algebra. (The CL kernels override stragglers
+    internally, where this zeroing is a harmless no-op.)
+    """
+    w = x.shape[0]
+    if qb is not None:
+        mask = jax.vmap(sp.topq_mask_dynamic)(x, qb)
+        return mask * p[:, None], _lane_inf(w)
+    if cfg.topq_impl == "threshold":
+        tau = sp.threshold_for_topq(
+            x, q, branch=cfg.hist_branch, rounds=cfg.hist_rounds,
+            count_fn=lambda m, t: kops.count_ge_level(
+                m, t, mode=cfg.kernel_mode))
+        return None, jnp.where(p > 0, tau, jnp.inf)
+    mask = jax.vmap(lambda row: sp.topq_mask(row, q))(x)
+    return mask * p[:, None], _lane_inf(w)
+
+
+def _lane_err_sq(e_new: Array) -> Array:
+    return jax.vmap(lambda v: jnp.sum(v.astype(jnp.float32) ** 2))(e_new)
+
+
+def _stats_no_gmask(cfg: AggConfig, d: int, nnz: Array,
+                    e_new: Array) -> HopStats:
+    zeros = jnp.zeros_like(nnz)
+    return HopStats(nnz_out=nnz, nnz_global=zeros, nnz_local=nnz,
+                    bits=_bits(cfg, d, zeros, nnz),
+                    err_sq=_lane_err_sq(e_new))
+
+
+def _stats_gmask(cfg: AggConfig, d: int, gm: Array, nnz: Array,
+                 nnz_off: Array, e_new: Array) -> HopStats:
+    nz_g = jax.vmap(
+        lambda m: jnp.sum(m > 0).astype(jnp.int32))(gm)
+    return HopStats(nnz_out=nnz, nnz_global=nz_g, nnz_local=nnz_off,
+                    bits=_bits(cfg, d, nz_g, nnz_off),
+                    err_sq=_lane_err_sq(e_new))
+
+
+def _fused_level_sia(cfg, g, gam, e, w, p, gm, qb, valid):
+    d = g.shape[-1]
+    gt = w[:, None] * g + e
+    mask, tau = _local_mask_tau(cfg, gt, cfg.q, p, qb)
+    gbar, e_new, _ = kops.sparsify_ef_level(g, e, mask, w, tau, valid,
+                                            mode=cfg.kernel_mode)
+    gout, nnz, _ = kops.chain_accum_level(gam, gbar, valid,
+                                          mode=cfg.kernel_mode)
+    return gout, e_new, _stats_no_gmask(cfg, d, nnz, e_new)
+
+
+def _fused_level_re_sia(cfg, g, gam, e, w, p, gm, qb, valid):
+    d = g.shape[-1]
+    gt = w[:, None] * g + e
+    m_in = sp.support(gam)
+    if qb is None and cfg.topq_impl == "threshold":
+        _, tau = _local_mask_tau(cfg, gt, cfg.q, p, qb)
+        mask = m_in * p[:, None]
+    else:
+        m_l, tau = _local_mask_tau(cfg, gt, cfg.q, jnp.ones_like(p), qb)
+        mask = sp.mask_union(m_l, m_in) * p[:, None]
+    gbar, e_new, _ = kops.sparsify_ef_level(g, e, mask, w, tau, valid,
+                                            mode=cfg.kernel_mode)
+    gout, nnz, _ = kops.chain_accum_level(gam, gbar, valid,
+                                          mode=cfg.kernel_mode)
+    return gout, e_new, _stats_no_gmask(cfg, d, nnz, e_new)
+
+
+def _fused_level_tc_sia(cfg, g, gam, e, w, p, gm, qb, valid):
+    d = g.shape[-1]
+    gt = w[:, None] * g + e
+    m_k, tau = _local_mask_tau(cfg, (1 - gm) * gt, cfg.q_local,
+                               jnp.ones_like(p), qb)
+    m_in = jnp.clip(sp.support(gam) - gm, 0, 1)
+    if m_k is None:
+        # threshold impl: materialize the local mask to union it with the
+        # global/incoming masks (matches the unfused topq_mask_fn exactly)
+        x = (1 - gm) * gt
+        m_k = (jnp.abs(x) >= tau[:, None]).astype(x.dtype)
+        tau = _lane_inf(g.shape[0])
+    mm = sp.mask_union(gm, m_k, m_in)
+    mask = mm * p[:, None]
+    gbar, e_new, _ = kops.sparsify_ef_level(g, e, mask, w, tau, valid,
+                                            mode=cfg.kernel_mode)
+    gout, nnz, nnz_off = kops.chain_accum_level(gam, gbar, valid, gm,
+                                                mode=cfg.kernel_mode)
+    return gout, e_new, _stats_gmask(cfg, d, gm, nnz, nnz_off, e_new)
+
+
+def _fused_level_cl_sia(cfg, g, gam, e, w, p, gm, qb, valid):
+    d = g.shape[-1]
+    gt = w[:, None] * g + e
+    gamma_t = p[:, None] * gt + gam
+    mask, tau = _local_mask_tau(cfg, gamma_t, cfg.q, jnp.ones_like(p), qb)
+    gout, e_new, nnz, _ = kops.cl_fuse_level(g, e, gam, w, tau, p, valid,
+                                             mask_in=mask,
+                                             mode=cfg.kernel_mode)
+    return gout, e_new, _stats_no_gmask(cfg, d, nnz, e_new)
+
+
+def _fused_level_cl_tc_sia(cfg, g, gam, e, w, p, gm, qb, valid):
+    d = g.shape[-1]
+    gt = w[:, None] * g + e
+    lam_t = (1 - gm) * (p[:, None] * gt + gam)
+    mask, tau = _local_mask_tau(cfg, lam_t, cfg.q_local, jnp.ones_like(p),
+                                qb)
+    gout, e_new, nnz, nnz_off = kops.cl_fuse_level(
+        g, e, gam, w, tau, p, valid, gmask=gm, mask_in=mask,
+        mode=cfg.kernel_mode)
+    return gout, e_new, _stats_gmask(cfg, d, gm, nnz, nnz_off, e_new)
+
+
+_FUSED_LEVEL = {
+    AggKind.SIA: _fused_level_sia,
+    AggKind.RE_SIA: _fused_level_re_sia,
+    AggKind.CL_SIA: _fused_level_cl_sia,
+    AggKind.TC_SIA: _fused_level_tc_sia,
+    AggKind.CL_TC_SIA: _fused_level_cl_tc_sia,
+}
+
+
+def _run_fused_level(cfg, g, gamma_in, e, weight, participate, global_mask,
+                     q_budget, valid):
+    w_lanes = g.shape[0]
+    gm = _f32(global_mask)
+    if gm.ndim == 1:
+        gm = jnp.broadcast_to(gm, g.shape)
+    qb = None if q_budget is None else jnp.asarray(q_budget, jnp.int32)
+    v = (jnp.ones((w_lanes,), jnp.float32) if valid is None
+         else _f32(valid))
+    gout, e_new, stats = _FUSED_LEVEL[cfg.kind](
+        cfg, _f32(g), _f32(gamma_in), _f32(e), _f32(weight),
+        _f32(participate), gm, qb, v)
+    # padding lanes count nothing — the kernels already zero their outputs
+    # and nnz accumulators, but the jnp-side global-mask word count
+    # (nnz_global → bits) is lane-agnostic and must be masked to keep the
+    # fused and unfused modes interchangeable (see the unfused branch of
+    # level_step)
+    ok = v > 0
+    stats = jax.tree.map(lambda s: jnp.where(ok, s, jnp.zeros_like(s)),
+                         stats)
+    return gout, e_new, stats
+
+
+def _fused_scalar(cfg: AggConfig, g, gamma_in, e, weight, ctx: NodeCtx):
+    """Scalar-lane (d-vector) entry into the fused level path, or None.
+
+    Used by the per-node consumers — the sequential chain, the ring's
+    register fast path, the client-per-rank device kernel — which step one
+    node at a time: the node becomes a W=1 level.
+    """
+    if getattr(g, "ndim", 1) != 1:
+        return None
+    if not fused_node_steps(cfg, weight, g, e, gamma_in):
+        return None
+    qb = (None if ctx.q_budget is None
+          else jnp.asarray(ctx.q_budget, jnp.int32).reshape(1))
+    gout, e_new, stats = _run_fused_level(
+        cfg, g[None], gamma_in[None], e[None],
+        jnp.asarray(weight, jnp.float32).reshape(1),
+        jnp.asarray(ctx.participate, jnp.float32).reshape(1),
+        _f32(ctx.global_mask)[None], qb, None)
+    stats = jax.tree.map(lambda s: s[0], stats)
+    # scalar-form err reduction: a vmapped row-sum accumulates in a
+    # different order than the unfused scalar `_finalize` sum (1 ulp) —
+    # recompute it the scalar way so HopStats stay fully bit-comparable
+    stats = stats._replace(
+        err_sq=jnp.sum(e_new[0].astype(jnp.float32) ** 2))
+    return gout[0], e_new[0], stats
+
+
+# ---------------------------------------------------------------------------
 # Node steps. Signature:  (cfg, g, gamma_in, e, weight, ctx) ->
 #                         (gamma_out, e_new, HopStats)
 # ---------------------------------------------------------------------------
@@ -188,6 +448,9 @@ def _finalize(cfg: AggConfig, d: int, gamma_out: Array, e_new: Array,
 def step_sia(cfg: AggConfig, g: Array, gamma_in: Array, e: Array,
              weight: Array, ctx: NodeCtx) -> tuple[Array, Array, HopStats]:
     """Alg 1 — SoA sparse IA: local Top-Q then add."""
+    fused = _fused_scalar(cfg, g, gamma_in, e, weight, ctx)
+    if fused is not None:
+        return fused
     d = g.shape[-1]
     gt = weight * g + e                               # line 2
     gbar = _topq_local(cfg, ctx, gt, cfg.q)           # line 3
@@ -200,6 +463,9 @@ def step_sia(cfg: AggConfig, g: Array, gamma_in: Array, e: Array,
 def step_re_sia(cfg: AggConfig, g: Array, gamma_in: Array, e: Array,
                 weight: Array, ctx: NodeCtx) -> tuple[Array, Array, HopStats]:
     """Alg 2 — reduced-error: transmit inside union(local Top-Q, incoming)."""
+    fused = _fused_scalar(cfg, g, gamma_in, e, weight, ctx)
+    if fused is not None:
+        return fused
     d = g.shape[-1]
     gt = weight * g + e                               # line 2
     m_local = _topq_mask_local(cfg, ctx, gt, cfg.q)   # line 3
@@ -214,6 +480,9 @@ def step_re_sia(cfg: AggConfig, g: Array, gamma_in: Array, e: Array,
 def step_cl_sia(cfg: AggConfig, g: Array, gamma_in: Array, e: Array,
                 weight: Array, ctx: NodeCtx) -> tuple[Array, Array, HopStats]:
     """Alg 3 — constant-length: aggregate then Top-Q. ‖γ_out‖₀ ≤ Q."""
+    fused = _fused_scalar(cfg, g, gamma_in, e, weight, ctx)
+    if fused is not None:
+        return fused
     d = g.shape[-1]
     gt = weight * g + e                               # line 2
     gamma_tilde = ctx.participate * gt + gamma_in     # line 3
@@ -230,6 +499,9 @@ def step_cl_sia(cfg: AggConfig, g: Array, gamma_in: Array, e: Array,
 def step_tc_sia(cfg: AggConfig, g: Array, gamma_in: Array, e: Array,
                 weight: Array, ctx: NodeCtx) -> tuple[Array, Array, HopStats]:
     """Alg 4 — time-correlated sparse IA (global mask + Q_L local + incoming)."""
+    fused = _fused_scalar(cfg, g, gamma_in, e, weight, ctx)
+    if fused is not None:
+        return fused
     d = g.shape[-1]
     m = ctx.global_mask                                # line 3 (precomputed)
     gt = weight * g + e                                # line 2
@@ -250,6 +522,9 @@ def step_cl_tc_sia(cfg: AggConfig, g: Array, gamma_in: Array, e: Array,
     the off-mask part is CL-sparsified to Q_L. See DESIGN §1 for the printed
     listing's line-5 typo and the reading used here.
     """
+    fused = _fused_scalar(cfg, g, gamma_in, e, weight, ctx)
+    if fused is not None:
+        return fused
     d = g.shape[-1]
     m = ctx.global_mask                                # line 3
     gt = weight * g + e                                # line 2
@@ -299,3 +574,62 @@ def node_step(cfg: AggConfig):
             "sparse gradient is forwarded unmodified through all hops); use "
             "comm_cost.routing_bits / chain.run_chain with SIA for values.")
     return NODE_STEPS[cfg.kind]
+
+
+def level_step(cfg: AggConfig):
+    """Return the whole-level node-step function for ``cfg.kind``.
+
+    Signature::
+
+        fn(g [W,d], gamma_in [W,d], e [W,d], weight [W], participate [W],
+           global_mask ([d] shared or [W,d] per-lane), q_budget ([W]|None),
+           valid ([W]|None)) -> (gamma_out [W,d], e_new [W,d], HopStats [W])
+
+    One call runs all W slots of a padded level schedule concurrently —
+    this is what the plan executors (:func:`repro.agg.plan.execute`, the
+    device lowering's level loop) step with. When the fused kernel path is
+    on (:func:`fused_node_steps`) the level goes through the batched
+    Pallas kernels of :mod:`repro.kernels.level`, skipping ``valid == 0``
+    padding lanes; otherwise it is exactly the historic ``vmap`` of the
+    scalar node step (bit-identical to the pre-fusion executors).
+    """
+    step = node_step(cfg)
+
+    def run(g, gamma_in, e, weight, participate, global_mask,
+            q_budget=None, valid=None):
+        if fused_node_steps(cfg, weight, g, e, gamma_in):
+            return _run_fused_level(cfg, g, gamma_in, e, weight,
+                                    participate, global_mask, q_budget,
+                                    valid)
+        shared_mask = getattr(global_mask, "ndim", 1) == 1
+
+        def one(g_r, gam_r, e_r, w_r, p_r, *rest):
+            i = 0
+            gm_r = global_mask
+            if not shared_mask:
+                gm_r = rest[i]
+                i += 1
+            qb_r = rest[i] if q_budget is not None else None
+            ctx = NodeCtx(global_mask=gm_r, participate=p_r, q_budget=qb_r)
+            return step(cfg, g_r, gam_r, e_r, w_r, ctx)
+
+        args = [g, gamma_in, e, weight, participate]
+        if not shared_mask:
+            args.append(global_mask)
+        if q_budget is not None:
+            args.append(q_budget)
+        gamma_out, e_new, stats = jax.vmap(one)(*args)
+        if valid is not None:
+            # same contract as the fused kernels: valid == 0 (padding)
+            # lanes output zeros and count nothing, whatever garbage their
+            # input rows hold — keeps the two modes interchangeable for
+            # callers that don't route padding through zero dummy rows
+            ok = valid > 0
+            gamma_out = jnp.where(ok[:, None], gamma_out,
+                                  jnp.zeros_like(gamma_out))
+            e_new = jnp.where(ok[:, None], e_new, jnp.zeros_like(e_new))
+            stats = jax.tree.map(
+                lambda s: jnp.where(ok, s, jnp.zeros_like(s)), stats)
+        return gamma_out, e_new, stats
+
+    return run

@@ -124,6 +124,17 @@ def count_ge(mag: Array, taus: Array) -> Array:
     return jnp.sum(mag[:, None] >= taus[None, :], axis=0).astype(jnp.int32)
 
 
+def count_ge_batch(mag: Array, taus: Array) -> Array:
+    """Batched :func:`count_ge`: ``counts[w, b] = #{i : mag_{w,i} >= taus_{w,b}}``.
+
+    mag: [W, d]; taus: [W, B] → int32 [W, B]. Pure-jnp reference; the Pallas
+    kernel ``repro.kernels.level.count_ge_level_pallas`` matches this
+    contract (swapped in via ``count_fn``).
+    """
+    return jnp.sum(mag[:, :, None] >= taus[:, None, :],
+                   axis=1).astype(jnp.int32)
+
+
 def threshold_for_topq(
     x: Array,
     q: int,
@@ -148,11 +159,23 @@ def threshold_for_topq(
     Invariant maintained: ``count(|x| >= lo) >= q`` — the returned ``lo``
     therefore keeps at least q survivors (over-selection bounded by the ties
     inside one final-resolution bin; tests measure it).
+
+    ``x`` may also be batched ``[W, d]`` (the fused whole-level node-step
+    path): every lane runs its own bracket, ``count_fn`` then takes
+    ``(mag [W, d], taus [W, B]) → [W, B]`` (default
+    :func:`count_ge_batch`), and a ``[W]`` vector of thresholds is
+    returned — bitwise identical per lane to the 1-D path (same bracket
+    arithmetic, integer candidate counts).
     """
+    batched = x.ndim == 2
     if count_fn is None:
-        count_fn = count_ge
+        count_fn = count_ge_batch if batched else count_ge
     mag = jnp.abs(x.astype(jnp.float32))
-    hi = jnp.max(mag) if mag.size else jnp.float32(0)
+    if mag.size:
+        hi = jnp.max(mag, axis=-1) if batched else jnp.max(mag)
+    else:
+        hi = (jnp.zeros(mag.shape[:-1], jnp.float32) if batched
+              else jnp.float32(0))
     if axis_name is not None:
         hi = jax.lax.pmax(hi, axis_name)
     # strictly above max ⇒ count(hi) = 0 < q; tiny floor handles all-zero x
@@ -162,13 +185,15 @@ def threshold_for_topq(
     def round_body(carry, _):
         lo, hi = carry
         w = (hi - lo) / branch
-        taus = lo + w * jnp.arange(1, branch + 1, dtype=jnp.float32)
+        steps = jnp.arange(1, branch + 1, dtype=jnp.float32)
+        taus = (lo[:, None] + w[:, None] * steps if batched
+                else lo + w * steps)
         counts = count_fn(mag, taus)
         if axis_name is not None:
             counts = jax.lax.psum(counts, axis_name)
         # counts is non-increasing in tau; jstar = #{j : counts_j >= q} is
         # the largest candidate index (1-based) still keeping >= q.
-        jstar = jnp.sum((counts >= q).astype(jnp.int32))
+        jstar = jnp.sum((counts >= q).astype(jnp.int32), axis=-1)
         new_lo = lo + jstar.astype(jnp.float32) * w
         new_hi = new_lo + w
         return (new_lo, new_hi), None

@@ -1,7 +1,10 @@
 """Pallas TPU kernels for the aggregation hot path (see DESIGN §3).
 
-Kernels: count_ge (Top-Q threshold search), sparsify_ef (fused EF +
+Scalar kernels: count_ge (Top-Q threshold search), sparsify_ef (fused EF +
 sparsify), chain_accum (fused IA combine), cl_fuse (whole CL-SIA node step).
+Batched W-lane level variants (one ``pallas_call`` per schedule level,
+padding lanes skipped) live in :mod:`repro.kernels.level` and power the
+fused node-step paths of :mod:`repro.core.algorithms`.
 Dispatch through :mod:`repro.kernels.ops`; oracles in
 :mod:`repro.kernels.ref`.
 """

@@ -1,0 +1,375 @@
+"""Pallas TPU kernels: batched W-lane node-step stages (one pass per level).
+
+The aggregation executors run up to W tree nodes concurrently per level
+(the padded ``(L, W)`` schedule of :class:`repro.agg.plan.AggPlan`). The
+scalar kernels in :mod:`sparsify_ef` / :mod:`chain_accum` fuse one node's
+stage; these variants fuse a **whole level**: inputs carry a leading lane
+axis ``[W, d]``, per-lane scalars (weight, τ, participate) ride in as
+``[W]`` vectors, and the grid is ``(W, blocks)`` so every lane streams its
+d-vector tile by tile in one ``pallas_call`` — no ``vmap`` over scalar
+kernels, no per-lane dispatch overhead.
+
+Padding lanes (``valid == 0`` — the schedule's no-op slots) skip the
+elementwise math entirely (``pl.when``) and write zeros, which keeps the
+executors' masked scatter-adds no-ops. The DMA for a skipped lane still
+runs (block specs are static); the saved work is the VPU math and the
+output traffic semantics stay identical to computing on the zero dummy row.
+
+``cl_fuse_level`` is the whole CL-family node step (Algorithms 3 and 5,
+stragglers included) in a single pass:
+
+    g̃   = w·g + e
+    s    = p·g̃ + γ_in            (p ∈ {0,1}: participation)
+    Γ    = m·s                    (m: TCS global mask; 0 for Alg 3)
+    Λ̃   = (1−m)·s
+    keep = |Λ̃| ≥ τ  ∨  mask_in   (τ-sparsifier or precomputed exact mask)
+    Λ    = keep ? Λ̃ : 0
+    e′   = Λ̃ − Λ
+    γ    = Γ + Λ                  (Alg 3: γ = Λ)
+    γ_out, e′ = p>0 ? (γ, e′) : (γ_in, g̃)     (straggler forwarding)
+    nnz  = #{γ_out ≠ 0};  nnz_off = #{γ_out ≠ 0 ∧ m = 0}
+
+reading (g, e, γ_in[, m, mask_in]) and writing (γ_out, e′) in a single
+sweep — the unfused jnp chain takes one sweep per op (per-algorithm
+totals: ``benchmarks/bench_round.py::vector_passes``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+SUBLANES = 8
+LANES = 1024
+BLOCK = SUBLANES * LANES
+
+
+def _pad_lanes(v: jax.Array, n_blocks: int, pad: int):
+    """[W, d] → [W, n_blocks, SUBLANES, LANES] (zero padded)."""
+    w = v.shape[0]
+    return jnp.pad(v, ((0, 0), (0, pad))).reshape(
+        w, n_blocks, SUBLANES, LANES)
+
+
+def _geometry(d: int):
+    n_blocks = max(1, -(-d // BLOCK))
+    return n_blocks, n_blocks * BLOCK - d
+
+
+def _blk():
+    return pl.BlockSpec((1, 1, SUBLANES, LANES), lambda w, j: (w, j, 0, 0))
+
+
+def _lane():
+    return pl.BlockSpec((1,), lambda w, j: (w,))
+
+
+# ---------------------------------------------------------------------------
+# sparsify_ef_level — Algs 1/2/4 EF + sparsify stage, one pass per level
+# ---------------------------------------------------------------------------
+
+def _sparsify_ef_level_kernel(g_ref, e_ref, w_ref, tau_ref, v_ref, *rest,
+                              has_mask: bool):
+    if has_mask:
+        m_ref, gbar_ref, enew_ref, nnz_ref = rest
+    else:
+        gbar_ref, enew_ref, nnz_ref = rest
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        nnz_ref[0] = jnp.int32(0)
+
+    ok = v_ref[0] > 0
+
+    @pl.when(ok)
+    def _compute():
+        w = w_ref[0]
+        tau = tau_ref[0]
+        gt = (w * g_ref[...].astype(jnp.float32)
+              + e_ref[...].astype(jnp.float32))
+        keep = jnp.abs(gt) >= tau
+        if has_mask:
+            keep = keep | (m_ref[...] > 0)
+        gbar = jnp.where(keep, gt, 0.0)
+        gbar_ref[...] = gbar.astype(gbar_ref.dtype)
+        enew_ref[...] = (gt - gbar).astype(enew_ref.dtype)
+        nnz_ref[0] += jnp.sum(gbar != 0).astype(jnp.int32)
+
+    @pl.when(jnp.logical_not(ok))
+    def _skip():
+        gbar_ref[...] = jnp.zeros_like(gbar_ref)
+        enew_ref[...] = jnp.zeros_like(enew_ref)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sparsify_ef_level_pallas(g, e, mask_in, weight, tau, valid, *,
+                             interpret: bool = False):
+    """Batched fused EF+sparsify. g,e: [W,d]; weight,tau,valid: [W];
+    mask_in (optional [W,d]): keep mask OR-ed with the τ test (None skips
+    the mask stream entirely — the pure-threshold sparsifier path).
+
+    Returns (ḡ [W,d] g.dtype, e' [W,d] e.dtype, nnz [W] int32).
+    """
+    w_lanes, d = g.shape
+    n_blocks, pad = _geometry(d)
+    gp = _pad_lanes(g.astype(jnp.float32), n_blocks, pad)
+    ep = _pad_lanes(e.astype(jnp.float32), n_blocks, pad)
+    has_mask = mask_in is not None
+    operands = [gp, ep, weight.astype(jnp.float32), tau.astype(jnp.float32),
+                valid.astype(jnp.float32)]
+    in_specs = [_blk(), _blk(), _lane(), _lane(), _lane()]
+    if has_mask:
+        operands.append(_pad_lanes(mask_in.astype(jnp.float32), n_blocks,
+                                   pad))
+        in_specs.append(_blk())
+
+    gbar, e_new, nnz = pl.pallas_call(
+        functools.partial(_sparsify_ef_level_kernel, has_mask=has_mask),
+        grid=(w_lanes, n_blocks),
+        in_specs=in_specs,
+        out_specs=[_blk(), _blk(), _lane()],
+        out_shape=[
+            jax.ShapeDtypeStruct(gp.shape, g.dtype),
+            jax.ShapeDtypeStruct(ep.shape, e.dtype),
+            jax.ShapeDtypeStruct((w_lanes,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(*operands)
+    return (gbar.reshape(w_lanes, -1)[:, :d],
+            e_new.reshape(w_lanes, -1)[:, :d], nnz)
+
+
+# ---------------------------------------------------------------------------
+# chain_accum_level — Algs 1/2/4 IA combine, fused support counts
+# ---------------------------------------------------------------------------
+
+def _chain_accum_level_kernel(gin_ref, gbar_ref, v_ref, *rest,
+                              has_gmask: bool):
+    if has_gmask:
+        gm_ref, gout_ref, nnz_ref, off_ref = rest
+    else:
+        gout_ref, nnz_ref, off_ref = rest
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        nnz_ref[0] = jnp.int32(0)
+        off_ref[0] = jnp.int32(0)
+
+    ok = v_ref[0] > 0
+
+    @pl.when(ok)
+    def _compute():
+        gamma = (gin_ref[...].astype(jnp.float32)
+                 + gbar_ref[...].astype(jnp.float32))
+        gout_ref[...] = gamma.astype(gout_ref.dtype)
+        nz = gamma != 0
+        nnz_ref[0] += jnp.sum(nz).astype(jnp.int32)
+        if has_gmask:
+            off_ref[0] += jnp.sum(nz & (gm_ref[...] <= 0)).astype(jnp.int32)
+        else:
+            off_ref[0] += jnp.sum(nz).astype(jnp.int32)
+
+    @pl.when(jnp.logical_not(ok))
+    def _skip():
+        gout_ref[...] = jnp.zeros_like(gout_ref)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def chain_accum_level_pallas(gamma_in, gbar, valid, gmask=None, *,
+                             interpret: bool = False):
+    """Batched γ_out = γ_in + ḡ with fused counts.
+
+    gamma_in, gbar: [W,d]; valid: [W]; gmask (optional, [W,d]): the TCS
+    global mask — when given, ``nnz_off`` counts the off-mask support
+    ``#{γ_out ≠ 0 ∧ m = 0}`` (the §V locally-indexed part); without it,
+    ``nnz_off == nnz``. Returns (γ_out [W,d], nnz [W] i32, nnz_off [W] i32).
+    """
+    w_lanes, d = gamma_in.shape
+    n_blocks, pad = _geometry(d)
+    gi = _pad_lanes(gamma_in.astype(jnp.float32), n_blocks, pad)
+    gb = _pad_lanes(gbar.astype(jnp.float32), n_blocks, pad)
+    has_gmask = gmask is not None
+    operands = [gi, gb, valid.astype(jnp.float32)]
+    in_specs = [_blk(), _blk(), _lane()]
+    if has_gmask:
+        operands.append(_pad_lanes(gmask.astype(jnp.float32), n_blocks, pad))
+        in_specs.append(_blk())
+
+    gout, nnz, nnz_off = pl.pallas_call(
+        functools.partial(_chain_accum_level_kernel, has_gmask=has_gmask),
+        grid=(w_lanes, n_blocks),
+        in_specs=in_specs,
+        out_specs=[_blk(), _lane(), _lane()],
+        out_shape=[
+            jax.ShapeDtypeStruct(gi.shape, gamma_in.dtype),
+            jax.ShapeDtypeStruct((w_lanes,), jnp.int32),
+            jax.ShapeDtypeStruct((w_lanes,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(*operands)
+    return gout.reshape(w_lanes, -1)[:, :d], nnz, nnz_off
+
+
+# ---------------------------------------------------------------------------
+# cl_fuse_level — Algs 3/5 complete node step in one pass
+# ---------------------------------------------------------------------------
+
+def _cl_fuse_level_kernel(g_ref, e_ref, gin_ref, w_ref, tau_ref, p_ref,
+                          v_ref, *rest, has_gmask: bool, has_mask: bool):
+    idx = 0
+    gm_ref = mask_ref = None
+    if has_gmask:
+        gm_ref = rest[idx]
+        idx += 1
+    if has_mask:
+        mask_ref = rest[idx]
+        idx += 1
+    gout_ref, enew_ref, nnz_ref, off_ref = rest[idx:]
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        nnz_ref[0] = jnp.int32(0)
+        off_ref[0] = jnp.int32(0)
+
+    ok = v_ref[0] > 0
+
+    @pl.when(ok)
+    def _compute():
+        w = w_ref[0]
+        tau = tau_ref[0]
+        p = p_ref[0]
+        gt = (w * g_ref[...].astype(jnp.float32)
+              + e_ref[...].astype(jnp.float32))
+        gin = gin_ref[...].astype(jnp.float32)
+        s = p * gt + gin
+        if has_gmask:
+            m = gm_ref[...]
+            lam_t = (1.0 - m) * s
+        else:
+            lam_t = s
+        keep = jnp.abs(lam_t) >= tau
+        if has_mask:
+            keep = keep | (mask_ref[...] > 0)
+        lam = jnp.where(keep, lam_t, 0.0)
+        e_new = lam_t - lam
+        gamma = (m * s + lam) if has_gmask else lam
+        alive = p > 0
+        gamma = jnp.where(alive, gamma, gin)
+        e_new = jnp.where(alive, e_new, gt)
+        gout_ref[...] = gamma.astype(gout_ref.dtype)
+        enew_ref[...] = e_new.astype(enew_ref.dtype)
+        nz = gamma != 0
+        nnz_ref[0] += jnp.sum(nz).astype(jnp.int32)
+        if has_gmask:
+            off_ref[0] += jnp.sum(nz & (gm_ref[...] <= 0)).astype(jnp.int32)
+        else:
+            off_ref[0] += jnp.sum(nz).astype(jnp.int32)
+
+    @pl.when(jnp.logical_not(ok))
+    def _skip():
+        gout_ref[...] = jnp.zeros_like(gout_ref)
+        enew_ref[...] = jnp.zeros_like(enew_ref)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def cl_fuse_level_pallas(g, e, gamma_in, weight, tau, participate, valid,
+                         gmask=None, mask_in=None, *,
+                         interpret: bool = False):
+    """Batched complete CL node step (Algs 3/5, stragglers included).
+
+    g, e, gamma_in: [W,d]; weight, tau, participate, valid: [W];
+    gmask (optional, [W,d]): TCS global mask m (Alg 5; None = Alg 3);
+    mask_in (optional, [W,d]): precomputed keep mask OR-ed with the τ test
+    (pass τ=+inf for a pure-mask exact sparsifier).
+
+    Returns (γ_out [W,d], e' [W,d], nnz [W] i32, nnz_off [W] i32) where
+    ``nnz_off`` is the off-global-mask support (= nnz when gmask is None).
+    """
+    w_lanes, d = g.shape
+    n_blocks, pad = _geometry(d)
+    gp = _pad_lanes(g.astype(jnp.float32), n_blocks, pad)
+    ep = _pad_lanes(e.astype(jnp.float32), n_blocks, pad)
+    gi = _pad_lanes(gamma_in.astype(jnp.float32), n_blocks, pad)
+    has_gmask = gmask is not None
+    has_mask = mask_in is not None
+    operands = [gp, ep, gi, weight.astype(jnp.float32),
+                tau.astype(jnp.float32), participate.astype(jnp.float32),
+                valid.astype(jnp.float32)]
+    in_specs = [_blk(), _blk(), _blk(), _lane(), _lane(), _lane(), _lane()]
+    if has_gmask:
+        operands.append(_pad_lanes(gmask.astype(jnp.float32), n_blocks, pad))
+        in_specs.append(_blk())
+    if has_mask:
+        operands.append(_pad_lanes(mask_in.astype(jnp.float32), n_blocks,
+                                   pad))
+        in_specs.append(_blk())
+
+    gout, e_new, nnz, nnz_off = pl.pallas_call(
+        functools.partial(_cl_fuse_level_kernel, has_gmask=has_gmask,
+                          has_mask=has_mask),
+        grid=(w_lanes, n_blocks),
+        in_specs=in_specs,
+        out_specs=[_blk(), _blk(), _lane(), _lane()],
+        out_shape=[
+            jax.ShapeDtypeStruct(gi.shape, gamma_in.dtype),
+            jax.ShapeDtypeStruct(ep.shape, e.dtype),
+            jax.ShapeDtypeStruct((w_lanes,), jnp.int32),
+            jax.ShapeDtypeStruct((w_lanes,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(*operands)
+    return (gout.reshape(w_lanes, -1)[:, :d],
+            e_new.reshape(w_lanes, -1)[:, :d], nnz, nnz_off)
+
+
+# ---------------------------------------------------------------------------
+# count_ge_level — per-lane candidate-threshold counting (batched bisection)
+# ---------------------------------------------------------------------------
+
+def _count_ge_level_kernel(x_ref, taus_ref, out_ref, *, branch: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    mag = jnp.abs(x_ref[...].astype(jnp.float32))
+
+    def body(b, _):
+        tau = taus_ref[0, b]
+        out_ref[0, b] += jnp.sum(mag >= tau).astype(jnp.int32)
+        return ()
+
+    jax.lax.fori_loop(0, branch, body, ())
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def count_ge_level_pallas(x: jax.Array, taus: jax.Array, *,
+                          interpret: bool = False) -> jax.Array:
+    """counts[w, b] = #{i : |x_{w,i}| >= taus_{w,b}}; x [W,d], taus [W,B].
+
+    Per-lane brackets of the batched branch-and-bisect Top-Q threshold
+    search. Zero padding is excluded by construction when taus > 0 (the
+    bisection brackets always are).
+    """
+    w_lanes, d = x.shape
+    branch = taus.shape[-1]
+    n_blocks, pad = _geometry(d)
+    xp = _pad_lanes(x.astype(jnp.float32), n_blocks, pad)
+
+    out = pl.pallas_call(
+        functools.partial(_count_ge_level_kernel, branch=branch),
+        grid=(w_lanes, n_blocks),
+        in_specs=[_blk(),
+                  pl.BlockSpec((1, branch), lambda w, j: (w, 0))],
+        out_specs=pl.BlockSpec((1, branch), lambda w, j: (w, 0)),
+        out_shape=jax.ShapeDtypeStruct((w_lanes, branch), jnp.int32),
+        interpret=interpret,
+    )(xp, taus.astype(jnp.float32))
+    return out

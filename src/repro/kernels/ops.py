@@ -16,14 +16,25 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.chain_accum import chain_accum_pallas, cl_fuse_pallas
+from repro.kernels.level import (chain_accum_level_pallas,
+                                 cl_fuse_level_pallas,
+                                 count_ge_level_pallas,
+                                 sparsify_ef_level_pallas)
 from repro.kernels.sparsify_ef import sparsify_ef_pallas
 from repro.kernels.topq_threshold import count_ge_pallas
 
 Mode = Literal["auto", "always", "never"]
 
 
-def _resolve(mode: Mode) -> tuple[bool, bool]:
-    """→ (use_pallas, interpret)."""
+def resolve(mode: Mode) -> tuple[bool, bool]:
+    """Resolve a dispatch mode → ``(use_pallas, interpret)``.
+
+    Trace-time (Python-level) decision: compiled Pallas on TPU,
+    Pallas-interpret off-TPU when forced (``mode="always"`` or
+    ``REPRO_PALLAS_INTERPRET=1``), pure-jnp reference otherwise — the
+    fused node-step paths in :mod:`repro.core.algorithms` key off this, so
+    the host executors stay the bit-exact jnp oracle off-TPU by default.
+    """
     if mode == "never":
         return False, False
     on_tpu = jax.default_backend() == "tpu"
@@ -35,6 +46,9 @@ def _resolve(mode: Mode) -> tuple[bool, bool]:
     if os.environ.get("REPRO_PALLAS_INTERPRET") == "1":
         return True, True
     return False, False
+
+
+_resolve = resolve          # historic private alias
 
 
 def count_ge(x: jax.Array, taus: jax.Array, *, mode: Mode = "auto"):
@@ -67,3 +81,54 @@ def cl_fuse(g, e, gamma_in, weight, tau, *, mode: Mode = "auto"):
                               jnp.asarray(tau), interpret=interp)
     return ref.ref_cl_fuse(g, e, gamma_in, jnp.asarray(weight),
                            jnp.asarray(tau))
+
+
+# ---------------------------------------------------------------------------
+# Batched W-lane level variants (the (L, W) schedule hot path)
+# ---------------------------------------------------------------------------
+
+def sparsify_ef_level(g, e, mask_in, weight, tau, valid, *,
+                      mode: Mode = "auto"):
+    """Batched fused EF+sparsify over a level's W lanes ([W, d] inputs)."""
+    use, interp = _resolve(mode)
+    if use:
+        return sparsify_ef_level_pallas(g, e, mask_in, jnp.asarray(weight),
+                                        jnp.asarray(tau),
+                                        jnp.asarray(valid),
+                                        interpret=interp)
+    return ref.ref_sparsify_ef_level(g, e, mask_in, jnp.asarray(weight),
+                                     jnp.asarray(tau), jnp.asarray(valid))
+
+
+def chain_accum_level(gamma_in, gbar, valid, gmask=None, *,
+                      mode: Mode = "auto"):
+    """Batched IA combine with fused (total, off-global-mask) counts."""
+    use, interp = _resolve(mode)
+    if use:
+        return chain_accum_level_pallas(gamma_in, gbar, jnp.asarray(valid),
+                                        gmask, interpret=interp)
+    return ref.ref_chain_accum_level(gamma_in, gbar, jnp.asarray(valid),
+                                     gmask)
+
+
+def cl_fuse_level(g, e, gamma_in, weight, tau, participate, valid,
+                  gmask=None, mask_in=None, *, mode: Mode = "auto"):
+    """Batched complete CL node step (Algs 3/5, stragglers included)."""
+    use, interp = _resolve(mode)
+    if use:
+        return cl_fuse_level_pallas(g, e, gamma_in, jnp.asarray(weight),
+                                    jnp.asarray(tau),
+                                    jnp.asarray(participate),
+                                    jnp.asarray(valid), gmask, mask_in,
+                                    interpret=interp)
+    return ref.ref_cl_fuse_level(g, e, gamma_in, jnp.asarray(weight),
+                                 jnp.asarray(tau), jnp.asarray(participate),
+                                 jnp.asarray(valid), gmask, mask_in)
+
+
+def count_ge_level(x: jax.Array, taus: jax.Array, *, mode: Mode = "auto"):
+    """Per-lane candidate-threshold counts ([W, d] × [W, B] → [W, B])."""
+    use, interp = _resolve(mode)
+    if use:
+        return count_ge_level_pallas(x, taus, interpret=interp)
+    return ref.ref_count_ge_level(x, taus)

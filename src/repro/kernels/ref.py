@@ -64,3 +64,82 @@ def ref_cl_fuse(g: Array, e: Array, gamma_in: Array, weight: Array,
     e_new = gt - gamma
     nnz = jnp.sum(gamma != 0).astype(jnp.int32)
     return gamma.astype(gamma_in.dtype), e_new.astype(e.dtype), nnz
+
+
+# ---------------------------------------------------------------------------
+# Batched W-lane level variants (contracts for repro.kernels.level)
+# ---------------------------------------------------------------------------
+
+def _apply_valid(valid: Array, *arrays):
+    v = (valid > 0)
+    out = tuple(jnp.where(v[:, None], a, jnp.zeros_like(a)) for a in arrays)
+    return out if len(out) > 1 else out[0]
+
+
+def ref_sparsify_ef_level(g, e, mask_in, weight, tau, valid):
+    """Batched :func:`ref_sparsify_ef`; lanes with ``valid == 0`` output
+    zeros (the level schedule's padding slots). ``mask_in`` may be None
+    (pure-threshold keep). All counts are int32 [W]."""
+    gt = (weight[:, None].astype(jnp.float32) * g.astype(jnp.float32)
+          + e.astype(jnp.float32))
+    keep = jnp.abs(gt) >= tau[:, None].astype(jnp.float32)
+    if mask_in is not None:
+        keep = keep | (mask_in > 0)
+    gbar = jnp.where(keep, gt, 0.0)
+    e_new = gt - gbar
+    gbar, e_new = _apply_valid(valid, gbar, e_new)
+    nnz = jnp.sum(gbar != 0, axis=-1).astype(jnp.int32)
+    return gbar.astype(g.dtype), e_new.astype(e.dtype), nnz
+
+
+def ref_chain_accum_level(gamma_in, gbar, valid, gmask=None):
+    """Batched :func:`ref_chain_accum` + off-global-mask support count."""
+    gamma = gamma_in.astype(jnp.float32) + gbar.astype(jnp.float32)
+    gamma = _apply_valid(valid, gamma)
+    nz = gamma != 0
+    nnz = jnp.sum(nz, axis=-1).astype(jnp.int32)
+    if gmask is None:
+        nnz_off = nnz
+    else:
+        nnz_off = jnp.sum(nz & (gmask <= 0), axis=-1).astype(jnp.int32)
+    return gamma.astype(gamma_in.dtype), nnz, nnz_off
+
+
+def ref_cl_fuse_level(g, e, gamma_in, weight, tau, participate, valid,
+                      gmask=None, mask_in=None):
+    """Batched complete CL node step (Algorithms 3/5 with stragglers).
+
+    See :func:`repro.kernels.level.cl_fuse_level_pallas` for the math.
+    Returns (γ_out [W,d], e' [W,d], nnz [W] i32, nnz_off [W] i32).
+    """
+    w = weight[:, None].astype(jnp.float32)
+    p = participate[:, None].astype(jnp.float32)
+    gt = w * g.astype(jnp.float32) + e.astype(jnp.float32)
+    gin = gamma_in.astype(jnp.float32)
+    s = p * gt + gin
+    lam_t = (1.0 - gmask) * s if gmask is not None else s
+    keep = jnp.abs(lam_t) >= tau[:, None].astype(jnp.float32)
+    if mask_in is not None:
+        keep = keep | (mask_in > 0)
+    lam = jnp.where(keep, lam_t, 0.0)
+    e_new = lam_t - lam
+    gamma = (gmask * s + lam) if gmask is not None else lam
+    alive = p > 0
+    gamma = jnp.where(alive, gamma, gin)
+    e_new = jnp.where(alive, e_new, gt)
+    gamma, e_new = _apply_valid(valid, gamma, e_new)
+    nz = gamma != 0
+    nnz = jnp.sum(nz, axis=-1).astype(jnp.int32)
+    if gmask is None:
+        nnz_off = nnz
+    else:
+        nnz_off = jnp.sum(nz & (gmask <= 0), axis=-1).astype(jnp.int32)
+    return (gamma.astype(gamma_in.dtype), e_new.astype(e.dtype), nnz,
+            nnz_off)
+
+
+def ref_count_ge_level(x: Array, taus: Array) -> Array:
+    """counts[w, b] = #{i : |x_{w,i}| >= taus_{w,b}}; x [W,d], taus [W,B]."""
+    mag = jnp.abs(x.astype(jnp.float32))
+    return jnp.sum(mag[:, :, None] >= taus[:, None, :],
+                   axis=1).astype(jnp.int32)

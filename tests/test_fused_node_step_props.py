@@ -1,0 +1,80 @@
+"""Property test (hypothesis): fused (Pallas-interpret) node steps are
+bit-exact to the unfused jnp reference through ``execute`` on random
+topologies, budgets, straggler sets and sparsifier implementations, for
+all five algorithms. See tests/test_fused_node_step.py for the directed
+suite and the jit/FMA comparison rules (both paths jitted; err_sq to
+1 ulp)."""
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.agg import compile_plan, execute
+from repro.core.algorithms import AggConfig, AggKind
+from repro.topo.tree import PS, AggTree
+
+ALL_KINDS = [AggKind.SIA, AggKind.RE_SIA, AggKind.CL_SIA, AggKind.TC_SIA,
+             AggKind.CL_TC_SIA]
+
+D = 48
+
+
+def _gmask(cfg, d):
+    if cfg.kind in (AggKind.TC_SIA, AggKind.CL_TC_SIA):
+        return jnp.zeros((d,)).at[jnp.arange(cfg.q_global)].set(1.0)
+    return None
+
+
+@settings(max_examples=12, deadline=None)
+@given(data=st.data(),
+       kind=st.sampled_from(ALL_KINDS),
+       impl=st.sampled_from(["exact", "threshold"]),
+       seed=st.integers(0, 2**16))
+def test_fused_execute_bit_exact_on_random_trees(data, kind, impl, seed):
+    k = data.draw(st.integers(2, 7), label="k")
+    # random attachment tree: node i hangs off a node < i (or the PS)
+    parent = [PS] + [data.draw(st.integers(-1, i - 1), label=f"p{i}")
+                     for i in range(1, k)]
+    tree = AggTree(parent=tuple(parent))
+    cfg_u = AggConfig(kind=kind, q=data.draw(st.integers(1, D), label="q"),
+                      topq_impl=impl, kernel_mode="never",
+                      hist_rounds=2, hist_branch=16)
+    cfg_f = dataclasses.replace(cfg_u, kernel_mode="always")
+
+    g = jax.random.normal(jax.random.PRNGKey(seed), (k, D))
+    e = 0.1 * jax.random.normal(jax.random.PRNGKey(seed + 1), (k, D))
+    w = jnp.ones((k,), jnp.float32)
+    gm = _gmask(cfg_u, D)
+    part = None
+    if data.draw(st.booleans(), label="stragglers"):
+        bits = [data.draw(st.booleans(), label=f"s{i}") for i in range(k)]
+        part = jnp.asarray(bits, jnp.float32)
+    qb = None
+    if impl == "exact" and data.draw(st.booleans(), label="budgets"):
+        qb = np.asarray([data.draw(st.integers(0, D), label=f"q{i}")
+                         for i in range(k)], np.int32)
+
+    pad = (tree.max_depth() + data.draw(st.integers(0, 2), label="padl"),
+           k + data.draw(st.integers(0, 2), label="padw"))
+    plan = compile_plan(tree, pad_to=pad, q_budget=qb)
+    ru = jax.jit(functools.partial(
+        execute, cfg_u, global_mask=gm, participate=part))(plan, g, e, w)
+    rf = jax.jit(functools.partial(
+        execute, cfg_f, global_mask=gm, participate=part))(plan, g, e, w)
+    np.testing.assert_array_equal(np.asarray(ru.aggregate),
+                                  np.asarray(rf.aggregate))
+    np.testing.assert_array_equal(np.asarray(ru.e_new),
+                                  np.asarray(rf.e_new))
+    for field in ("nnz_out", "nnz_global", "nnz_local", "bits"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(ru.stats, field)),
+            np.asarray(getattr(rf.stats, field)), err_msg=field)
+    np.testing.assert_allclose(np.asarray(ru.stats.err_sq),
+                               np.asarray(rf.stats.err_sq), rtol=1e-6)

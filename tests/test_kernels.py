@@ -93,3 +93,100 @@ def test_mode_never_uses_ref():
     taus = jnp.asarray([0.5, 1.5])
     out = ops.count_ge(x, taus, mode="never")
     np.testing.assert_array_equal(np.asarray(out), [100, 0])
+
+
+# ---------------------------------------------------------------------------
+# Batched W-lane level kernels (repro.kernels.level)
+#
+# Refs are jitted: XLA:CPU contracts w·g+e into an FMA inside any compiled
+# graph (interpret-mode Pallas included); an eager ref differs by 1 ulp.
+# ---------------------------------------------------------------------------
+
+LEVEL_SHAPES = [(1, 63), (3, 1024), (2, 8192 + 17), (5, 4096)]
+
+
+def _level_inputs(w, d, seed=0):
+    key = jax.random.PRNGKey(seed)
+    g = jax.random.normal(key, (w, d))
+    e = 0.1 * jax.random.normal(jax.random.fold_in(key, 1), (w, d))
+    gin = jax.random.normal(jax.random.fold_in(key, 2), (w, d)) * (
+        jax.random.uniform(jax.random.fold_in(key, 3), (w, d)) < 0.05)
+    mask = (jax.random.uniform(jax.random.fold_in(key, 4), (w, d))
+            < 0.02).astype(jnp.float32)
+    gmask = (jax.random.uniform(jax.random.fold_in(key, 5), (w, d))
+             < 0.05).astype(jnp.float32)
+    ws = jnp.linspace(0.5, 1.9, w)
+    tau = jnp.linspace(0.6, 2.0, w)
+    p = (jnp.arange(w) % 2).astype(jnp.float32)        # stragglers mixed in
+    valid = jnp.where(jnp.arange(w) == w - 1, 0.0, 1.0)  # last lane padded
+    return g, e, gin, mask, gmask, ws, tau, p, valid
+
+
+@pytest.mark.parametrize("w,d", LEVEL_SHAPES)
+def test_sparsify_ef_level_sweep(w, d):
+    import functools
+    g, e, gin, mask, gmask, ws, tau, p, valid = _level_inputs(w, d, d)
+    for mi in (None, mask):
+        r = jax.jit(functools.partial(ops.sparsify_ef_level,
+                                      mode="never"))(g, e, mi, ws, tau,
+                                                     valid)
+        k = ops.sparsify_ef_level(g, e, mi, ws, tau, valid, mode="always")
+        for a, b in zip(r, k):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # invalid (padding) lanes output zeros and count nothing
+    assert not np.asarray(k[0][-1]).any()
+    assert int(k[2][-1]) == 0
+
+
+@pytest.mark.parametrize("w,d", LEVEL_SHAPES)
+def test_chain_accum_level_sweep(w, d):
+    import functools
+    g, e, gin, mask, gmask, ws, tau, p, valid = _level_inputs(w, d, d + 1)
+    for gm in (None, gmask):
+        r = jax.jit(functools.partial(ops.chain_accum_level,
+                                      mode="never"))(gin, g, valid, gm)
+        k = ops.chain_accum_level(gin, g, valid, gm, mode="always")
+        for a, b in zip(r, k):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # off-mask count never exceeds the total
+    assert (np.asarray(k[2]) <= np.asarray(k[1])).all()
+
+
+@pytest.mark.parametrize("w,d", LEVEL_SHAPES)
+def test_cl_fuse_level_sweep(w, d):
+    import functools
+    g, e, gin, mask, gmask, ws, tau, p, valid = _level_inputs(w, d, d + 2)
+    for gm in (None, gmask):
+        for mi in (None, mask):
+            r = jax.jit(functools.partial(
+                ops.cl_fuse_level, mode="never"))(g, e, gin, ws, tau, p,
+                                                  valid, gm, mi)
+            k = ops.cl_fuse_level(g, e, gin, ws, tau, p, valid, gm, mi,
+                                  mode="always")
+            for a, b in zip(r, k):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("w,d", LEVEL_SHAPES)
+def test_count_ge_level_sweep(w, d):
+    key = jax.random.PRNGKey(d + 3)
+    x = jax.random.normal(key, (w, d))
+    taus = jnp.abs(jax.random.normal(jax.random.fold_in(key, 1),
+                                     (w, 32))) + 0.01
+    np.testing.assert_array_equal(
+        np.asarray(ops.count_ge_level(x, taus, mode="never")),
+        np.asarray(ops.count_ge_level(x, taus, mode="always")))
+
+
+def test_cl_fuse_level_straggler_semantics():
+    """p=0 lanes forward γ_in unchanged and bank g̃ = w·g+e into EF."""
+    w, d = 2, 1024
+    g, e, gin, mask, gmask, ws, tau, p, valid = _level_inputs(w, d, 9)
+    p = jnp.asarray([0.0, 1.0])
+    valid = jnp.ones((w,))
+    gout, e_new, nnz, _ = ops.cl_fuse_level(g, e, gin, ws, tau, p, valid,
+                                            mode="always")
+    np.testing.assert_array_equal(np.asarray(gout[0]), np.asarray(gin[0]))
+    np.testing.assert_allclose(np.asarray(e_new[0]),
+                               np.asarray(ws[0] * g[0] + e[0]), rtol=1e-6)
+    assert int(nnz[0]) == int(jnp.sum(gin[0] != 0))
