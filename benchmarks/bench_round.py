@@ -25,8 +25,15 @@ vector, however many operand streams ride along — a fused kernel reading
     §V support counts   1 (2)      0  nnz (+ off-mask nnz for TC) fuse
                                      into the kernels' accumulators
 
+The fused table assumes the TC global mask *streams* — since the
+lane-shared block spec in ``kernels/level.py`` the 1-D mask rides into the
+kernels once per block with no ``[W, d]`` HBM broadcast, so the counted
+sweeps are what actually executes (the broadcast was an uncounted extra
+write + W-fold read before).
+
 Run ``PYTHONPATH=src python benchmarks/bench_round.py`` (add ``--smoke``
-for the CI-sized instant version; ``--dim/--clients/--reps`` to scale).
+for the CI-sized instant version; ``--dim/--clients/--reps`` to scale;
+``--nested`` for the pod×data staged round and its DCI-wire split).
 The JSON lands at the repo root so every future PR diffs against it.
 """
 
@@ -158,6 +165,103 @@ def bench_device(k, d, q, reps):
     return out
 
 
+def bench_nested(k_pod, k_data, d, q, reps):
+    """Nested (pod×data) staged round vs the flat ring on the same ranks.
+
+    Runs the chain×chain :class:`~repro.agg.nested.NestedPlan` through
+    ``run_nested_segments_local`` on a (pod, data) mesh and the flat
+    rotated ring over the combined (pod, data) axis, per algorithm.
+    Records per-stage §V bits — stage 1 is the scarce-link (pod-seam DCI)
+    wire — plus the analytic flat-vs-staged DCI split: the flat ring
+    crosses the seam K_p·K_d times per round, the staged schedule K_p
+    (``core.comm_cost.dci_wire_flat_vs_nested``), so the measured stage-1
+    bits are the flat ring's seam traffic ÷ K_d.
+    """
+    import functools
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro import compat
+    from repro.agg.device import run_nested_segments_local
+    from repro.agg.nested import pod_ring_nested
+    from repro.core import comm_cost as cc
+    from repro.core.ring import RingStats, rotated_ring_local
+
+    k = k_pod * k_data
+    if jax.device_count() < k:
+        return {"skipped": f"needs {k} devices, have {jax.device_count()}"}
+    mesh = compat.make_mesh((k_pod, k_data), ("pod", "data"))
+    n = d - d % (k * k)            # divisible by both stage segmentations
+    nested = pod_ring_nested(k_pod, k_data)
+    G = jax.random.normal(jax.random.PRNGKey(0), (k, n))
+    EF = 0.1 * jax.random.normal(jax.random.PRNGKey(1), (k, n))
+    PEF = jnp.zeros((k, n // k_data))
+    w = jnp.float32(1.0)
+    sspec = jax.tree.map(lambda _: P(), (RingStats(0., 0., 0.),
+                                         RingStats(0., 0., 0.)))
+
+    out = {"k_pod": k_pod, "k_data": k_data, "n": n, "alg": {}}
+    for name in ALG_NAMES:
+        cfg = _cfg(name, q, "exact", "never")
+        gm = _gmask(cfg, n)
+
+        def nested_fn(g_l, ef_l, pef_l):
+            seg, ef_new, (pef_new,), sts = run_nested_segments_local(
+                cfg, nested, g_l[0], ef_l[0], (pef_l[0],), w,
+                axes=("data", "pod"), global_mask_local=gm)
+            sts = jax.tree.map(
+                lambda s: jax.lax.psum(s, ("pod", "data")), sts)
+            return seg[None], ef_new[None], pef_new[None], sts
+
+        def flat_fn(g_l, ef_l):
+            seg, ef_new, st = rotated_ring_local(
+                cfg, g_l[0], ef_l[0], w, axis=("pod", "data"),
+                global_mask_local=gm)
+            st = jax.tree.map(
+                lambda s: jax.lax.psum(s, ("pod", "data")), st)
+            return seg[None], ef_new[None], st
+
+        run_n = jax.jit(compat.shard_map(
+            nested_fn, mesh=mesh, in_specs=(P(("pod", "data")),) * 3,
+            out_specs=(P(("pod", "data")),) * 3 + (sspec,),
+            axis_names={"pod", "data"}))
+        run_f = jax.jit(compat.shard_map(
+            flat_fn, mesh=mesh, in_specs=(P(("pod", "data")),) * 2,
+            out_specs=(P(("pod", "data")),) * 2 + (
+                jax.tree.map(lambda _: P(), RingStats(0., 0., 0.)),),
+            axis_names={"pod", "data"}))
+
+        _, _, _, sts = jax.block_until_ready(run_n(G, EF, PEF))
+        _, _, st_f = jax.block_until_ready(run_f(G, EF))
+        out["alg"][name] = {
+            "nested_round_us": round(
+                _timed(lambda: run_n(G, EF, PEF)[0], reps), 1),
+            "flat_round_us": round(
+                _timed(lambda: run_f(G, EF)[0], reps), 1),
+            "stage_bits": [float(sts[0].bits), float(sts[1].bits)],
+            "flat_bits": float(st_f.bits),
+            # seam traffic: the flat ring carries every hop's payload
+            # across the pod seam K_p·K_d times/round, the staged
+            # schedule K_p — measured stage-1 bits ARE the staged seam wire
+            "dci_bits_nested": float(sts[1].bits),
+            "dci_bits_flat_model": float(sts[1].bits) * k_data,
+        }
+    flat_m, nested_m = cc.dci_wire_flat_vs_nested(k_pod, k_data, d, q)
+    out["dci_packet_model"] = {"flat": flat_m, "nested": nested_m,
+                               "reduction_x": flat_m / nested_m}
+    # cross-check the measured staged DCI wire against the closed-form
+    # CEILING: stage 1 runs K_p segments × K_p hops per data column, each
+    # carrying ≤ q CL coordinates over a sub-segment of n/(K_d·K_p). It
+    # can genuinely undershoot — stage 0 already Top-Q'd the pod partials,
+    # so a sub-segment's γ̃ may hold fewer than q nonzeros (that is the
+    # staged schedule's second saving on top of the K_d× fewer crossings).
+    seg2 = n // (k_data * k_pod)
+    cap = k_data * k_pod * k_pod * q * (32 + cc.idx_bits(seg2))
+    got = out["alg"]["cl_sia"]["dci_bits_nested"]
+    assert 0 < got <= cap, (got, cap)
+    out["dci_bits_cl_sia_cap"] = cap
+    return out
+
+
 def smoke_fused_interpret(k, d, q):
     """Run one fused (Pallas-interpret) round per algorithm and check it
     against the unfused oracle — keeps the kernel path exercised by CI on
@@ -196,6 +300,10 @@ def main(argv=None) -> dict:
                     help="tiny instant run (CI harness check); writes to a "
                          "temp file so the recorded baseline is not "
                          "clobbered")
+    ap.add_argument("--nested", action="store_true",
+                    help="add the pod×data staged round (2 pods × 4 ranks "
+                         "on the 8 fake devices): per-stage §V bits and "
+                         "the DCI-wire reduction vs the flat ring")
     ap.add_argument("--out", default=None,
                     help="output path (default: repo-root "
                          "BENCH_agg_round.json; temp file under --smoke)")
@@ -236,6 +344,8 @@ def main(argv=None) -> dict:
         "fused_interpret_rounds_us": smoke_fused_interpret(
             k, min(d, 4096), max(1, min(d, 4096) // 100)),
     }
+    if args.nested:
+        result["nested_round"] = bench_nested(2, 4, d, q, args.reps)
     with open(args.out, "w") as f:
         json.dump(result, f, indent=1, sort_keys=True)
         f.write("\n")

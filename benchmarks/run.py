@@ -36,7 +36,7 @@ def main() -> None:
     print("\n== aggregation round (BENCH_agg_round.json) ==")
     # device section auto-skips unless this process was launched with
     # XLA_FLAGS=--xla_force_host_platform_device_count=8
-    bench_round.main(["--reps", str(args.reps)])
+    bench_round.main(["--reps", str(args.reps), "--nested"])
     print("\n== fig2a: transmitted bits vs K ==")
     fig2a_comm_cost.main()
     print("\n== fig2b: normalized efficiency vs K ==")

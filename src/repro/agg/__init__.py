@@ -10,9 +10,14 @@ specialization; :class:`Aggregator` is the pytree-aware object API on top.
 """
 
 from repro.agg.aggregator import AggState, Aggregator, RoundOut, flat_dim
-from repro.agg.device import (client_mesh, execute_sharded, ring_chain_plan,
+from repro.agg.device import (client_mesh, execute_nested_sharded,
+                              execute_sharded, ring_chain_plan,
+                              run_nested_segments_local,
                               run_plan_clients_local,
                               run_plan_segments_local)
+from repro.agg.nested import (NestedPlan, NestedResult, as_nested,
+                              compile_nested, execute_nested,
+                              pod_ring_nested, zero_stage_ef)
 from repro.agg.plan import (AggPlan, RoundResult, as_tree, bandwidth_budgets,
                             compile_plan, execute)
 from repro.agg.schedule import TopologySchedule, common_shape
@@ -20,7 +25,10 @@ from repro.agg.schedule import TopologySchedule, common_shape
 __all__ = [
     "AggPlan", "RoundResult", "compile_plan", "execute", "as_tree",
     "bandwidth_budgets", "TopologySchedule", "common_shape",
+    "NestedPlan", "NestedResult", "compile_nested", "execute_nested",
+    "as_nested", "pod_ring_nested", "zero_stage_ef",
     "Aggregator", "AggState", "RoundOut", "flat_dim",
-    "client_mesh", "execute_sharded", "ring_chain_plan",
-    "run_plan_clients_local", "run_plan_segments_local",
+    "client_mesh", "execute_sharded", "execute_nested_sharded",
+    "ring_chain_plan", "run_plan_clients_local", "run_plan_segments_local",
+    "run_nested_segments_local",
 ]

@@ -315,6 +315,10 @@ def run_plan_segments_local(
         raise ValueError(
             f"plan has {plan.num_clients} clients but the mesh axis "
             f"{axis!r} has {K} ranks")
+    if plan.num_sinks != 1:
+        raise ValueError(
+            "the segments kernel runs single-sink plans; lower a "
+            "NestedPlan through run_nested_segments_local")
     r = jax.lax.axis_index(axis)
     n = flat_local.shape[0]
     assert n % K == 0, (n, K)
@@ -451,12 +455,17 @@ def run_plan_clients_local(
     """Execute an AggPlan with client k living on rank k (paper mapping).
 
     Must be called inside shard_map with ``axis`` manual and axis size ==
-    ``plan.num_clients``. Levels run in lockstep; each level the active
-    ranks fold their gradient into their inbox and ship γ toward the rank
-    playing their parent (compact wire for the CL algorithms). Bit-exact to
-    host :func:`repro.agg.plan.execute` — same aggregate, EF rows, and
-    per-client §V HopStats (returned for *this* rank's client). The PS
-    aggregate is returned replicated on every rank.
+    ``plan.num_clients`` (a nested stage plan is first padded by
+    :func:`_pad_plan_clients` so it names every rank but schedules only
+    its real clients — the extra ranks never activate). Levels run in
+    lockstep; each level the
+    active ranks fold their gradient into their inbox and ship γ toward
+    the rank playing their parent (compact wire for the CL algorithms).
+    Bit-exact to host :func:`repro.agg.plan.execute` — same aggregate, EF
+    rows, and per-client §V HopStats (returned for *this* rank's client).
+    The sink aggregate is returned replicated on every rank: ``[d]`` for
+    single-sink plans, ``[R, d]`` sink-ordered for forest plans (the
+    stage form of a :class:`~repro.agg.nested.NestedPlan`).
     """
     K = compat.axis_size(axis)
     if plan.num_clients != K:
@@ -490,8 +499,10 @@ def run_plan_clients_local(
     step_fn = node_step(cfg)
     ctx = NodeCtx(global_mask=gm, participate=p_eff, q_budget=qb)
 
-    # buf rows: 0 = my inbox, 1 = the (replicated) PS accumulator, 2 = trash
-    buf = jnp.zeros((3, d), dt)
+    # buf rows: 0 = my inbox, 1..R = the (replicated) sink accumulators
+    # (R = 1: the PS), R+1 = trash
+    r_sinks = plan.num_sinks
+    buf = jnp.zeros((2 + r_sinks, d), dt)
     e_cur = ef_local
     zero_i = jnp.int32(0)
     my_stats = HopStats(nnz_out=zero_i, nnz_global=zero_i, nnz_local=zero_i,
@@ -526,20 +537,25 @@ def run_plan_clients_local(
                 return all_pay[b]
 
         # deliver in slot order (the host executor's scatter order): row 0
-        # if the sender's parent is me, row 1 if it is the PS, else trash.
+        # if the sender's parent is me, rows 1..R if it is a sink, else
+        # trash.
         b_clip = jnp.clip(ids_l, 0, K - 1)
         arrived = jax.vmap(from_rank)(b_clip) * slot_mask[l][:, None]
         par_l = parent_row[l]
-        rows = jnp.where(valid & (par_l == r), 0,
-                         jnp.where(valid & (par_l == K), 1, 2)).astype(
-                             jnp.int32)
+        p_clients = plan.num_clients
+        rows = jnp.where(
+            valid & (par_l == r), 0,
+            jnp.where(valid & (par_l >= p_clients)
+                      & (par_l < p_clients + r_sinks),
+                      1 + par_l - p_clients,
+                      1 + r_sinks)).astype(jnp.int32)
         # mixed-dtype add on purpose: the host executor scatter-adds the
         # (possibly f32-promoted) γ into the grads-dtype inbox, and jax's
         # duplicate-index combining differs from pre-casting the updates —
         # pre-casting here would be one bf16 ulp off the host result
         buf = buf.at[rows].add(arrived)
 
-    return buf[1], e_cur, my_stats
+    return (buf[1] if r_sinks == 1 else buf[1:1 + r_sinks]), e_cur, my_stats
 
 
 # ---------------------------------------------------------------------------
@@ -616,3 +632,267 @@ def execute_sharded(
         axis_names={axis},
     )(plan, grads, e, weights, part, gmask)
     return RoundResult(aggregate=agg, e_new=e_new, stats=stats)
+
+
+# ---------------------------------------------------------------------------
+# Nested (staged) plans on the shard_map ring — one mesh axis per stage
+# ---------------------------------------------------------------------------
+
+def run_nested_segments_local(
+    cfg: AggConfig,
+    nested,                           # NestedPlan (repro.agg.nested)
+    flat_local: Array,                # [n] this rank's gradient slice
+    ef_local: Array,                  # [n] client-tier EF memory
+    stage_ef_local,                   # per-stage EF slices, stages ≥ 1:
+                                      # stage s is [n // prod(K_0..K_{s-1})]
+    weight: Array,                    # scalar D_k (stage-0 fold)
+    *,
+    axes,                             # one mesh axis name per stage,
+                                      # stage-0 axis first (("data","pod"))
+    global_mask_local: Optional[Array] = None,   # [n] TCS mask slice
+    participate: Optional[Array] = None,         # scalar 0/1 (stage 0)
+    transport: str = "auto",          # "auto" | "static" | "butterfly"
+    wire: str = "auto",
+    stage_cfgs=None,
+) -> tuple:
+    """Execute a :class:`~repro.agg.nested.NestedPlan` over a multi-axis
+    mesh: stage s runs :func:`run_plan_segments_local` on ``axes[s]``.
+
+    Must be called inside shard_map with **every** ``axes[s]`` manual.
+    Stage 0 runs each cluster's intra tree concurrently over ``axes[0]``
+    (cluster c = the rank group sharing the later-axis coordinates — the
+    (pod, data) mesh's pod p holds clients ``p·K_d .. p·K_d+K_d−1``, so
+    the plan must be mesh-aligned; checked while the plan is a host
+    constant). Stage s ≥ 1 folds the previous stage's owned segment with
+    weight 1 and that stage's EF tier over ``axes[s]`` — intra-stage
+    ppermutes ride ``axes[0]`` (ICI), inter-stage ppermutes ``axes[1]``
+    (DCI), exactly the two-stage hierarchical ring generalized to
+    arbitrary per-stage trees.
+
+    Per-pod trees may differ: the stage's clustered arrays travel as
+    traced ``[C, L, W]`` leaves, each rank group selects its cluster's
+    subplan by mesh index, and transport falls back to the ⌈log₂K⌉
+    butterfly (identical clusters keep the static per-slot ppermute — the
+    chain×chain nested plan reproduces the historic two-stage rotated
+    ring, collective for collective). A ``TopologySchedule`` of nested
+    plans therefore compiles to one specialization per padded nested
+    shape.
+
+    Returns ``(final segment [n // Πs K_s], new client EF [n],
+    tuple of new stage-EF tiers, tuple of per-stage RingStats)``.
+    """
+    from repro.agg.nested import NestedPlan
+
+    if not isinstance(nested, NestedPlan):
+        raise TypeError(f"expected a NestedPlan, got {type(nested)!r}")
+    n_stages = nested.num_stages
+    axes = tuple(axes)
+    if len(axes) != n_stages:
+        raise ValueError(f"nested plan has {n_stages} stages but {len(axes)} "
+                         f"axes were given")
+    cfgs = list(stage_cfgs) if stage_cfgs is not None else [cfg] * n_stages
+    if len(cfgs) != n_stages:
+        raise ValueError(f"stage_cfgs has {len(cfgs)} entries for "
+                         f"{n_stages} stages")
+    stage_ef_local = tuple(stage_ef_local)
+    if len(stage_ef_local) != n_stages - 1:
+        raise ValueError(f"need {n_stages - 1} stage-EF slices, got "
+                         f"{len(stage_ef_local)}")
+    sizes = [compat.axis_size(a) for a in axes]
+    if nested.num_clients != int(np.prod(sizes)):
+        raise ValueError(
+            f"nested plan has {nested.num_clients} clients but the axes "
+            f"{axes!r} provide {int(np.prod(sizes))} ranks")
+    if transport not in ("auto", "static", "butterfly"):
+        raise ValueError(f"unknown transport {transport!r}")
+
+    # cluster index at stage s = the unit this rank group feeds at stage
+    # s+1: u_s = u_{s+1}·K_s + r_s (client k = ... r_{S-1}·K_{S-2}·K_0 +
+    # ... + r_0 — later axes are major, matching the (pod, data) dp order)
+    cluster_at = [None] * n_stages
+    u = jnp.int32(0)
+    for s in range(n_stages - 1, -1, -1):
+        cluster_at[s] = u
+        u = u * sizes[s] + jax.lax.axis_index(axes[s]).astype(jnp.int32)
+
+    cur = flat_local
+    cur_mask = global_mask_local
+    ef_new = None
+    stage_ef_new = []
+    stage_stats = []
+    for s in range(n_stages):
+        last = s == n_stages - 1
+        if last:
+            plan_s = nested.stages[s]
+            tr_s = transport
+        else:
+            clustered = nested.clustered[s]
+            if clustered.num_units != sizes[s]:
+                raise ValueError(
+                    f"stage {s} clusters have {clustered.num_units} members "
+                    f"but axis {axes[s]!r} has {sizes[s]} ranks")
+            aligned = clustered.mesh_aligned()
+            if aligned is False:
+                raise ValueError(
+                    f"stage {s} clusters are not mesh-aligned (cluster c "
+                    f"must be clients c·{sizes[s]}..c·{sizes[s]}+"
+                    f"{sizes[s] - 1}); re-cluster or run on host")
+            if transport != "butterfly" and clustered.uniform():
+                plan_s = clustered.subplan(0)     # static numpy subplan
+                tr_s = transport
+            else:
+                if transport == "static":
+                    raise ValueError(
+                        "transport='static' needs identical trace-time-"
+                        "constant cluster plans; per-cluster trees route "
+                        "through the butterfly")
+                plan_s = jax.tree.map(jnp.asarray, clustered).subplan(
+                    cluster_at[s])
+                tr_s = "butterfly"
+        w_s = weight if s == 0 else jnp.float32(1)
+        p_s = participate if s == 0 else None
+        ef_s = ef_local if s == 0 else stage_ef_local[s - 1]
+        seg_out, ef_out, st = run_plan_segments_local(
+            cfgs[s], plan_s, cur, ef_s, w_s, axis=axes[s],
+            global_mask_local=cur_mask, participate=p_s, transport=tr_s,
+            wire=wire)
+        if s == 0:
+            ef_new = ef_out
+        else:
+            stage_ef_new.append(ef_out)
+        stage_stats.append(st)
+        if not last and cur_mask is not None:
+            seg = seg_out.shape[0]
+            r_s = jax.lax.axis_index(axes[s])
+            cur_mask = jax.lax.dynamic_slice(cur_mask, (r_s * seg,), (seg,))
+        cur = seg_out
+    return cur, ef_new, tuple(stage_ef_new), tuple(stage_stats)
+
+
+def _pad_plan_clients(plan: AggPlan, k_new: int) -> AggPlan:
+    """Grow a stage plan's client count to the mesh size for the
+    client-per-rank kernel: the added clients never appear in the level
+    schedule (their ranks simply never activate), only the dummy/sink/
+    trash row ids shift. jnp ops throughout so traced schedule plans pad
+    under jit."""
+    k = plan.num_clients
+    if k == k_new:
+        return plan
+    if k > k_new:
+        raise ValueError(f"cannot shrink a plan from {k} to {k_new} clients")
+    shift = k_new - k
+    node_id = jnp.where(jnp.asarray(plan.node_id) == k, k_new,
+                        jnp.asarray(plan.node_id))
+    par = jnp.asarray(plan.parent_row)
+    parent_row = jnp.where(par >= k, par + shift, par)
+    pad1 = lambda a, v, dt: jnp.concatenate(
+        [jnp.asarray(a, dt), jnp.full((shift,), v, dt)])
+    return AggPlan(
+        node_id=node_id.astype(jnp.int32),
+        slot_mask=jnp.asarray(plan.slot_mask),
+        parent_row=parent_row.astype(jnp.int32),
+        flat_pos=pad1(plan.flat_pos, 0, jnp.int32),
+        alive=pad1(plan.alive, 1.0, jnp.float32),
+        q_budget=(None if plan.q_budget is None
+                  else pad1(plan.q_budget, 0, jnp.int32)),
+        num_clients=k_new, num_sinks=plan.num_sinks)
+
+
+def execute_nested_sharded(
+    cfg: AggConfig,
+    nested,                        # NestedPlan
+    grads: Array,                  # [K, d] per-client effective gradients
+    e: Array,                      # [K, d] client-tier EF memory
+    weights: Array,                # [K]    D_k
+    *,
+    mesh=None,
+    stage_e=None,                  # EF tiers for stages ≥ 1 ([K_s, d])
+    global_mask: Optional[Array] = None,
+    participate: Optional[Array] = None,
+    wire: str = "auto",
+    stage_cfgs=None,
+):
+    """One staged round on a client-per-rank mesh — drop-in for host
+    :func:`repro.agg.nested.execute_nested` (same ``NestedResult``
+    contract, bit-exact per stage: every stage runs
+    :func:`run_plan_clients_local`, upper stages on the same mesh with the
+    previous stage's replicated sink partials as rank-local gradients —
+    ranks beyond a stage's unit count never activate)."""
+    from repro.agg.nested import NestedPlan, NestedResult, zero_stage_ef
+
+    if not isinstance(nested, NestedPlan):
+        raise TypeError(f"expected a NestedPlan, got {type(nested)!r}")
+    k, d = grads.shape
+    if nested.num_clients != k:
+        raise ValueError(f"nested plan has {nested.num_clients} clients, "
+                         f"grads {k}")
+    n_stages = nested.num_stages
+    cfgs = list(stage_cfgs) if stage_cfgs is not None else [cfg] * n_stages
+    if mesh is None:
+        mesh = client_mesh(k)
+    axis = mesh.axis_names[0]
+    from jax.sharding import PartitionSpec as P
+
+    if stage_e is None:
+        stage_e = zero_stage_ef(nested, d, grads.dtype)
+    stage_e = tuple(stage_e)
+    units = nested.stage_units
+    # stage EF tiers ride through the mesh padded to one row per rank
+    stage_e_pad = tuple(
+        jnp.concatenate([se, jnp.zeros((k - units[s + 1],) + se.shape[1:],
+                                       se.dtype)])
+        if units[s + 1] < k else se
+        for s, se in enumerate(stage_e))
+
+    has_part = participate is not None
+    part = (jnp.ones((k,), grads.dtype) if participate is None
+            else participate)
+    gmask = (jnp.zeros((d,), grads.dtype) if global_mask is None
+             else global_mask)
+
+    def stage_wire(s, plan):
+        use = _use_compact(cfgs[s], d, plan, has_part and s == 0, wire)
+        return ("compact" if use and (wire == "compact"
+                or jnp.dtype(cfgs[s].wire_dtype) == jnp.float32)
+                else "dense")
+
+    wires = [stage_wire(s, nested.stages[s]) for s in range(n_stages)]
+
+    def body(nested, g_l, e_l, w_l, se_l, part_l, gm):
+        r = jax.lax.axis_index(axis)
+        agg, e_new, st0 = run_plan_clients_local(
+            cfgs[0], nested.stages[0], g_l[0], e_l[0], w_l[0], axis=axis,
+            global_mask=gm, participate=part_l[0] if has_part else None,
+            wire=wires[0])
+        prev = agg if nested.stages[0].num_sinks > 1 else agg[None]
+        se_new, st_up = [], []
+        for s in range(1, n_stages):
+            c = units[s]
+            plan_s = _pad_plan_clients(nested.stages[s], k)
+            g_s = jnp.where(r < c, prev[jnp.clip(r, 0, c - 1)],
+                            jnp.zeros((d,), prev.dtype))
+            agg, e_s, st_s = run_plan_clients_local(
+                cfgs[s], plan_s, g_s, se_l[s - 1][0], jnp.float32(1),
+                axis=axis, global_mask=gm, wire=wires[s])
+            prev = agg if plan_s.num_sinks > 1 else agg[None]
+            se_new.append(e_s[None])
+            st_up.append(jax.tree.map(lambda x: x[None], st_s))
+        return (prev[0], e_new[None], tuple(se_new),
+                jax.tree.map(lambda x: x[None], st0), tuple(st_up))
+
+    nested_specs = jax.tree.map(lambda _: P(), nested)
+    stats_spec = jax.tree.map(lambda _: P(axis), HopStats(0, 0, 0, 0., 0.))
+    agg, e_new, se_new, st0, st_up = compat.shard_map(
+        body, mesh=mesh,
+        in_specs=(nested_specs, P(axis), P(axis), P(axis),
+                  tuple(P(axis) for _ in stage_e_pad), P(axis), P()),
+        out_specs=(P(), P(axis), tuple(P(axis) for _ in stage_e_pad),
+                   stats_spec, tuple(stats_spec for _ in stage_e_pad)),
+        axis_names={axis},
+    )(nested, grads, e, weights, stage_e_pad, part, gmask)
+    # drop the rank-padding rows of the upper tiers
+    se_new = tuple(se[:units[s + 1]] for s, se in enumerate(se_new))
+    st_up = tuple(jax.tree.map(lambda x: x[:units[s + 1]], st)
+                  for s, st in enumerate(st_up))
+    return NestedResult(aggregate=agg, e_new=e_new, stage_e_new=se_new,
+                        stats=st0, stage_stats=st_up)

@@ -46,15 +46,23 @@ class AggPlan:
     ``node_id[l, w]`` is the client run in slot w of level l, deepest level
     first (padding slots hold K, a zero dummy row); ``slot_mask`` is 1.0 for
     real slots; ``parent_row[l, w]`` is the inbox row receiving that slot's
-    γ (client index, K for the PS, K+1 trash row for padding);
-    ``flat_pos[k]`` maps client k back out of schedule order. ``alive[k]``
-    is 0.0 for stranded stubs (clients routing could not reach) — folded
-    into ``participate`` by :func:`execute`. ``q_budget`` (optional
-    int32 [K]) carries per-client local Top-Q budgets.
+    γ (client index, K..K+R−1 for the R sink rows, K+R trash row for
+    padding — single-sink plans have R = 1 and their sink K *is* the PS,
+    exactly the historic layout); ``flat_pos[k]`` maps client k back out of
+    schedule order. ``alive[k]`` is 0.0 for stranded stubs (clients routing
+    could not reach) — folded into ``participate`` by :func:`execute`.
+    ``q_budget`` (optional int32 [K]) carries per-client local Top-Q
+    budgets.
+
+    ``num_sinks`` > 1 makes the plan a *forest*: R independent trees whose
+    roots deliver to distinct sink rows — the stage form of a
+    :class:`repro.agg.nested.NestedPlan`, where stage s's sink c feeds
+    stage s+1's client c.
 
     Registered as a jax pytree: arrays are leaves (traced jit arguments),
-    ``num_clients`` is static. Two plans with the same ``(L, W)`` and leaf
-    dtypes therefore share one jit specialization.
+    ``num_clients``/``num_sinks`` are static. Two plans with the same
+    ``(L, W)``, sink count and leaf dtypes therefore share one jit
+    specialization.
     """
 
     node_id: np.ndarray       # [L, W] int32
@@ -64,6 +72,7 @@ class AggPlan:
     alive: np.ndarray         # [K] float32
     q_budget: Optional[np.ndarray] = None   # [K] int32
     num_clients: int = 0
+    num_sinks: int = 1
 
     @property
     def shape(self) -> tuple:
@@ -83,7 +92,7 @@ class AggPlan:
         k = self.num_clients
         node_id = np.full((big_l, big_w), k, np.int32)
         slot_mask = np.zeros((big_l, big_w), np.float32)
-        parent_row = np.full((big_l, big_w), k + 1, np.int32)
+        parent_row = np.full((big_l, big_w), k + self.num_sinks, np.int32)
         node_id[:l, :w] = self.node_id
         slot_mask[:l, :w] = self.slot_mask
         parent_row[:l, :w] = self.parent_row
@@ -92,19 +101,21 @@ class AggPlan:
         return AggPlan(node_id=node_id, slot_mask=slot_mask,
                        parent_row=parent_row, flat_pos=flat_pos,
                        alive=self.alive, q_budget=self.q_budget,
-                       num_clients=k)
+                       num_clients=k, num_sinks=self.num_sinks)
 
 
 def _plan_flatten(p: AggPlan):
     return ((p.node_id, p.slot_mask, p.parent_row, p.flat_pos, p.alive,
-             p.q_budget), p.num_clients)
+             p.q_budget), (p.num_clients, p.num_sinks))
 
 
-def _plan_unflatten(num_clients, leaves):
+def _plan_unflatten(aux, leaves):
+    num_clients, num_sinks = aux
     node_id, slot_mask, parent_row, flat_pos, alive, q_budget = leaves
     return AggPlan(node_id=node_id, slot_mask=slot_mask,
                    parent_row=parent_row, flat_pos=flat_pos, alive=alive,
-                   q_budget=q_budget, num_clients=num_clients)
+                   q_budget=q_budget, num_clients=num_clients,
+                   num_sinks=num_sinks)
 
 
 jax.tree_util.register_pytree_node(AggPlan, _plan_flatten, _plan_unflatten)
@@ -221,7 +232,9 @@ def bandwidth_budgets(cfg: AggConfig, tree: AggTree, *,
 # ---------------------------------------------------------------------------
 
 class RoundResult(NamedTuple):
-    aggregate: Array      # what the PS receives (Σ over its children), [d]
+    aggregate: Array      # what the PS receives (Σ over its children), [d];
+                          # forest plans (num_sinks R > 1) get [R, d] — one
+                          # partial aggregate per sink, in sink order
     e_new: Array          # updated EF memory, [K, d] (client index order)
     stats: HopStats       # per-hop stats, leaves [K] (client index order)
 
@@ -278,8 +291,10 @@ def execute(
         inbox = inbox.at[par].add(gamma_out * mask[:, None])
         return inbox, (e_new, stats)
 
-    # inbox rows: 0..K−1 per-client incoming sums, K = PS, K+1 = trash
-    inbox0 = jnp.zeros((k + 2, d), grads.dtype)
+    # inbox rows: 0..K−1 per-client incoming sums, K..K+R−1 the sink rows
+    # (R = 1: the PS), K+R = trash
+    r_sinks = plan.num_sinks
+    inbox0 = jnp.zeros((k + r_sinks + 1, d), grads.dtype)
     inbox, (e_lvl, st_lvl) = jax.lax.scan(
         body, inbox0,
         (jnp.asarray(plan.node_id), jnp.asarray(plan.slot_mask),
@@ -290,4 +305,5 @@ def execute(
     e_new = e_lvl.reshape(-1, d)[pos]
     stats = jax.tree.map(
         lambda s: s.reshape((-1,) + s.shape[2:])[pos], st_lvl)
-    return RoundResult(aggregate=inbox[k], e_new=e_new, stats=stats)
+    agg = inbox[k] if r_sinks == 1 else inbox[k:k + r_sinks]
+    return RoundResult(aggregate=agg, e_new=e_new, stats=stats)

@@ -21,10 +21,15 @@ from repro.topo.graph import ConstellationGraph
 
 
 def common_shape(plans: Iterable[AggPlan]) -> tuple:
-    """Elementwise-max ``(L, W)`` over a set of plans."""
+    """Elementwise-max ``(L, W)`` over a set of plans (flat), or the
+    elementwise-max per-stage shape signature (nested plans)."""
+    plans = list(plans)
     shapes = [p.shape for p in plans]
     if not shapes:
         raise ValueError("no plans")
+    if isinstance(shapes[0][0], tuple):        # NestedPlan signatures
+        from repro.agg.nested import nested_common_shape
+        return nested_common_shape(plans)
     return (max(s[0] for s in shapes), max(s[1] for s in shapes))
 
 
@@ -88,12 +93,27 @@ class TopologySchedule:
                         num_clients: Optional[int] = None,
                         q_budgets: Optional[Sequence] = None,
                         cyclic: bool = True) -> "TopologySchedule":
-        """One plan per topology (graph, tree, chain order, or int K),
-        padded to the common shape."""
+        """One plan per topology (graph, tree, chain order, int K — or a
+        nested topology: a :class:`~repro.agg.nested.NestedPlan`, a routed
+        ``NestedTopology``, or a stage spec already compiled), padded to
+        the common (per-stage) shape. Flat and nested topologies cannot
+        mix in one schedule (their round signatures differ)."""
+        from repro.agg.nested import NestedPlan, compile_nested
+
         if q_budgets is None:
             q_budgets = [None] * len(topologies)
-        plans = [compile_plan(t, num_clients=num_clients, q_budget=qb)
-                 for t, qb in zip(topologies, q_budgets)]
+
+        def build(t, qb):
+            if isinstance(t, NestedPlan) or hasattr(t, "nested_stages"):
+                return compile_nested(t, num_clients=num_clients,
+                                      q_budget=qb)
+            return compile_plan(t, num_clients=num_clients, q_budget=qb)
+
+        plans = [build(t, qb) for t, qb in zip(topologies, q_budgets)]
+        nested = [isinstance(p, NestedPlan) for p in plans]
+        if any(nested) and not all(nested):
+            raise ValueError("cannot mix flat and nested topologies in one "
+                             "schedule")
         shape = common_shape(plans)
         return cls(plans=tuple(p.pad(shape) for p in plans),
                    round_index=tuple(range(len(plans))), cyclic=cyclic)

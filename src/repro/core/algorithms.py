@@ -285,8 +285,12 @@ def _stats_no_gmask(cfg: AggConfig, d: int, nnz: Array,
 
 def _stats_gmask(cfg: AggConfig, d: int, gm: Array, nnz: Array,
                  nnz_off: Array, e_new: Array) -> HopStats:
-    nz_g = jax.vmap(
-        lambda m: jnp.sum(m > 0).astype(jnp.int32))(gm)
+    if gm.ndim == 1:       # lane-shared mask: one count, broadcast
+        nz_g = jnp.broadcast_to(jnp.sum(gm > 0).astype(jnp.int32),
+                                nnz.shape)
+    else:
+        nz_g = jax.vmap(
+            lambda m: jnp.sum(m > 0).astype(jnp.int32))(gm)
     return HopStats(nnz_out=nnz, nnz_global=nz_g, nnz_local=nnz_off,
                     bits=_bits(cfg, d, nz_g, nnz_off),
                     err_sq=_lane_err_sq(e_new))
@@ -376,9 +380,10 @@ _FUSED_LEVEL = {
 def _run_fused_level(cfg, g, gamma_in, e, weight, participate, global_mask,
                      q_budget, valid):
     w_lanes = g.shape[0]
+    # a 1-D (lane-shared) TCS mask stays 1-D all the way into the kernels:
+    # the level kernels stream it once per block (shared block spec)
+    # instead of materializing a [W, d] broadcast in HBM
     gm = _f32(global_mask)
-    if gm.ndim == 1:
-        gm = jnp.broadcast_to(gm, g.shape)
     qb = None if q_budget is None else jnp.asarray(q_budget, jnp.int32)
     v = (jnp.ones((w_lanes,), jnp.float32) if valid is None
          else _f32(valid))
@@ -413,7 +418,7 @@ def _fused_scalar(cfg: AggConfig, g, gamma_in, e, weight, ctx: NodeCtx):
         cfg, g[None], gamma_in[None], e[None],
         jnp.asarray(weight, jnp.float32).reshape(1),
         jnp.asarray(ctx.participate, jnp.float32).reshape(1),
-        _f32(ctx.global_mask)[None], qb, None)
+        _f32(ctx.global_mask), qb, None)
     stats = jax.tree.map(lambda s: s[0], stats)
     # scalar-form err reduction: a vmapped row-sum accumulates in a
     # different order than the unfused scalar `_finalize` sum (1 ulp) —

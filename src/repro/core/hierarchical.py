@@ -8,12 +8,22 @@ ICI, so the *optimized* schedule aggregates in two stages:
   stage 2: rotated ring over `pod` on the stage-1 partial aggregates
            (K_p hops on DCI, payload already CL-sparsified).
 
-Both stages reuse :func:`repro.core.ring.rotated_ring_local` — stage 2's
-"gradient" is the pod-local partial aggregate (weight 1), with its own
-error-feedback buffer (the pod-edge EF), exactly the paper's multi-hop
-recursion one level up. DCI traffic per step drops from
-K_p·K_d·(segment payload) (flat ring crosses the pod seam every
-wrap-around) to K_p·(segment payload).
+Since the nested-plan lowering (:mod:`repro.agg.nested` +
+:func:`repro.agg.device.run_nested_segments_local`) this module is the
+**chain×chain specialization**: the two-stage schedule compiles to a
+:class:`~repro.agg.nested.NestedPlan` (one rotated-ring chain per pod,
+then the ring chain over pod partials — :func:`pod_ring_nested`) and runs
+through the staged segments kernel, which emits the identical per-level
+``ppermute(+1)`` program the historic hand-composed pair of
+``rotated_ring_local`` calls did — bit-exact, and generalizing to
+arbitrary intra-pod/inter-pod trees. Stage 2's "gradient" is the
+pod-local partial aggregate (weight 1), with its own error-feedback
+buffer (the pod-edge EF), exactly the paper's multi-hop recursion one
+level up. DCI traffic per step drops from K_p·K_d·(segment payload)
+(flat ring crosses the pod seam every wrap-around) to
+K_p·(segment payload) — the staged closed forms live in
+:mod:`repro.core.comm_cost` (``nested_cl_sia_bits``,
+``dci_wire_flat_vs_nested``).
 
 Semantics note (documented trade): two-stage CL-SIA applies Top-Q twice
 (per-pod then cross-pod) — the composition is *not* bit-identical to the
@@ -24,16 +34,22 @@ the same telescoping sense, and mass conservation holds (tested).
 
 from __future__ import annotations
 
+import functools
 from typing import NamedTuple, Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro import compat
 from repro.core.algorithms import AggConfig
-from repro.core.ring import RingStats, rotated_ring_local
+from repro.core.ring import RingStats
 
 Array = jax.Array
+
+
+@functools.lru_cache(maxsize=None)
+def _pod_ring_nested_cached(k_pod: int, k_data: int):
+    from repro.agg.nested import pod_ring_nested
+    return pod_ring_nested(k_pod, k_data)
 
 
 class HierStats(NamedTuple):
@@ -61,24 +77,21 @@ def hierarchical_ring_local(
     master sharding P(("model", "pod", "data")) after the caller's
     reordering (train/step.py uses P(("model",)+dp) with dp=(pod,data);
     the hierarchical variant owns P(("model", "data", "pod"))).
-    """
-    # stage 1 — intra-pod ring over `data`
-    seg1, ef_new, st1 = rotated_ring_local(
-        cfg, flat_local, ef_local, weight, axis=data_axis,
-        global_mask_local=global_mask_local, participate=participate)
 
-    # stage 2 — inter-pod ring over `pod`, folding pod partials with the
-    # same node step; weight 1 (client weights already applied in stage 1)
-    mask2 = None
-    if global_mask_local is not None:
-        k_d = compat.axis_size(data_axis)
-        n = global_mask_local.shape[0]
-        seg = n // k_d
-        r = jax.lax.axis_index(data_axis)
-        mask2 = jax.lax.dynamic_slice(global_mask_local, (r * seg,), (seg,))
-    seg2, pod_ef_new, st2 = rotated_ring_local(
-        cfg, seg1, pod_ef_local, jnp.float32(1), axis=pod_axis,
-        global_mask_local=mask2)
+    Thin delegate: the chain×chain :class:`~repro.agg.nested.NestedPlan`
+    through :func:`repro.agg.device.run_nested_segments_local` — bit-exact
+    to the historic pair of ``rotated_ring_local`` calls (stage 0 is the
+    ring's chain plan on ``data``, stage 1 the ring's chain plan on
+    ``pod``, both on the static register path).
+    """
+    from repro.agg.device import run_nested_segments_local
+
+    nested = _pod_ring_nested_cached(compat.axis_size(pod_axis),
+                                     compat.axis_size(data_axis))
+    seg2, ef_new, (pod_ef_new,), (st1, st2) = run_nested_segments_local(
+        cfg, nested, flat_local, ef_local, (pod_ef_local,), weight,
+        axes=(data_axis, pod_axis), global_mask_local=global_mask_local,
+        participate=participate)
     return seg2, ef_new, pod_ef_new, HierStats(intra=st1, inter=st2)
 
 

@@ -36,7 +36,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.agg import AggPlan, TopologySchedule, compile_plan, execute
+from repro.agg import (AggPlan, NestedPlan, TopologySchedule, compile_nested,
+                       compile_plan, execute, execute_nested, zero_stage_ef)
 from repro.configs.paper_mnist import PaperConfig
 from repro.core import tcs as tcs_mod
 from repro.core.algorithms import AggConfig, AggKind
@@ -86,6 +87,7 @@ class SimState(NamedTuple):
     ef: Array               # [K, d] error feedback
     tcs_prev: Array         # [d] w^{t-1} (used by TC algorithms)
     rng: Array
+    stage_ef: tuple = ()    # upper EF tiers ([K_s, d]) of a nested topology
 
 
 class RoundLog(NamedTuple):
@@ -141,6 +143,11 @@ class Simulator:
     fed: FederatedData
     local_lr: float = 0.1
     tree_topology: Optional[TreeTopology] = None
+    # staged aggregation: a NestedPlan, a routed NestedTopology
+    # (repro.topo.routing.cluster_routed), or a compile_nested stage spec —
+    # rounds run execute_nested (host) / execute_nested_sharded (device),
+    # the upper EF tiers persist in SimState.stage_ef
+    nested_topology: Optional[Any] = None
     # "host": repro.agg.execute (single-device reference);
     # "device": repro.agg.device.execute_sharded — the plan lowered onto a
     # one-device-per-client shard_map mesh, bit-exact to "host".
@@ -154,6 +161,19 @@ class Simulator:
         self.weights = jnp.full((self.k,), 1.0, jnp.float32)
         if self.backend not in ("host", "device"):
             raise ValueError(f"unknown backend {self.backend!r}")
+        self._nested = None
+        if self.nested_topology is not None:
+            if self.tree_topology is not None:
+                raise ValueError("pass either tree_topology or "
+                                 "nested_topology, not both")
+            self._nested = (self.nested_topology
+                            if isinstance(self.nested_topology, NestedPlan)
+                            else compile_nested(self.nested_topology,
+                                                num_clients=self.k))
+            if self._nested.num_clients != self.k:
+                raise ValueError(
+                    f"nested topology has {self._nested.num_clients} "
+                    f"clients, data has {self.k}")
         self._mesh = None
         if self.backend == "device":
             from repro.agg.device import client_mesh
@@ -161,9 +181,12 @@ class Simulator:
 
     def init(self, seed: int = 0) -> SimState:
         flat = flatten_lr(lr_init(self.pc))
+        stage_ef = (() if self._nested is None
+                    else zero_stage_ef(self._nested, self.d))
         return SimState(round=jnp.int32(0), flat_w=flat,
                         ef=jnp.zeros((self.k, self.d), jnp.float32),
-                        tcs_prev=flat, rng=jax.random.PRNGKey(seed))
+                        tcs_prev=flat, rng=jax.random.PRNGKey(seed),
+                        stage_ef=stage_ef)
 
     # -- one jitted round ---------------------------------------------------
     def round_fn(self) -> Callable:
@@ -178,14 +201,22 @@ class Simulator:
         mesh = self._mesh
         if mesh is None:
             run_round = execute
+            run_nested = execute_nested
         else:
-            from repro.agg.device import execute_sharded
+            from repro.agg.device import (execute_nested_sharded,
+                                          execute_sharded)
 
             def run_round(cfg, plan, g, e, w, *, global_mask=None,
                           participate=None):
                 return execute_sharded(cfg, plan, g, e, w, mesh=mesh,
                                        global_mask=global_mask,
                                        participate=participate)
+
+            def run_nested(cfg, plan, g, e, w, *, stage_e, global_mask=None,
+                           participate=None):
+                return execute_nested_sharded(
+                    cfg, plan, g, e, w, mesh=mesh, stage_e=stage_e,
+                    global_mask=global_mask, participate=participate)
 
         def one_round(state: SimState, plan: AggPlan,
                       participate: Optional[Array] = None):
@@ -208,24 +239,40 @@ class Simulator:
                     agg_cfg.q_global)
                 tcs_prev = state.flat_w
 
-            res = run_round(agg_cfg, plan, g, state.ef, weights,
-                            global_mask=global_mask,
-                            participate=participate)
+            nested = isinstance(plan, NestedPlan)
+            if nested:
+                res = run_nested(agg_cfg, plan, g, state.ef, weights,
+                                 stage_e=state.stage_ef,
+                                 global_mask=global_mask,
+                                 participate=participate)
+                stage_ef = res.stage_e_new
+                all_stats = (res.stats,) + res.stage_stats
+                # whole-chain aliveness: a stub cluster's clients forward
+                # nothing to the PS, so they must leave the denominator too
+                alive = jnp.asarray(plan.client_alive(), weights.dtype)
+            else:
+                res = run_round(agg_cfg, plan, g, state.ef, weights,
+                                global_mask=global_mask,
+                                participate=participate)
+                stage_ef = state.stage_ef
+                all_stats = (res.stats,)
+                alive = jnp.asarray(plan.alive, weights.dtype)
 
-            alive = jnp.asarray(plan.alive, weights.dtype)
             part = alive if participate is None else participate * alive
             d_total = jnp.maximum(jnp.sum(weights * part), 1e-9)
             flat_new = state.flat_w + res.aggregate / d_total
 
             new_state = SimState(round=state.round + 1, flat_w=flat_new,
-                                 ef=res.e_new, tcs_prev=tcs_prev, rng=rng)
+                                 ef=res.e_new, tcs_prev=tcs_prev, rng=rng,
+                                 stage_ef=stage_ef)
             log = RoundLog(
                 loss=lr_loss(unflatten_lr(flat_new, pc),
                              fed.x.reshape(-1, pc.input_dim),
                              fed.y.reshape(-1)),
-                bits=jnp.sum(res.stats.bits),
-                nnz=jnp.sum(res.stats.nnz_out.astype(jnp.float32)),
-                err_sq=jnp.sum(res.stats.err_sq),
+                bits=sum(jnp.sum(s.bits) for s in all_stats),
+                nnz=sum(jnp.sum(s.nnz_out.astype(jnp.float32))
+                        for s in all_stats),
+                err_sq=sum(jnp.sum(s.err_sq) for s in all_stats),
             )
             return new_state, log
 
@@ -258,17 +305,29 @@ class Simulator:
             raise ValueError("failure_schedule needs tree_topology (chain "
                              "failures go through participate_fn + order_fn)")
         if order_fn is not None and (topo is not None
-                                     or topology_schedule is not None):
-            raise ValueError("order_fn is a chain-mode knob; trees and "
-                             "schedules carry their own topology")
-        if topology_schedule is not None and topo is not None:
-            raise ValueError("pass either tree_topology or "
+                                     or topology_schedule is not None
+                                     or self._nested is not None):
+            raise ValueError("order_fn is a chain-mode knob; trees, nested "
+                             "plans and schedules carry their own topology")
+        if topology_schedule is not None and (topo is not None
+                                              or self._nested is not None):
+            raise ValueError("pass either tree_topology/nested_topology or "
                              "topology_schedule, not both")
+
+        if (topology_schedule is not None and len(topology_schedule)
+                and isinstance(topology_schedule.plan_at(0), NestedPlan)
+                and not state.stage_ef):
+            # a schedule of nested plans shares one per-stage unit count
+            # (validated by TopologySchedule) → one set of EF tiers
+            state = state._replace(stage_ef=zero_stage_ef(
+                topology_schedule.plan_at(0), self.d))
 
         step = jax.jit(self.round_fn())
         cache = _PlanCache(self.k)
 
         def plan_for(r: int, state: SimState) -> AggPlan:
+            if self._nested is not None:
+                return self._nested
             if topology_schedule is not None:
                 return topology_schedule.plan_at(r)
             if topo is not None:

@@ -54,6 +54,12 @@ def _pad_lanes(v: jax.Array, n_blocks: int, pad: int):
         w, n_blocks, SUBLANES, LANES)
 
 
+def _pad_shared(v: jax.Array, n_blocks: int, pad: int):
+    """[d] → [n_blocks, SUBLANES, LANES] (zero padded) — a lane-shared
+    operand streamed once per block instead of once per (lane, block)."""
+    return jnp.pad(v, (0, pad)).reshape(n_blocks, SUBLANES, LANES)
+
+
 def _geometry(d: int):
     n_blocks = max(1, -(-d // BLOCK))
     return n_blocks, n_blocks * BLOCK - d
@@ -61,6 +67,13 @@ def _geometry(d: int):
 
 def _blk():
     return pl.BlockSpec((1, 1, SUBLANES, LANES), lambda w, j: (w, j, 0, 0))
+
+
+def _blk_shared():
+    # block index ignores the lane axis w: every lane of a level reads the
+    # SAME [SUBLANES, LANES] tile — the TC global mask is stored once, [d],
+    # never broadcast to [W, d] in HBM (ROADMAP open-item tail)
+    return pl.BlockSpec((1, SUBLANES, LANES), lambda w, j: (j, 0, 0))
 
 
 def _lane():
@@ -184,8 +197,9 @@ def chain_accum_level_pallas(gamma_in, gbar, valid, gmask=None, *,
                              interpret: bool = False):
     """Batched γ_out = γ_in + ḡ with fused counts.
 
-    gamma_in, gbar: [W,d]; valid: [W]; gmask (optional, [W,d]): the TCS
-    global mask — when given, ``nnz_off`` counts the off-mask support
+    gamma_in, gbar: [W,d]; valid: [W]; gmask (optional): the TCS global
+    mask — per-lane [W,d], or lane-shared [d] (streamed once per block,
+    not broadcast); when given, ``nnz_off`` counts the off-mask support
     ``#{γ_out ≠ 0 ∧ m = 0}`` (the §V locally-indexed part); without it,
     ``nnz_off == nnz``. Returns (γ_out [W,d], nnz [W] i32, nnz_off [W] i32).
     """
@@ -197,8 +211,14 @@ def chain_accum_level_pallas(gamma_in, gbar, valid, gmask=None, *,
     operands = [gi, gb, valid.astype(jnp.float32)]
     in_specs = [_blk(), _blk(), _lane()]
     if has_gmask:
-        operands.append(_pad_lanes(gmask.astype(jnp.float32), n_blocks, pad))
-        in_specs.append(_blk())
+        if gmask.ndim == 1:
+            operands.append(_pad_shared(gmask.astype(jnp.float32),
+                                        n_blocks, pad))
+            in_specs.append(_blk_shared())
+        else:
+            operands.append(_pad_lanes(gmask.astype(jnp.float32), n_blocks,
+                                       pad))
+            in_specs.append(_blk())
 
     gout, nnz, nnz_off = pl.pallas_call(
         functools.partial(_chain_accum_level_kernel, has_gmask=has_gmask),
@@ -284,7 +304,8 @@ def cl_fuse_level_pallas(g, e, gamma_in, weight, tau, participate, valid,
     """Batched complete CL node step (Algs 3/5, stragglers included).
 
     g, e, gamma_in: [W,d]; weight, tau, participate, valid: [W];
-    gmask (optional, [W,d]): TCS global mask m (Alg 5; None = Alg 3);
+    gmask (optional): TCS global mask m (Alg 5; None = Alg 3) — per-lane
+    [W,d] or lane-shared [d] (streamed once per block, not broadcast);
     mask_in (optional, [W,d]): precomputed keep mask OR-ed with the τ test
     (pass τ=+inf for a pure-mask exact sparsifier).
 
@@ -303,8 +324,14 @@ def cl_fuse_level_pallas(g, e, gamma_in, weight, tau, participate, valid,
                 valid.astype(jnp.float32)]
     in_specs = [_blk(), _blk(), _blk(), _lane(), _lane(), _lane(), _lane()]
     if has_gmask:
-        operands.append(_pad_lanes(gmask.astype(jnp.float32), n_blocks, pad))
-        in_specs.append(_blk())
+        if gmask.ndim == 1:
+            operands.append(_pad_shared(gmask.astype(jnp.float32), n_blocks,
+                                        pad))
+            in_specs.append(_blk_shared())
+        else:
+            operands.append(_pad_lanes(gmask.astype(jnp.float32), n_blocks,
+                                       pad))
+            in_specs.append(_blk())
     if has_mask:
         operands.append(_pad_lanes(mask_in.astype(jnp.float32), n_blocks,
                                    pad))

@@ -28,9 +28,19 @@ def make_agg_plan(mesh, topology: Any = None, *,
     bit-exact to the historic ``rotated_ring_local``); an ``AggTree``,
     chain order, ``ConstellationGraph``, or int K goes through
     :func:`repro.agg.compile_plan` with ``num_clients`` pinned to the mesh.
+
+    Nested (staged) topologies compile to a
+    :class:`~repro.agg.nested.NestedPlan` instead: ``"hierarchical"``
+    gives the two-stage pod/ICI chain×chain over the mesh's (pod, data)
+    axes (``core/hierarchical.py``'s schedule); a ``NestedPlan``, a routed
+    :class:`~repro.topo.routing.NestedTopology`, or an explicit stage
+    spec goes through :func:`repro.agg.compile_nested`. The train step
+    lowers those via ``run_nested_segments_local`` (stage s on dp axis
+    S−1−s, minor axis first).
     """
-    from repro.agg import compile_plan
+    from repro.agg import compile_nested, compile_plan, pod_ring_nested
     from repro.agg.device import ring_chain_plan, ring_chain_tree
+    from repro.agg.nested import NestedPlan
 
     k = dp_clients(mesh)
     if topology is None:
@@ -39,6 +49,24 @@ def make_agg_plan(mesh, topology: Any = None, *,
         if pad_to is None and q_budget is None:
             return ring_chain_plan(k)
         topology = ring_chain_tree(k)
+    if isinstance(topology, str) and topology == "hierarchical":
+        from repro.train.step import dp_axes
+        axes = dp_axes(mesh)
+        if len(axes) < 2:
+            raise ValueError(
+                f"'hierarchical' needs two DP axes (pod, data); mesh has "
+                f"{axes}")
+        k_data = mesh.shape[axes[-1]]
+        nested = pod_ring_nested(k // k_data, k_data, q_budget=q_budget)
+        return nested if pad_to is None else nested.pad(pad_to)
+    if isinstance(topology, NestedPlan) or hasattr(topology,
+                                                   "nested_stages"):
+        nested = compile_nested(topology, num_clients=k, q_budget=q_budget,
+                                pad_to=pad_to)
+        if nested.num_clients != k:
+            raise ValueError(f"nested topology has {nested.num_clients} "
+                             f"clients but the mesh provides {k} DP ranks")
+        return nested
     return compile_plan(topology, num_clients=k, pad_to=pad_to,
                         q_budget=q_budget)
 

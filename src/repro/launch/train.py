@@ -33,6 +33,9 @@ from repro.train.step import (build_train_step, dp_size, init_state,
 
 def _topology(name: str, k: int):
     """CLI topology name → something ``compile_plan`` accepts (or None)."""
+    if name == "hierarchical":
+        # two-stage pod/ICI nested plan (needs a pod axis: --mesh PxDxM)
+        return "hierarchical"
     if name != "ring" and k <= 2:
         print(f"topology {name!r} needs >2 DP clients (have {k}); "
               f"falling back to the rotated ring")
@@ -77,9 +80,11 @@ def main() -> None:
                     help="e.g. 2x2 → (data=2, model=2); default all-data")
     ap.add_argument("--topology", default="ring",
                     choices=["ring", "chain", "star", "grid",
-                             "walker-delta"],
+                             "walker-delta", "hierarchical"],
                     help="aggregation route over the K_dp clients (device-"
-                         "plan lowering; 'ring' = the rotated ring)")
+                         "plan lowering; 'ring' = the rotated ring; "
+                         "'hierarchical' = the two-stage pod/ICI nested "
+                         "plan, needs --mesh PxDxM)")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--straggle-p", type=float, default=0.0)
@@ -91,7 +96,8 @@ def main() -> None:
         shape = tuple(int(x) for x in args.mesh.split("x"))
     else:
         shape = (n_dev, 1)
-    mesh = make_mesh(shape, ("data", "model"))
+    axes = ("pod", "data", "model") if len(shape) == 3 else ("data", "model")
+    mesh = make_mesh(shape, axes)
     cfg = get_config(args.arch, smoke=args.smoke)
     tc = TrainConfig(
         agg=AggConfig(kind=AggKind(args.agg), q=1),
@@ -104,8 +110,9 @@ def main() -> None:
     agg_plan = make_agg_plan(mesh, _topology(args.topology, dp_size(mesh)))
 
     with compat.set_mesh(mesh):
-        state = init_state(cfg, tc, mesh, jax.random.PRNGKey(args.seed))
-        shardings = state_shardings(cfg, tc, mesh)
+        state = init_state(cfg, tc, mesh, jax.random.PRNGKey(args.seed),
+                           topology=agg_plan)
+        shardings = state_shardings(cfg, tc, mesh, topology=agg_plan)
         state = jax.device_put(state, shardings)
         if args.ckpt_dir and ckpt.latest_step(args.ckpt_dir) is not None:
             template = jax.tree.map(

@@ -9,7 +9,9 @@ inter-satellite links (ISLs). This subsystem generalizes the linear chain of
    per-link bandwidth/latency attributes;
 2. :mod:`repro.topo.routing` — shortest-path and bandwidth-aware
    spanning-tree extraction turning any graph + PS node into an aggregation
-   tree;
+   tree, plus the cluster-aware router (``cluster_routed``: partition →
+   intra-cluster trees + inter-cluster relay tree → a staged
+   ``NestedTopology`` for ``repro.agg.compile_nested``);
 3. :mod:`repro.topo.tree` — ``run_tree``, the level-scheduled generalization
    of ``run_chain`` to arbitrary trees (all five Algorithm 1–5 node steps,
    error feedback, and §V bit accounting preserved; a path graph is
@@ -26,13 +28,15 @@ plans via :mod:`repro.agg` — ``run_tree`` is a thin wrapper over
 from repro.topo.graph import (ConstellationGraph, grid_graph, path_graph,
                               random_geometric, star_graph, walker_delta,
                               walker_star)
-from repro.topo.routing import (extract_tree, shortest_path_tree,
-                                widest_path_tree)
+from repro.topo.routing import (NestedTopology, cluster_routed,
+                                extract_tree, partition_clusters,
+                                shortest_path_tree, widest_path_tree)
 from repro.topo.tree import AggTree, TreeResult, TreeSchedule, run_tree
 
 __all__ = [
     "ConstellationGraph", "path_graph", "star_graph", "grid_graph",
     "random_geometric", "walker_delta", "walker_star",
     "shortest_path_tree", "widest_path_tree", "extract_tree",
+    "NestedTopology", "cluster_routed", "partition_clusters",
     "AggTree", "TreeSchedule", "TreeResult", "run_tree",
 ]

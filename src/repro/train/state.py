@@ -47,6 +47,11 @@ class TrainState(NamedTuple):
     opt: FlatOptState               # flat, sharded like master
     ef: Array                       # [K_dp, D_pad] per-client error feedback
     tcs_prev: Optional[Any]         # params-shaped pytree (TC algorithms)
+    # upper-tier EF of a nested (staged) aggregation topology: one
+    # [K_dp, D_pad // prod(K_0..K_{s-1})] array per stage ≥ 1 (rank
+    # (dp, model) holds its stage-s EF slice) — None for flat topologies,
+    # keeping the historic pytree structure and checkpoints unchanged
+    stage_ef: Optional[tuple] = None
 
 
 def abstract_like(tree: Any) -> Any:

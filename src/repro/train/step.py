@@ -67,6 +67,83 @@ def flat_spec(mesh) -> P:
     return P(("model",) + dp_axes(mesh))
 
 
+# ---------------------------------------------------------------------------
+# Nested (staged) aggregation topology plumbing
+# ---------------------------------------------------------------------------
+
+def nested_stage_axes(mesh, n_stages: int) -> tuple:
+    """Per-stage mesh axes for a nested plan over this mesh's DP ring.
+
+    Stage 0 runs on the *minor* DP axis (client k = pod·K_d + data ⇒
+    mesh-aligned clusters), each later stage one axis up; the last stage
+    takes whatever DP axes remain as one flattened ring. For the
+    (pod, data) production mesh and a 2-stage plan this is
+    ``("data", "pod")`` — exactly ``core/hierarchical.py``'s mapping.
+    """
+    dp = dp_axes(mesh)
+    if len(dp) < n_stages:
+        raise ValueError(f"a {n_stages}-stage nested plan needs ≥"
+                         f"{n_stages} DP axes; mesh has {dp}")
+    axes = [dp[len(dp) - 1 - s] for s in range(n_stages - 1)]
+    rest = dp[:len(dp) - (n_stages - 1)]
+    axes.append(rest[0] if len(rest) == 1 else tuple(rest))
+    return tuple(axes)
+
+
+def _stage_order(axes) -> tuple:
+    """Flatten per-stage axes into one name tuple, stage order."""
+    out: list = []
+    for a in axes:
+        out.extend(a if isinstance(a, tuple) else (a,))
+    return tuple(out)
+
+
+def nested_flat_spec(mesh, axes) -> P:
+    """Flat master/opt/aggregate sharding under staged aggregation: rank
+    coords own [stage-0 segment, stage-1 sub-segment, …] — the dp axes in
+    *stage* order (reversed), the hierarchical P(("model","data","pod"))
+    layout generalized."""
+    return P(("model",) + _stage_order(axes))
+
+
+def _resolve_topology(mesh, topology):
+    """→ (flat topology | None, NestedPlan | None, stage axes | None)."""
+    from repro.agg.nested import NestedPlan, compile_nested, pod_ring_nested
+
+    nested = None
+    if isinstance(topology, str) and topology == "hierarchical":
+        dp = dp_axes(mesh)
+        if len(dp) < 2:
+            raise ValueError(f"'hierarchical' needs ≥2 DP axes (pod, "
+                             f"data); mesh has {dp}")
+        k_minor = mesh.shape[dp[-1]]
+        nested = pod_ring_nested(dp_size(mesh) // k_minor, k_minor)
+    elif isinstance(topology, NestedPlan):
+        nested = topology
+    elif hasattr(topology, "nested_stages"):
+        nested = compile_nested(topology, num_clients=dp_size(mesh))
+    if nested is None:
+        return topology, None, None
+    if nested.num_clients != dp_size(mesh):
+        raise ValueError(f"nested topology has {nested.num_clients} "
+                         f"clients but the mesh provides "
+                         f"{dp_size(mesh)} DP ranks")
+    return None, nested, nested_stage_axes(mesh, nested.num_stages)
+
+
+def _stage_ef_dims(mesh, axes, d_flat: int) -> tuple:
+    """Flat length of each upper EF tier: stage s's tier covers one
+    stage-(s−1) output segment per rank column."""
+    dims = []
+    prefix = 1
+    for a in axes[:-1]:
+        names = a if isinstance(a, tuple) else (a,)
+        for n in names:
+            prefix *= mesh.shape[n]
+        dims.append(d_flat // prefix)
+    return tuple(dims)
+
+
 @functools.lru_cache(maxsize=None)
 def _layout_cached(cfg: ModelConfig, mesh) -> FlatLayout:
     template = model_mod.param_specs(cfg)
@@ -113,46 +190,72 @@ def _model_axis_index(mesh):
 # State init
 # ---------------------------------------------------------------------------
 
-def _master_from_params(cfg: ModelConfig, mesh, layout: FlatLayout, params):
-    """Flat fp32 master from the param pytree (shard-aligned, in-shard_map)."""
+def _master_from_params(cfg: ModelConfig, mesh, layout: FlatLayout, params,
+                        order=None):
+    """Flat fp32 master from the param pytree (shard-aligned, in-shard_map).
+
+    ``order`` overrides the rank→slice mapping (a flattened axis-name
+    tuple): nested topologies own the flat space in stage order (reversed
+    dp), see :func:`nested_flat_spec`.
+    """
     dp = dp_axes(mesh)
     k_dp = dp_size(mesh)
     seg = layout.n_local // k_dp
     manual = set(mesh.axis_names)
+    idx_axes = dp if order is None else order
+    out_spec = (flat_spec(mesh) if order is None
+                else P(("model",) + tuple(order)))
 
     def fn(p):
         m_idx = _model_axis_index(mesh)
         col = layout.local_flatten(jax.tree.leaves(p), m_idx, jnp.float32)
         if k_dp > 1:
-            r = jax.lax.axis_index(dp)
+            r = jax.lax.axis_index(idx_axes)
             return jax.lax.dynamic_slice(col, (r * seg,), (seg,))
         return col
 
     return compat.shard_map(
         fn, mesh=mesh, in_specs=(layout.param_in_specs(),),
-        out_specs=flat_spec(mesh), axis_names=manual,
+        out_specs=out_spec, axis_names=manual,
     )(params)
 
 
-def init_state(cfg: ModelConfig, tc: TrainConfig, mesh, rng) -> TrainState:
-    """Materializing init (small models / tests). Dry-run uses eval_shape."""
+def init_state(cfg: ModelConfig, tc: TrainConfig, mesh, rng,
+               topology: Any = None) -> TrainState:
+    """Materializing init (small models / tests). Dry-run uses eval_shape.
+
+    ``topology`` must match the one later given to
+    :func:`build_train_step`: a nested topology adds the upper EF tiers
+    (``stage_ef``) and lays the flat master out in stage order.
+    """
     layout = make_layout(cfg, mesh)
     k_dp = dp_size(mesh)
+    _, nested, n_axes = _resolve_topology(mesh, topology)
     params = model_mod.init_params(cfg, rng)
-    master = _master_from_params(cfg, mesh, layout, params)
+    order = None if nested is None else _stage_order(n_axes)
+    master = _master_from_params(cfg, mesh, layout, params, order=order)
     opt = opt_mod.init_flat(tc.opt, layout.d_flat, like=master)
     ef = jnp.zeros((k_dp, layout.d_flat), jnp.dtype(tc.ef_dtype))
+    stage_ef = None
+    if nested is not None:
+        stage_ef = tuple(
+            jnp.zeros((k_dp, dim), jnp.dtype(tc.ef_dtype))
+            for dim in _stage_ef_dims(mesh, n_axes, layout.d_flat))
     tcs_prev = None
     if tc.needs_tcs():
         tcs_prev = jax.tree.map(lambda p: p.astype(jnp.dtype(tc.agg_dtype)),
                                 params)
     return TrainState(step=jnp.int32(0), params=params, master=master,
-                      opt=opt, ef=ef, tcs_prev=tcs_prev)
+                      opt=opt, ef=ef, tcs_prev=tcs_prev, stage_ef=stage_ef)
 
 
-def state_shardings(cfg: ModelConfig, tc: TrainConfig, mesh):
-    """NamedSharding pytree matching TrainState."""
-    fs = flat_spec(mesh)
+def state_shardings(cfg: ModelConfig, tc: TrainConfig, mesh,
+                    topology: Any = None):
+    """NamedSharding pytree matching TrainState (pass the same
+    ``topology`` as :func:`build_train_step`)."""
+    _, nested, n_axes = _resolve_topology(mesh, topology)
+    fs = flat_spec(mesh) if nested is None else nested_flat_spec(mesh,
+                                                                 n_axes)
     dp = dp_axes(mesh)
     ns = lambda s: NamedSharding(mesh, s)
     p_specs = jax.tree.map(ns, partition.param_pspecs(cfg, mesh),
@@ -162,6 +265,10 @@ def state_shardings(cfg: ModelConfig, tc: TrainConfig, mesh):
     tcs = (jax.tree.map(ns, partition.param_pspecs(cfg, mesh),
                         is_leaf=lambda x: isinstance(x, P))
            if tc.needs_tcs() else None)
+    stage_ef = None
+    if nested is not None:
+        stage_ef = tuple(ns(P(dp, "model"))
+                         for _ in range(nested.num_stages - 1))
     return TrainState(
         step=ns(P()),
         params=p_specs,
@@ -169,6 +276,7 @@ def state_shardings(cfg: ModelConfig, tc: TrainConfig, mesh):
         opt=opt_mod.FlatOptState(step=ns(P()), m=opt_m, v=opt_v),
         ef=ns(P(dp, "model")),
         tcs_prev=tcs,
+        stage_ef=stage_ef,
     )
 
 
@@ -188,8 +296,22 @@ def build_train_step(cfg: ModelConfig, tc: TrainConfig, mesh,
     ring by :func:`repro.agg.device.run_plan_segments_local`, so routed
     constellation trees run multi-device with the ring's wire format and
     §V accounting.
+
+    Nested (staged) topologies — ``"hierarchical"``, a
+    :class:`~repro.agg.nested.NestedPlan`, or a routed
+    :class:`~repro.topo.routing.NestedTopology` — lower through
+    :func:`repro.agg.device.run_nested_segments_local` instead: stage 0
+    aggregates on the minor DP axis (pod-internal ICI), later stages
+    relay per-cluster partials up the remaining axes (pod-seam DCI), the
+    upper EF tiers persist in ``state.stage_ef``, and the flat
+    master/optimizer own the stage-order layout
+    (:func:`nested_flat_spec`) — pass the same ``topology`` to
+    :func:`init_state`/:func:`state_shardings`. Metrics gain
+    ``agg_bits_relay``, the last stage's (scarce-link) §V bits.
     """
-    from repro.agg.device import ring_chain_plan, run_plan_segments_local
+    from repro.agg.device import (ring_chain_plan,
+                                  run_nested_segments_local,
+                                  run_plan_segments_local)
     from repro.agg.plan import AggPlan, compile_plan
 
     layout = make_layout(cfg, mesh)
@@ -197,16 +319,23 @@ def build_train_step(cfg: ModelConfig, tc: TrainConfig, mesh,
     k_dp = dp_size(mesh)
     seg = layout.n_local // k_dp
     agg_cfg = _segment_agg_cfg(tc, mesh, layout.d_flat)
-    if topology is None:
-        agg_plan = ring_chain_plan(k_dp)
-    elif isinstance(topology, AggPlan):
-        agg_plan = topology
+    _, nested_plan, n_axes = _resolve_topology(mesh, topology)
+    if nested_plan is not None:
+        agg_plan = nested_plan
+        fs = nested_flat_spec(mesh, n_axes)
+        gather_axes = _stage_order(n_axes)
     else:
-        agg_plan = compile_plan(topology, num_clients=k_dp)
-    if agg_plan.num_clients != k_dp:
-        raise ValueError(f"topology has {agg_plan.num_clients} clients but "
-                         f"the mesh provides {k_dp} DP ranks")
-    fs = flat_spec(mesh)
+        if topology is None:
+            agg_plan = ring_chain_plan(k_dp)
+        elif isinstance(topology, AggPlan):
+            agg_plan = topology
+        else:
+            agg_plan = compile_plan(topology, num_clients=k_dp)
+        if agg_plan.num_clients != k_dp:
+            raise ValueError(f"topology has {agg_plan.num_clients} clients "
+                             f"but the mesh provides {k_dp} DP ranks")
+        fs = flat_spec(mesh)
+        gather_axes = dp
     agg_dt = jnp.dtype(tc.agg_dtype)
     manual_axes = set(mesh.axis_names)
     needs_tcs = tc.needs_tcs()
@@ -244,7 +373,7 @@ def build_train_step(cfg: ModelConfig, tc: TrainConfig, mesh,
         return grads, loss
 
     # ---- phase 2: sparse incremental aggregation (flat, local layout) -----
-    def ring_fn(grads_tree, ef_l, w_l, part_l, params_tree, prev_tree):
+    def _col_and_mask(grads_tree, params_tree, prev_tree):
         m_idx = _model_axis_index(mesh)
         g_leaves = [l[0] for l in jax.tree.leaves(grads_tree)]
         col = layout.local_flatten(g_leaves, m_idx, agg_dt)
@@ -263,7 +392,10 @@ def build_train_step(cfg: ModelConfig, tc: TrainConfig, mesh,
             mask_col = jnp.where(jnp.any(delta != 0),
                                  (jnp.abs(delta) >= tau_g).astype(agg_dt),
                                  jnp.zeros_like(delta, agg_dt))
+        return col, mask_col
 
+    def ring_fn(grads_tree, ef_l, w_l, part_l, params_tree, prev_tree):
+        col, mask_col = _col_and_mask(grads_tree, params_tree, prev_tree)
         final, ef_new, stats = run_plan_segments_local(
             agg_cfg, agg_plan, col, ef_l[0], w_l[0], axis=dp,
             global_mask_local=mask_col, participate=part_l[0],
@@ -272,10 +404,29 @@ def build_train_step(cfg: ModelConfig, tc: TrainConfig, mesh,
             lambda s: jax.lax.psum(s, tuple(manual_axes)), stats)
         return final, ef_new[None], stats
 
+    def nested_ring_fn(grads_tree, ef_l, se_l, w_l, part_l, params_tree,
+                       prev_tree):
+        col, mask_col = _col_and_mask(grads_tree, params_tree, prev_tree)
+        final, ef_new, se_new, sts = run_nested_segments_local(
+            agg_cfg, agg_plan, col, ef_l[0],
+            tuple(x[0] for x in se_l), w_l[0], axes=n_axes,
+            global_mask_local=mask_col, participate=part_l[0])
+        total = ring_mod.RingStats(
+            bits=sum(s.bits for s in sts),
+            nnz=sum(s.nnz for s in sts),
+            err_sq=sum(s.err_sq for s in sts))
+        total, relay_bits = jax.tree.map(
+            lambda s: jax.lax.psum(s, tuple(manual_axes)),
+            (total, sts[-1].bits))
+        return (final, ef_new[None], tuple(x[None] for x in se_new),
+                total, relay_bits)
+
     # ---- phase 3b: downlink (flat master → param pytree) -------------------
     def downlink_fn(master_l):
         m_idx = _model_axis_index(mesh)
-        col = (jax.lax.all_gather(master_l, dp, axis=0, tiled=True)
+        # nested topologies own the flat space in stage order — gather in
+        # that order so the column reassembles coordinate-contiguously
+        col = (jax.lax.all_gather(master_l, gather_axes, axis=0, tiled=True)
                if k_dp > 1 else master_l)
         leaves = layout.local_unflatten(col, m_idx)
         return layout.treedef.unflatten(leaves)
@@ -308,17 +459,36 @@ def build_train_step(cfg: ModelConfig, tc: TrainConfig, mesh,
         # model-axis grad all-reduce for model-replicated leaves)
         params_in = state.params
         prev_in = state.tcs_prev if needs_tcs else state.params
-        agg_flat, ef_new, stats = compat.shard_map(
-            ring_fn,
-            mesh=mesh,
-            in_specs=(layout.grads_in_specs(dp), P(dp, "model"), P(dp),
-                      P(dp), layout.param_in_specs(),
-                      layout.param_in_specs()),
-            out_specs=(fs, P(dp, "model"),
-                       jax.tree.map(lambda _: P(), ring_mod.RingStats(
-                           0., 0., 0.))),
-            axis_names=manual_axes,
-        )(grads_stacked, state.ef, weights, participate, params_in, prev_in)
+        stats_specs = jax.tree.map(lambda _: P(),
+                                   ring_mod.RingStats(0., 0., 0.))
+        stage_ef_new = state.stage_ef
+        relay_bits = None
+        if nested_plan is None:
+            agg_flat, ef_new, stats = compat.shard_map(
+                ring_fn,
+                mesh=mesh,
+                in_specs=(layout.grads_in_specs(dp), P(dp, "model"), P(dp),
+                          P(dp), layout.param_in_specs(),
+                          layout.param_in_specs()),
+                out_specs=(fs, P(dp, "model"), stats_specs),
+                axis_names=manual_axes,
+            )(grads_stacked, state.ef, weights, participate, params_in,
+              prev_in)
+        else:
+            se_specs = tuple(P(dp, "model") for _ in state.stage_ef)
+            agg_flat, ef_new, stage_ef_new, stats, relay_bits = \
+                compat.shard_map(
+                    nested_ring_fn,
+                    mesh=mesh,
+                    in_specs=(layout.grads_in_specs(dp), P(dp, "model"),
+                              se_specs, P(dp), P(dp),
+                              layout.param_in_specs(),
+                              layout.param_in_specs()),
+                    out_specs=(fs, P(dp, "model"), se_specs, stats_specs,
+                               P()),
+                    axis_names=manual_axes,
+                )(grads_stacked, state.ef, state.stage_ef, weights,
+                  participate, params_in, prev_in)
 
         # phase 3 — ZeRO flat optimizer
         total_w = jnp.maximum(jnp.sum(weights * participate), 1e-9)
@@ -348,9 +518,12 @@ def build_train_step(cfg: ModelConfig, tc: TrainConfig, mesh,
             "agg_err_sq": stats.err_sq,
             "lr_scale": lr_scale,
         }
+        if relay_bits is not None:
+            # the scarce-link tier (pod-seam DCI / inter-cluster relay)
+            metrics["agg_bits_relay"] = relay_bits
         new_state = TrainState(step=state.step + 1, params=params_new,
                                master=master_new, opt=opt_new, ef=ef_new,
-                               tcs_prev=tcs_prev_new)
+                               tcs_prev=tcs_prev_new, stage_ef=stage_ef_new)
         return new_state, metrics
 
     return train_step

@@ -343,3 +343,36 @@ def test_simulator_topology_schedule_mode():
     out = _sim(k).run(6, seed=1, topology_schedule=sched)
     assert out["loss"][-1] < out["loss"][0]
     assert len(out["bits"]) == 6
+
+
+def test_pad_preserves_q_budget_semantics():
+    """Regression (nested-plan ISSUE satellite): ``AggPlan.pad`` must
+    round-trip ``q_budget`` — the padded plan keeps the per-client dynamic
+    budgets, the padded round is bit-exact (aggregate, EF, per-hop nnz),
+    and the §V bits are identical (padding slots transmit nothing)."""
+    cfg = _cfg(AggKind.CL_SIA, q=9)
+    g, e, w = _inputs()
+    tree = shortest_path_tree(tg.grid_graph(1, K))
+    qb = np.asarray([9, 3, 5, 1, 7, 2, 4], np.int32)
+    plan = compile_plan(tree, q_budget=qb)
+    big = plan.pad((plan.shape[0] + 3, plan.shape[1] + 2))
+    assert big.q_budget is not None
+    np.testing.assert_array_equal(np.asarray(big.q_budget), qb)
+    assert big.num_sinks == plan.num_sinks
+
+    want = execute(cfg, plan, g, e, w)
+    got = execute(cfg, big, g, e, w)
+    np.testing.assert_array_equal(np.asarray(want.aggregate),
+                                  np.asarray(got.aggregate))
+    np.testing.assert_array_equal(np.asarray(want.e_new),
+                                  np.asarray(got.e_new))
+    for field in ("bits", "nnz_out", "nnz_local", "nnz_global"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(want.stats, field)),
+            np.asarray(getattr(got.stats, field)), err_msg=field)
+    # dynamic budgets actually bind per client on both plans
+    assert (np.asarray(got.stats.nnz_out) <= np.maximum(qb, 1)).all()
+    # and the §V bits stay within the budgeted bound
+    from repro.core.algorithms import index_bits
+    assert float(jnp.sum(got.stats.bits)) <= float(
+        qb.sum() * (cfg.omega + index_bits(D)))

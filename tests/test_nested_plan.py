@@ -1,0 +1,325 @@
+"""Nested (staged) aggregation plans: compile_nested / execute_nested.
+
+Host-side contracts of the nested-plan ISSUE:
+
+* ``compile_nested`` lowers stage specs / routed ``NestedTopology``s into
+  forest stages whose sink numbering is the inter-stage wiring;
+* dense nested aggregation is the exact sum (composition introduces no
+  loss without sparsification) and CL mass conservation holds per stage
+  (aggregate + every EF tier telescopes to Σ w·g + e);
+* the cluster-aware router partitions a constellation and routes
+  intra-cluster trees + an inter-cluster relay tree;
+* per-stage §V accounting matches the staged closed forms in
+  ``core/comm_cost.py`` (CL exact; the DCI wire split matches
+  ``dci_bytes_flat_vs_hier`` on chains);
+* same-shape nested plans share ONE jit specialization (plans are traced
+  pytrees), and padding is bit-exact.
+
+Device equivalence lives in tests/test_nested_device.py.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.agg.nested import (NestedPlan, compile_nested, execute_nested,
+                              pod_ring_nested, zero_stage_ef)
+from repro.core import comm_cost as cc
+from repro.core.algorithms import AggConfig, AggKind
+from repro.core.hierarchical import dci_bytes_flat_vs_hier
+from repro.topo import graph as tg
+from repro.topo.routing import cluster_routed, partition_clusters
+from repro.topo.tree import PS, AggTree
+
+ALL_SPARSE = [AggKind.SIA, AggKind.RE_SIA, AggKind.CL_SIA, AggKind.TC_SIA,
+              AggKind.CL_TC_SIA]
+
+
+def _inputs(k, d, seed=0):
+    g = jax.random.normal(jax.random.PRNGKey(seed), (k, d))
+    e = 0.1 * jax.random.normal(jax.random.PRNGKey(seed + 1), (k, d))
+    return g, e, jnp.ones((k,), jnp.float32)
+
+
+def _gmask(cfg, d):
+    if cfg.kind in (AggKind.TC_SIA, AggKind.CL_TC_SIA):
+        return jnp.zeros((d,)).at[jnp.arange(cfg.q_global)].set(1.0)
+    return None
+
+
+# ---------------------------------------------------------------------------
+# compile_nested structure
+# ---------------------------------------------------------------------------
+
+def test_compile_nested_structure():
+    nested = pod_ring_nested(2, 4)
+    assert nested.num_stages == 2
+    assert nested.stage_units == (8, 2)
+    assert nested.stages[0].num_sinks == 2
+    assert nested.stages[1].num_sinks == 1
+    assert nested.q_budget is None
+    cl = nested.clustered[0]
+    assert cl.num_clusters == 2 and cl.num_units == 4
+    assert cl.mesh_aligned() is True and cl.uniform()
+    # sink rows: stage-0 roots deliver to K + cluster index
+    par = np.asarray(nested.stages[0].parent_row)
+    mask = np.asarray(nested.stages[0].slot_mask) > 0
+    sinks = par[mask & (par >= 8)]
+    assert set(sinks.tolist()) == {8, 9}
+
+
+def test_compile_nested_validation():
+    with pytest.raises(ValueError, match="partition"):
+        compile_nested([[((0, 1), None)], [((0,), None)]], num_clients=4)
+    with pytest.raises(ValueError, match="two clusters"):
+        compile_nested([[((0, 1), None), ((1, 2), None)], [((0, 1), None)]],
+                       num_clients=3)
+    with pytest.raises(ValueError, match="single cluster"):
+        compile_nested([[((0, 1), None), ((2, 3), None)]])
+    # wiring: stage-s sinks must equal stage-s+1 clients
+    with pytest.raises(ValueError, match="wiring"):
+        NestedPlan(stages=(pod_ring_nested(2, 2).stages[0],
+                           compile_nested([[((0, 1, 2), None)]],
+                                          num_clients=3).stages[0]))
+
+
+def test_nested_plan_pad_bit_exact():
+    cfg = AggConfig(kind=AggKind.CL_SIA, q=5)
+    nested = pod_ring_nested(2, 4)
+    shape = tuple(tuple(x + 1 for x in sig) if i == 0 else sig
+                  for i, sig in enumerate(nested.shape))
+    # grow stage 0 by one level/slot/cluster-pad everywhere applicable
+    big = nested.pad(((5, 3, 2, 5, 2), (2, 1)))
+    g, e, w = _inputs(8, 64)
+    want = execute_nested(cfg, nested, g, e, w)
+    got = execute_nested(cfg, big, g, e, w)
+    np.testing.assert_array_equal(np.asarray(want.aggregate),
+                                  np.asarray(got.aggregate))
+    np.testing.assert_array_equal(np.asarray(want.e_new),
+                                  np.asarray(got.e_new))
+    for a, b in zip(want.stage_e_new, got.stage_e_new):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(want.stats.bits),
+                                  np.asarray(got.stats.bits))
+
+
+# ---------------------------------------------------------------------------
+# execute_nested semantics
+# ---------------------------------------------------------------------------
+
+def test_dense_nested_is_exact_sum():
+    k, d = 12, 80
+    nt = cluster_routed(tg.grid_graph(3, 4), 3)
+    nested = compile_nested(nt)
+    g, e, w = _inputs(k, d)
+    res = execute_nested(AggConfig(kind=AggKind.DENSE_IA), nested, g, e, w)
+    np.testing.assert_allclose(np.asarray(res.aggregate),
+                               np.asarray((g + e).sum(0)),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("kind", ALL_SPARSE)
+def test_mass_conservation_per_stage(kind):
+    k, d = 8, 96
+    cfg = AggConfig(kind=kind, q=7)
+    nested = pod_ring_nested(2, 4)
+    g, e, w = _inputs(k, d)
+    res = execute_nested(cfg, nested, g, e, w, global_mask=_gmask(cfg, d))
+    lhs = (float(jnp.sum(res.aggregate)) + float(jnp.sum(res.e_new))
+           + sum(float(jnp.sum(x)) for x in res.stage_e_new))
+    rhs = float(jnp.sum(g + e))
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-4)
+    # per-stage stats have that stage's unit count
+    assert res.stats.bits.shape == (k,)
+    assert res.stage_stats[0].bits.shape == (2,)
+
+
+def test_stage_cfgs_override():
+    k, d = 8, 64
+    nested = pod_ring_nested(2, 4)
+    g, e, w = _inputs(k, d)
+    cfg0 = AggConfig(kind=AggKind.CL_SIA, q=4)
+    cfg1 = AggConfig(kind=AggKind.CL_SIA, q=9)
+    res = execute_nested(cfg0, nested, g, e, w, stage_cfgs=[cfg0, cfg1])
+    # inter-stage budget is cfg1's: the relay γ carries up to 9 nonzeros
+    assert int(jnp.max(res.stage_stats[0].nnz_out)) <= 9
+    assert int(jnp.max(res.stage_stats[0].nnz_out)) > 4
+    assert int(jnp.max(res.stats.nnz_out)) <= 4
+
+
+def test_straggler_and_stub_semantics():
+    k, d = 8, 64
+    cfg = AggConfig(kind=AggKind.CL_SIA, q=5)
+    nested = pod_ring_nested(2, 4)
+    g, e, w = _inputs(k, d)
+    part = jnp.ones((k,)).at[0].set(0.0)    # pod-0 chain's deepest node
+    res = execute_nested(cfg, nested, g, e, w, participate=part)
+    # the straggler banks its whole g̃ (weight·g + e) into EF; with no
+    # incoming γ to forward it transmits nothing
+    np.testing.assert_allclose(np.asarray(res.e_new[0]),
+                               np.asarray(g[0] + e[0]), rtol=1e-6)
+    assert float(res.stats.bits[0]) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Cluster-aware router
+# ---------------------------------------------------------------------------
+
+def test_partition_clusters_partitions():
+    graph = tg.walker_delta(3, 4)
+    clusters = partition_clusters(graph, 3)
+    members = sorted(i for c in clusters for i in c)
+    assert members == list(range(graph.num_clients))
+
+
+def test_cluster_routed_shapes_and_heads():
+    graph = tg.grid_graph(2, 4)
+    nt = cluster_routed(graph, 2)
+    assert nt.num_clients == graph.num_clients
+    assert nt.num_clusters == 2
+    assert len(nt.intra) == 2
+    assert nt.inter.num_clients == 2
+    # every cluster head is local-PS-rooted; every reachable unit relays
+    for tree in nt.intra:
+        assert any(p == PS for p in tree.parent)
+    assert all(nt.inter.reachable)
+    # compiles and runs
+    nested = compile_nested(nt)
+    g, e, w = _inputs(nt.num_clients, 40)
+    res = execute_nested(AggConfig(kind=AggKind.CL_SIA, q=4), nested,
+                         g, e, w)
+    assert res.aggregate.shape == (40,)
+
+
+def test_cluster_routed_exclude_routes_around_dead_relays():
+    """Regression: ``exclude`` must keep dead relays out of the intra
+    trees AND the inter-cluster quotient — a dead node is a stub, never a
+    live parent carrying traffic."""
+    graph = tg.path_graph(6)             # PS=0 — c0 — c1 — … — c5
+    dead_node = 3                        # client index 2
+    nt = cluster_routed(graph, clusters=[[0, 1, 2], [3, 4, 5]],
+                        exclude=[dead_node])
+    tree0 = nt.intra[0]
+    assert tree0.reachable[2] is False   # the dead client is a stub
+    # nobody's parent chain passes through the dead local node
+    for i, p in enumerate(tree0.parent):
+        assert p != 2 or tree0.reachable[i] is False
+    # quotient links through the dead node are gone: on a path graph the
+    # only cluster-0 ↔ cluster-1 edge is (3, 4) via the dead node
+    assert nt.inter.reachable[1] is False
+
+
+def test_client_alive_folds_stub_clusters():
+    """A quotient-unreachable cluster forwards nothing — its clients must
+    drop out of the effective aliveness (and the PS weight denominator)."""
+    inter = AggTree(parent=(PS, 0), reachable=(True, False))
+    nested = compile_nested(
+        [[((0, 1, 2, 3), None), ((4, 5, 6, 7), None)],
+         [((0, 1), inter)]])
+    alive = np.asarray(nested.client_alive())
+    np.testing.assert_array_equal(alive, [1, 1, 1, 1, 0, 0, 0, 0])
+    # and the simulator uses it: weight denominator excludes the stub
+    # cluster's clients, so a dense round still averages correctly
+    g = jnp.ones((8, 16))
+    res = execute_nested(AggConfig(kind=AggKind.DENSE_IA), nested, g,
+                         jnp.zeros((8, 16)), jnp.ones((8,)))
+    np.testing.assert_allclose(
+        np.asarray(res.aggregate) / max(float(alive.sum()), 1e-9),
+        np.ones((16,)), rtol=1e-6)
+
+
+def test_cluster_routed_explicit_clusters():
+    graph = tg.grid_graph(2, 4)
+    nt = cluster_routed(graph, clusters=[[0, 1, 2, 3], [4, 5, 6, 7]])
+    assert nt.clusters == ((0, 1, 2, 3), (4, 5, 6, 7))
+    nested = compile_nested(nt)
+    assert nested.clustered[0].mesh_aligned() is True
+
+
+# ---------------------------------------------------------------------------
+# Staged closed forms (§V)
+# ---------------------------------------------------------------------------
+
+def test_nested_cl_bits_match_measured():
+    k_p, k_d, d = 2, 4, 256
+    cfg = AggConfig(kind=AggKind.CL_SIA, q=6)
+    nested = pod_ring_nested(k_p, k_d)
+    g, e, w = _inputs(k_p * k_d, d, seed=3)
+    res = execute_nested(cfg, nested, g, e, w)
+    want = cc.nested_cl_sia_bits([k_p * k_d, k_p], d, cfg.q)
+    assert float(jnp.sum(res.stats.bits)) == want[0]
+    assert float(jnp.sum(res.stage_stats[0].bits)) == want[1]
+    # wire split: everything before the last stage is the cheap tier
+    local, scarce = cc.nested_wire_split(want)
+    assert local == want[0] and scarce == want[1]
+
+
+def test_nested_cl_tc_bits_match_measured():
+    k_p, k_d, d = 2, 4, 256
+    cfg = AggConfig(kind=AggKind.CL_TC_SIA, q=10)   # Q_L=1, Q_G=9
+    nested = pod_ring_nested(k_p, k_d)
+    g, e, w = _inputs(k_p * k_d, d, seed=5)
+    res = execute_nested(cfg, nested, g, e, w, global_mask=_gmask(cfg, d))
+    want = cc.nested_cl_tc_sia_bits([k_p * k_d, k_p], d, cfg.q_global,
+                                    cfg.q_local)
+    assert float(jnp.sum(res.stats.bits)) == want[0]
+    assert float(jnp.sum(res.stage_stats[0].bits)) == want[1]
+
+
+def test_dci_split_matches_hierarchical_model():
+    k_p, k_d, d, q = 2, 16, 4096, 10
+    payload = q * (cc.idx_bits(d) + 32)
+    flat, hier = dci_bytes_flat_vs_hier(k_p, k_d, payload)
+    flat2, nested2 = cc.dci_wire_flat_vs_nested(k_p, k_d, d, q)
+    assert flat == flat2 and hier == nested2
+    assert nested2 * k_d == flat2                 # K_d× DCI reduction
+
+
+def test_nested_tc_bound_reduces_to_tree_bound():
+    sizes0 = [list(range(1, 5)), list(range(1, 5))]   # two 4-chains
+    sizes1 = [1, 2]                                   # pod chain
+    per_stage = cc.nested_tc_sia_bits_bound(
+        [sizes0[0] + sizes0[1], sizes1], 1000, 20, 5)
+    # stage entries equal the flat tree bound with that stage's sizes
+    want0 = cc.tc_sia_bits_bound_tree(sizes0[0] + sizes0[1], 1000, 20, 5)
+    want1 = cc.tc_sia_bits_bound_tree(sizes1, 1000, 20, 5)
+    np.testing.assert_allclose(per_stage, (want0, want1))
+
+
+# ---------------------------------------------------------------------------
+# jit amortization
+# ---------------------------------------------------------------------------
+
+def test_nested_plans_share_one_specialization():
+    k, d = 8, 48
+    cfg = AggConfig(kind=AggKind.CL_SIA, q=5)
+    g, e, w = _inputs(k, d)
+    traces = []
+
+    @jax.jit
+    def round_fn(nested, g, e, w):
+        traces.append(1)
+        return execute_nested(cfg, nested, g, e, w).aggregate
+
+    base = pod_ring_nested(2, 4)
+    alt = compile_nested([[((0, 2, 4, 6), None), ((1, 3, 5, 7), None)],
+                          [((0, 1), None)]])
+    assert base.shape == alt.shape
+    round_fn(base, g, e, w)
+    round_fn(alt, g, e, w)
+    assert len(traces) == 1
+
+
+def test_topology_schedule_of_nested_plans():
+    from repro.agg import TopologySchedule
+    nts = [cluster_routed(tg.grid_graph(2, 4), 2), pod_ring_nested(2, 4),
+           cluster_routed(tg.walker_delta(2, 4), 2)]
+    sched = TopologySchedule.from_topologies(nts)
+    assert len(sched) == 3
+    shapes = {sched.plan_at(r).shape for r in range(3)}
+    assert len(shapes) == 1
+    with pytest.raises(ValueError, match="mix"):
+        TopologySchedule.from_topologies([pod_ring_nested(2, 4), 8])
