@@ -23,7 +23,7 @@ import jax.numpy as jnp
 from repro.core import sparsify as sp
 from repro.kernels import ops, ref
 
-from common import timed
+from common import provenance, timed
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -61,9 +61,12 @@ def main(dim: int = 1_000_000, reps: int = 3) -> list[str]:
         "count_ge_64": jax.jit(lambda: ref.ref_count_ge(
             g, jnp.linspace(0.01, 3, 64))),
     }
+    from repro.obs.timing import PhaseTimer
+    timer = PhaseTimer()
     results = {}
     for name, fn in fns.items():
-        _, us = timed(fn, reps=reps)
+        with timer.phase(name, track="bench"):
+            _, us = timed(fn, reps=reps)
         lines.append(f"bench,{name},{us:.0f},d={dim}")
         results[name] = {"us_per_call": round(us, 1),
                          "passes": PASSES[name]}
@@ -79,9 +82,9 @@ def main(dim: int = 1_000_000, reps: int = 3) -> list[str]:
 
     out = os.path.join(REPO, "BENCH_kernels.json")
     with open(out, "w") as f:
-        json.dump({"meta": {"d": dim, "reps": reps,
-                            "backend": jax.default_backend(),
-                            "jax": jax.__version__},
+        json.dump({"meta": {"d": dim, "reps": reps, **provenance(),
+                            "phases_s": {name: round(secs, 4) for name, secs
+                                         in timer.totals().items()}},
                    "kernels": results}, f, indent=1, sort_keys=True)
         f.write("\n")
     print("\n".join(lines))

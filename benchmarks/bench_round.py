@@ -307,6 +307,10 @@ def main(argv=None) -> dict:
     ap.add_argument("--out", default=None,
                     help="output path (default: repo-root "
                          "BENCH_agg_round.json; temp file under --smoke)")
+    ap.add_argument("--trace", default=None,
+                    help="also write the section wall-clock spans as a "
+                         "repro.obs JSONL trace (Perfetto-exportable via "
+                         "python -m repro.obs.report export)")
     args = ap.parse_args(argv)
     if args.smoke:
         args.dim, args.reps = 2048, 1
@@ -318,34 +322,50 @@ def main(argv=None) -> dict:
     d, k = args.dim, args.clients
     q = args.q if args.q is not None else max(1, d // 100)
 
+    from common import provenance
+    from repro.obs.timing import PhaseTimer
+
     passes = {name: {"unfused": vector_passes(name, False),
                      "fused": vector_passes(name, True)}
               for name in ALG_NAMES}
     assert all(p["fused"] < p["unfused"] for p in passes.values())
 
+    timer = PhaseTimer()
+    with timer.phase("host_rounds", track="bench"):
+        host_rounds = bench_host(k, d, q, args.reps, ["exact", "threshold"])
+    with timer.phase("device_rounds", track="bench"):
+        device_rounds = bench_device(k, d, q, args.reps)
+    with timer.phase("fused_interpret", track="bench"):
+        fused_interpret = smoke_fused_interpret(
+            k, min(d, 4096), max(1, min(d, 4096) // 100))
+
     result = {
         "meta": {
-            "jax": jax.__version__,
-            "backend": jax.default_backend(),
             "device_count": jax.device_count(),
             "d": d, "clients": k, "q": q, "reps": args.reps,
             "smoke": bool(args.smoke),
             "repro_pallas_interpret": os.environ.get(
                 "REPRO_PALLAS_INTERPRET", ""),
+            **provenance(),
         },
         # The structural metric that transfers to TPU: HBM sweeps per node
         # step (memory-bound round ⇒ sweeps bound wall-time). Fused is
         # strictly smaller for every algorithm.
         "vector_passes_per_node": passes,
-        "host_rounds_us": bench_host(k, d, q, args.reps,
-                                     ["exact", "threshold"]),
-        "device_rounds_us": bench_device(k, d, q, args.reps),
+        "host_rounds_us": host_rounds,
+        "device_rounds_us": device_rounds,
         # fused path correctness + interpret-mode smoke (see docstring)
-        "fused_interpret_rounds_us": smoke_fused_interpret(
-            k, min(d, 4096), max(1, min(d, 4096) // 100)),
+        "fused_interpret_rounds_us": fused_interpret,
     }
     if args.nested:
-        result["nested_round"] = bench_nested(2, 4, d, q, args.reps)
+        with timer.phase("nested_round", track="bench"):
+            result["nested_round"] = bench_nested(2, 4, d, q, args.reps)
+    result["meta"]["phases_s"] = {name: round(secs, 4) for name, secs
+                                  in timer.totals().items()}
+    if args.trace:
+        from repro.obs.collector import TraceCollector
+        with TraceCollector(args.trace, meta=dict(result["meta"])) as col:
+            timer.emit(col)
     with open(args.out, "w") as f:
         json.dump(result, f, indent=1, sort_keys=True)
         f.write("\n")

@@ -2,6 +2,8 @@
 
 from __future__ import annotations
 
+import datetime
+import subprocess
 import time
 
 import jax
@@ -33,6 +35,25 @@ def paper_data(num_clients: int, per_client: int = 200, seed: int = 0):
     test = make_synthetic_mnist(jax.random.PRNGKey(seed + 1), 2000)
     fed = partition_iid(jax.random.PRNGKey(seed + 2), train, num_clients)
     return fed, test
+
+
+def provenance() -> dict:
+    """Run provenance for BENCH_*.json meta blocks — enough to answer
+    "which commit, when, on what" for any committed number."""
+    try:
+        sha = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                             capture_output=True, text=True,
+                             timeout=10).stdout.strip() or None
+    except (OSError, subprocess.SubprocessError):
+        sha = None
+    return {
+        "git_sha": sha,
+        "ts_utc": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds"),
+        "device_kind": jax.devices()[0].device_kind,
+        "backend": jax.default_backend(),
+        "jax": jax.__version__,
+    }
 
 
 def timed(fn, *args, reps: int = 3):

@@ -30,6 +30,7 @@ differently when a shard_map consumes it.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Callable, NamedTuple, Optional
 
 import jax
@@ -43,6 +44,9 @@ from repro.core import tcs as tcs_mod
 from repro.core.algorithms import AggConfig, AggKind
 from repro.data.federated import FederatedData, client_minibatch
 from repro.fed.topology import FailureSchedule, TreeTopology
+from repro.obs.collector import RoundBuffer, TraceCounter
+from repro.obs.timing import PhaseTimer
+from repro.runtime.fault import banked_mass, dead_banked_mass
 
 Array = jax.Array
 
@@ -91,10 +95,29 @@ class SimState(NamedTuple):
 
 
 class RoundLog(NamedTuple):
+    """Per-round telemetry — everything the jitted round already computes.
+
+    Leaves stay on device until the history buffer flushes (one
+    ``device_get`` per flush — see :meth:`Simulator.run`). ``stats`` holds
+    the per-stage :class:`~repro.core.algorithms.HopStats` (stage 0 = the
+    client forest, leaves ``[K_s]`` in client index order); the scalar
+    curves the simulator returns (loss/bits/nnz) reduce from these on the
+    host, and the trace collector consumes them verbatim.
+    """
+
     loss: Array
-    bits: Array             # total uplink bits this round (paper §V exact)
-    nnz: Array              # Σ_k ‖γ_k‖₀
-    err_sq: Array           # Σ_k ‖e_k‖²
+    stats: tuple            # per-stage HopStats (§V exact per-hop bits)
+    participation: Array    # [K] effective mask (participate ∧ alive)
+    ef_mass: Array          # [K] ‖e_k‖₁ banked after this round
+    stage_ef_mass: tuple    # banked mass per upper EF tier ([K_s] each)
+    ef_dead_mass: Array     # Σ over non-participants of ‖e_k‖₁ (‖e_dead‖)
+
+
+def _fetch_logs(buffer: RoundBuffer) -> list:
+    """The run loop's single device→host sync point: materialize every
+    buffered round log with one ``device_get``. Module-level so tests can
+    monkeypatch it to count syncs."""
+    return buffer.flush()
 
 
 class _PlanCache:
@@ -108,12 +131,20 @@ class _PlanCache:
     def __init__(self, num_clients: int):
         self.k = num_clients
         self._plans: dict = {}
+        self._raws: dict = {}
         self._shape: Optional[tuple] = None
+
+    def raw(self, key):
+        """The topology object ``build()`` returned (an AggTree in tree
+        mode — it carries the link model the trace timeline uses)."""
+        return self._raws.get(key)
 
     def get(self, key, build: Callable[[], Any]) -> AggPlan:
         plan = self._plans.get(key)
         if plan is None:
-            plan = compile_plan(build(), num_clients=self.k)
+            raw = build()
+            self._raws[key] = raw
+            plan = compile_plan(raw, num_clients=self.k)
             shape = (plan.shape if self._shape is None else
                      (max(self._shape[0], plan.shape[0]),
                       max(self._shape[1], plan.shape[1])))
@@ -178,6 +209,10 @@ class Simulator:
         if self.backend == "device":
             from repro.agg.device import client_mesh
             self._mesh = client_mesh(self.k)
+        # counts jit specializations of the round closure: bumped at trace
+        # time only, so attaching/detaching a trace collector provably
+        # cannot add a retrace (tested in tests/test_obs.py)
+        self.trace_counter = TraceCounter()
 
     def init(self, seed: int = 0) -> SimState:
         flat = flatten_lr(lr_init(self.pc))
@@ -218,8 +253,11 @@ class Simulator:
                     cfg, plan, g, e, w, mesh=mesh, stage_e=stage_e,
                     global_mask=global_mask, participate=participate)
 
+        trace_counter = self.trace_counter
+
         def one_round(state: SimState, plan: AggPlan,
                       participate: Optional[Array] = None):
+            trace_counter.bump()        # runs at trace time only
             rng, kb = jax.random.split(state.rng)
             params = unflatten_lr(state.flat_w, pc)
             bx, by = client_minibatch(fed, kb, pc.batch_size)
@@ -265,14 +303,20 @@ class Simulator:
             new_state = SimState(round=state.round + 1, flat_w=flat_new,
                                  ef=res.e_new, tcs_prev=tcs_prev, rng=rng,
                                  stage_ef=stage_ef)
+            # telemetry riders — tiny [K] reductions of state the round
+            # already holds, always computed so collection on/off cannot
+            # change the jitted program
+            ef_mass = banked_mass(res.e_new)
+            ef_dead = dead_banked_mass(res.e_new, part)
             log = RoundLog(
                 loss=lr_loss(unflatten_lr(flat_new, pc),
                              fed.x.reshape(-1, pc.input_dim),
                              fed.y.reshape(-1)),
-                bits=sum(jnp.sum(s.bits) for s in all_stats),
-                nnz=sum(jnp.sum(s.nnz_out.astype(jnp.float32))
-                        for s in all_stats),
-                err_sq=sum(jnp.sum(s.err_sq) for s in all_stats),
+                stats=all_stats,
+                participation=part,
+                ef_mass=ef_mass,
+                stage_ef_mass=tuple(banked_mass(e) for e in stage_ef),
+                ef_dead_mass=ef_dead,
             )
             return new_state, log
 
@@ -284,7 +328,8 @@ class Simulator:
             participate_fn: Optional[Callable] = None,
             failure_schedule: Optional[FailureSchedule] = None,
             order_fn: Optional[Callable] = None,
-            topology_schedule: Optional[TopologySchedule] = None):
+            topology_schedule: Optional[TopologySchedule] = None,
+            collector=None, flush_every: int = 32):
         """→ dict of curves (accuracy, loss, bits/round).
 
         Per-round topology sources (mutually exclusive):
@@ -298,6 +343,12 @@ class Simulator:
         * ``topology_schedule``: a pre-padded
           :class:`~repro.agg.TopologySchedule` — graph-per-round or link
           up/down events, one jit specialization for the whole schedule.
+
+        ``collector`` (a :class:`repro.obs.TraceCollector`) records every
+        round to a JSONL trace; attaching one never changes the jitted
+        round. Round logs stay on device and are materialized with one
+        ``device_get`` every ``flush_every`` rounds (plus once at the
+        end), so the device backend is not forced to sync per round.
         """
         state = self.init(seed)
         topo = self.tree_topology
@@ -325,36 +376,85 @@ class Simulator:
         step = jax.jit(self.round_fn())
         cache = _PlanCache(self.k)
 
-        def plan_for(r: int, state: SimState) -> AggPlan:
+        def plan_for(r: int, state: SimState) -> tuple:
+            """→ (plan, routed AggTree | None — the trace's link model)."""
             if self._nested is not None:
-                return self._nested
+                return self._nested, None
             if topology_schedule is not None:
-                return topology_schedule.plan_at(r)
+                return topology_schedule.plan_at(r), None
             if topo is not None:
                 dead = (tuple(failure_schedule.dead_at(r))
                         if failure_schedule is not None else ())
-                return cache.get(("tree", dead), lambda: topo.tree(dead=dead))
+                key = ("tree", dead)
+                plan = cache.get(key, lambda: topo.tree(dead=dead))
+                return plan, cache.raw(key)
             if order_fn is not None:
                 order = np.asarray(order_fn(r, state), np.int32)
                 return cache.get(("order", tuple(order.tolist())),
-                                 lambda: order)
-            return cache.get(("chain",), lambda: self.k)
+                                 lambda: order), None
+            return cache.get(("chain",), lambda: self.k), None
 
+        if collector is not None:
+            collector.configure(
+                cfg=self.agg, d=self.d, num_clients=self.k,
+                backend=self.backend,
+                topology=("nested" if self._nested is not None
+                          else "schedule" if topology_schedule is not None
+                          else "tree" if topo is not None
+                          else "order" if order_fn is not None else "chain"))
+
+        timer = PhaseTimer()
+        buf = RoundBuffer()
+        pending: list = []      # (round, plan, tree, retraces, phases)
         accs, losses, bits, nnzs = [], [], [], []
+        run_t0 = time.perf_counter()
+
+        def flush():
+            t0 = time.perf_counter()
+            logs = _fetch_logs(buf)
+            dur = time.perf_counter() - t0
+            if collector is not None and logs:
+                collector.record_span("flush", t0 - run_t0, dur,
+                                      track="simulator",
+                                      args={"rounds": len(logs)})
+            for (log, acc), (r, plan, tree, retraces, phases) in zip(
+                    logs, pending):
+                losses.append(float(log.loss))
+                bits.append(float(sum(np.sum(np.asarray(s.bits))
+                                      for s in log.stats)))
+                nnzs.append(float(sum(np.sum(np.asarray(s.nnz_out))
+                                      for s in log.stats)))
+                if acc is not None:
+                    accs.append((r, float(acc)))
+                if collector is not None:
+                    collector.record_round(
+                        r, log.stats, plan=plan, tree=tree, loss=log.loss,
+                        participate=log.participation, ef_mass=log.ef_mass,
+                        stage_ef_mass=log.stage_ef_mass,
+                        ef_dead_mass=log.ef_dead_mass, retraces=retraces,
+                        phases=phases)
+            del pending[:]
+
         for r in range(rounds):
-            plan = plan_for(r, state)
-            part = None
-            if participate_fn is not None:
-                part = participate_fn(r, state)
+            with timer.phase("plan"):
+                plan, tree = plan_for(r, state)
+                part = None
+                if participate_fn is not None:
+                    part = participate_fn(r, state)
             # stranded/dead clients are masked inside execute via plan.alive
-            state, log = step(state, plan, part)
-            losses.append(float(log.loss))
-            bits.append(float(log.bits))
-            nnzs.append(float(log.nnz))
-            if test_x is not None and (r % eval_every == 0
-                                       or r == rounds - 1):
-                acc = lr_accuracy(unflatten_lr(state.flat_w, self.pc),
-                                  test_x, test_y)
-                accs.append((r, float(acc)))
+            with timer.phase("dispatch"):
+                state, log = step(state, plan, part)
+                acc = None
+                if test_x is not None and (r % eval_every == 0
+                                           or r == rounds - 1):
+                    acc = lr_accuracy(unflatten_lr(state.flat_w, self.pc),
+                                      test_x, test_y)
+            # logs stay un-fetched on device until the next flush
+            buf.push((log, acc))
+            pending.append((r, plan, tree, self.trace_counter.count,
+                            timer.take()))
+            if len(buf) >= max(1, flush_every):
+                flush()
+        flush()
         return {"state": state, "loss": losses, "bits": bits, "nnz": nnzs,
                 "accuracy": accs}

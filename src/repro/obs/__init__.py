@@ -1,0 +1,39 @@
+"""Queryable round telemetry (``repro.obs``).
+
+Every execution path of the repo — host ``execute``/``execute_nested``,
+the device shard_map lowerings, the federated :class:`~repro.fed.simulator.
+Simulator`, the train step, the benchmarks — already computes rich per-hop
+accounting (:class:`~repro.core.algorithms.HopStats`). This package turns
+those traced arrays into a structured, queryable trace *without touching
+jitted math*: nothing inside jit changes; a host-side
+:class:`TraceCollector` consumes the round outputs after each round and
+emits versioned :data:`~repro.obs.record.SCHEMA` records to a JSONL file.
+
+* :mod:`repro.obs.record` — the trace schema (round/span/meta records),
+  plan introspection (forest reconstruction, levels, subtree sizes), the
+  simulated per-hop timeline and its validation helpers;
+* :mod:`repro.obs.collector` — :class:`TraceCollector` (JSONL emitter),
+  :class:`RoundBuffer` (device→host sync batching) and
+  :class:`TraceCounter` (jit retrace accounting);
+* :mod:`repro.obs.timing` — :class:`PhaseTimer` wall-clock phase hooks
+  (benchmarks, simulator round phases);
+* :mod:`repro.obs.chrome` — Chrome trace-event export (open in Perfetto);
+* :mod:`repro.obs.report` — ``python -m repro.obs.report`` CLI
+  (``summary`` / ``diff`` / ``validate``);
+* :mod:`repro.obs.smoke` — the CI smoke driver (host + device backends,
+  flat + nested topologies).
+"""
+
+from repro.obs.chrome import chrome_events, export_chrome_trace
+from repro.obs.collector import RoundBuffer, TraceCollector, TraceCounter
+from repro.obs.record import (SCHEMA, hop_timeline, iter_trace, plan_meta,
+                              subtree_sizes_from_parent, validate_record,
+                              validate_trace)
+from repro.obs.timing import PhaseTimer
+
+__all__ = [
+    "SCHEMA", "TraceCollector", "RoundBuffer", "TraceCounter", "PhaseTimer",
+    "plan_meta", "hop_timeline", "subtree_sizes_from_parent", "iter_trace",
+    "validate_record", "validate_trace", "chrome_events",
+    "export_chrome_trace",
+]

@@ -1,0 +1,110 @@
+"""Telemetry smoke driver — ``python -m repro.obs.smoke --out DIR``.
+
+Runs short :class:`~repro.fed.simulator.Simulator` experiments across the
+execution paths the trace subsystem must cover — flat chain, routed
+constellation tree (link model → critical path), nested two-stage plan,
+and (with ``--device``) the device-backend lowering of flat and nested —
+writing one JSONL trace + Chrome export per scenario, then validates
+every trace and cross-checks its totals against the per-hop stats. CI
+runs this (host and 8-fake-device) and uploads the directory as an
+artifact, so every green build carries an openable Perfetto trace.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import sys
+
+
+def _sims(pc, fed, device: bool):
+    """→ [(name, Simulator)] covering the execution paths."""
+    import repro.topo.graph as tg
+    from repro.core.algorithms import AggConfig, AggKind
+    from repro.fed.simulator import Simulator
+    from repro.fed.topology import TreeTopology
+    from repro.topo.routing import cluster_routed
+
+    cfg = AggConfig(kind=AggKind.CL_SIA, q=pc.q)
+    k = pc.num_clients
+    tree = TreeTopology(tg.walker_delta(2, k // 2, gateways=(1, k // 2)),
+                        routing="widest")
+    nested = cluster_routed(tg.grid_graph(2, k // 2), 2)
+    out = [
+        ("host_chain", Simulator(pc, cfg, fed, local_lr=pc.lr)),
+        ("host_tree", Simulator(pc, cfg, fed, local_lr=pc.lr,
+                                tree_topology=tree)),
+        ("host_nested", Simulator(pc, cfg, fed, local_lr=pc.lr,
+                                  nested_topology=nested)),
+    ]
+    if device:
+        out += [
+            ("device_chain", Simulator(pc, cfg, fed, local_lr=pc.lr,
+                                       backend="device")),
+            ("device_nested", Simulator(pc, cfg, fed, local_lr=pc.lr,
+                                        nested_topology=nested,
+                                        backend="device")),
+        ]
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.obs.smoke",
+                                 description=__doc__.split("\n")[0])
+    ap.add_argument("--out", default="traces", help="output directory")
+    ap.add_argument("--rounds", type=int, default=10)
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--device", action="store_true",
+                    help="also run backend='device' scenarios (needs "
+                         "jax.device_count() >= --clients)")
+    args = ap.parse_args(argv)
+
+    import jax
+    if args.device and jax.device_count() < args.clients:
+        print(f"--device needs {args.clients} devices, have "
+              f"{jax.device_count()} (set XLA_FLAGS="
+              f"--xla_force_host_platform_device_count={args.clients})")
+        return 2
+
+    from repro.configs import PAPER
+    from repro.data.federated import partition_iid
+    from repro.data.synthetic import make_synthetic_mnist
+    from repro.obs import (TraceCollector, export_chrome_trace, iter_trace,
+                           validate_trace)
+    from repro.obs.report import print_summary, summarize
+
+    pc = dataclasses.replace(PAPER, num_clients=args.clients)
+    train = make_synthetic_mnist(jax.random.PRNGKey(0), args.clients * 40)
+    fed = partition_iid(jax.random.PRNGKey(2), train, args.clients)
+    os.makedirs(args.out, exist_ok=True)
+
+    failed = False
+    for name, sim in _sims(pc, fed, args.device):
+        path = os.path.join(args.out, f"{name}.jsonl")
+        with TraceCollector(path, meta={"scenario": name}) as col:
+            out = sim.run(args.rounds, collector=col, flush_every=4)
+        res = validate_trace(path)
+        errs = list(res.pop("errors"))
+        # the returned curves must reduce from the recorded per-hop stats
+        rounds = [r for r in iter_trace(path) if r["kind"] == "round"]
+        for r, rec in enumerate(rounds):
+            if abs(rec["totals"]["bits"] - out["bits"][r]) > 0.5:
+                errs.append(f"round {r}: trace bits "
+                            f"{rec['totals']['bits']} != curve "
+                            f"{out['bits'][r]}")
+        if sim.trace_counter.count != 1:
+            errs.append(f"{sim.trace_counter.count} jit specializations "
+                        f"(want 1)")
+        chrome = export_chrome_trace(path)
+        status = "OK" if not errs else "FAIL"
+        print(f"[{status}] {name}: {res} → {path}, {chrome}")
+        for e in errs[:10]:
+            print(f"    {e}")
+        failed = failed or bool(errs)
+        print_summary(summarize(path))
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -9,7 +9,10 @@ Failure handling is topological: a dead *relay* is bypassed by re-ordering
 the chain (fedsim) / rebuilding the ring permutation without the dead rank
 (production: re-mesh + elastic restore from the last checkpoint — EF rows
 of surviving clients carry over; the dead client's banked mass is lost and
-bounded by ‖e_dead‖, which we expose as a metric).
+bounded by ‖e_dead‖, which we expose as a metric:
+:func:`dead_banked_mass` is computed every round by the simulator
+(``RoundLog.ef_dead_mass``, the ``ef_dead_mass`` field of trace round
+records) and by ``train.step`` when its telemetry flag is on).
 """
 
 from __future__ import annotations
@@ -58,3 +61,16 @@ def heal_chain(order: np.ndarray, dead: int) -> np.ndarray:
 def banked_mass(ef: Array) -> Array:
     """Per-client ‖e_k‖₁ — the loss bound if client k dies now."""
     return jnp.sum(jnp.abs(ef), axis=-1)
+
+
+def dead_banked_mass(ef: Array, participation: Array) -> Array:
+    """‖e_dead‖ — total banked EF mass currently held by non-participants.
+
+    ``participation`` is the effective [K] mask (participate ∧ alive). A
+    client at 0 still *holds* its bank — the mass is only lost if it never
+    returns — so this is the round's exposure bound: what the global model
+    permanently forfeits if every currently-dead client stays dead.
+    Jit-safe; the simulator logs it every round.
+    """
+    dead = 1.0 - jnp.clip(participation, 0.0, 1.0)
+    return jnp.sum(dead * banked_mass(ef))

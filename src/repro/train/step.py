@@ -285,8 +285,14 @@ def state_shardings(cfg: ModelConfig, tc: TrainConfig, mesh,
 # ---------------------------------------------------------------------------
 
 def build_train_step(cfg: ModelConfig, tc: TrainConfig, mesh,
-                     topology: Any = None):
+                     topology: Any = None, telemetry: bool = False):
     """Returns train_step(state, batch) → (state, metrics). jit-ready.
+
+    ``telemetry=True`` adds the fault-exposure metrics the trace
+    subsystem records (``ef_mass`` = Σ_k ‖e_k‖₁ over every EF tier,
+    ``ef_dead_mass`` = :func:`repro.runtime.fault.dead_banked_mass` over
+    the round's non-participants); off by default so the historic metrics
+    pytree — and the compiled step — are unchanged.
 
     ``topology`` selects the aggregation route over the K_dp clients:
     ``None`` keeps the rotated ring (the paper chain, bit-exact to the
@@ -521,6 +527,13 @@ def build_train_step(cfg: ModelConfig, tc: TrainConfig, mesh,
         if relay_bits is not None:
             # the scarce-link tier (pod-seam DCI / inter-cluster relay)
             metrics["agg_bits_relay"] = relay_bits
+        if telemetry:
+            from repro.runtime.fault import dead_banked_mass
+            metrics["ef_mass"] = (
+                jnp.sum(jnp.abs(ef_new))
+                + sum(jnp.sum(jnp.abs(se)) for se in stage_ef_new or ()))
+            metrics["ef_dead_mass"] = dead_banked_mass(
+                ef_new.reshape(k_dp, -1), participate)
         new_state = TrainState(step=state.step + 1, params=params_new,
                                master=master_new, opt=opt_new, ef=ef_new,
                                tcs_prev=tcs_prev_new, stage_ef=stage_ef_new)

@@ -1,0 +1,290 @@
+"""Round telemetry (repro.obs): trace/ground-truth consistency, schema,
+report CLI, jit-neutrality, sync batching, and the ‖e_dead‖ fault metric.
+
+The load-bearing invariants:
+
+* per-hop bits in the trace are exactly the executor's HopStats, which on
+  full-participation rounds equal the §V closed forms (CL-SIA exact, the
+  Prop-2 ceiling for TC-SIA) — on chain, tree, and nested plans;
+* the recorded critical path reproduces ``topo.tree.round_latency_s``;
+* attaching a collector adds zero jit specializations (trace counter);
+* the history loop syncs device→host once per flush, not per round;
+* ``ef_dead_mass`` is Σ of non-participants' banked ‖e‖₁, driven through
+  a scripted relay death.
+"""
+
+import dataclasses
+import json
+
+import jax
+import numpy as np
+import pytest
+
+import repro.topo.graph as tg
+from repro.configs import PAPER
+from repro.core import comm_cost as cc
+from repro.core.algorithms import AggConfig, AggKind
+from repro.data.federated import partition_iid
+from repro.data.synthetic import make_synthetic_mnist
+from repro.fed import simulator as sim_mod
+from repro.fed.simulator import Simulator
+from repro.fed.topology import FailureSchedule, TreeTopology
+from repro.obs import (TraceCollector, export_chrome_trace, iter_trace,
+                       plan_meta, subtree_sizes_from_parent, validate_trace)
+from repro.obs.report import main as report_main
+from repro.runtime.fault import dead_banked_mass
+from repro.topo.routing import cluster_routed
+from repro.topo.tree import round_latency_s
+
+K = 8
+PC = dataclasses.replace(PAPER, num_clients=K)
+IDX = cc.idx_bits(PC.d)
+
+
+@pytest.fixture(scope="module")
+def fed():
+    train = make_synthetic_mnist(jax.random.PRNGKey(0), K * 40)
+    return partition_iid(jax.random.PRNGKey(2), train, K)
+
+
+def _cfg(kind=AggKind.CL_SIA):
+    return AggConfig(kind=kind, q=PC.q, q_global=PC.q_global,
+                     q_local=PC.q_local)
+
+
+def _rounds(path):
+    return [r for r in iter_trace(str(path)) if r["kind"] == "round"]
+
+
+# ---------------------------------------------------------------------------
+# Trace == HopStats == closed forms
+# ---------------------------------------------------------------------------
+
+def test_chain_trace_bits_exact(fed, tmp_path):
+    path = tmp_path / "chain.jsonl"
+    sim = Simulator(PC, _cfg(), fed, local_lr=PC.lr)
+    with TraceCollector(str(path)) as col:
+        out = sim.run(5, collector=col, flush_every=2)
+    assert validate_trace(str(path))["errors"] == []
+    per_hop = PC.q * (32 + IDX)          # CL-SIA constant-length uplink
+    for r, rec in enumerate(_rounds(path)):
+        assert rec["stages"][0]["bits"] == [per_hop] * K
+        assert rec["totals"]["bits"] == cc.cl_sia_bits(K, PC.d, PC.q)
+        assert rec["totals"]["bits"] == out["bits"][r]
+        assert rec["totals"]["bits_global"] == 0
+        assert rec["totals"]["bits_local"] == rec["totals"]["bits"]
+        # chain forest: every subtree size 1..K appears exactly once
+        sizes = subtree_sizes_from_parent(rec["plan"]["stages"][0]["parent"])
+        assert sorted(sizes.tolist()) == list(range(1, K + 1))
+
+
+def test_tree_trace_crit_path_matches_link_model(fed, tmp_path):
+    path = tmp_path / "tree.jsonl"
+    topo = TreeTopology(tg.walker_delta(2, K // 2, gateways=(1, K // 2)),
+                        routing="widest")
+    sim = Simulator(PC, _cfg(), fed, local_lr=PC.lr, tree_topology=topo)
+    with TraceCollector(str(path)) as col:
+        sim.run(4, collector=col)
+    tree = topo.tree()
+    for rec in _rounds(path):
+        assert rec["totals"]["bits"] == cc.cl_sia_bits_tree(K, PC.d, PC.q)
+        want = round_latency_s(tree, np.asarray(rec["stages"][0]["bits"]))
+        assert rec["crit_path_s"] == pytest.approx(want, rel=1e-12)
+        # timeline self-consistency: crit path is the latest delivery
+        assert rec["crit_path_s"] == pytest.approx(
+            max(rec["stages"][0]["t1_s"]))
+
+
+def test_tc_sia_under_recorded_prop2_bound(fed, tmp_path):
+    path = tmp_path / "tc.jsonl"
+    sim = Simulator(PC, _cfg(AggKind.TC_SIA), fed, local_lr=PC.lr)
+    with TraceCollector(str(path)) as col:
+        sim.run(5, collector=col)
+    for rec in _rounds(path):
+        sizes = subtree_sizes_from_parent(rec["plan"]["stages"][0]["parent"])
+        bound = cc.tc_sia_bits_bound_tree(sizes, PC.d, PC.q_global,
+                                          PC.q_local, 32)
+        # Prop-2 bounds the EXPECTED λ-nnz — individual rounds fluctuate
+        # around it (random support overlaps), so allow 2%
+        assert rec["totals"]["bits"] <= 1.02 * bound
+        assert rec["totals"]["bits_global"] + rec["totals"]["bits_local"] \
+            == pytest.approx(rec["totals"]["bits"])
+
+
+def test_nested_trace_per_stage_bits(fed, tmp_path):
+    path = tmp_path / "nested.jsonl"
+    nt = cluster_routed(tg.grid_graph(2, K // 2), 2)
+    sim = Simulator(PC, _cfg(), fed, local_lr=PC.lr, nested_topology=nt)
+    with TraceCollector(str(path)) as col:
+        out = sim.run(4, collector=col)
+    assert validate_trace(str(path))["errors"] == []
+    stage_want = cc.nested_cl_sia_bits([K, 2], PC.d, PC.q)
+    for r, rec in enumerate(_rounds(path)):
+        assert rec["plan"]["type"] == "nested"
+        assert len(rec["stages"]) == 2
+        assert [sum(s["bits"]) for s in rec["stages"]] == list(stage_want)
+        assert rec["totals"]["bits"] == sum(stage_want) == out["bits"][r]
+        # stage 1 has its own EF tier mass recorded
+        assert len(rec["stages"][1]["ef_mass"]) == 2
+
+
+# ---------------------------------------------------------------------------
+# jit-neutrality + zero-cost disabled
+# ---------------------------------------------------------------------------
+
+def test_collector_adds_no_jit_specialization(fed, tmp_path):
+    bare = Simulator(PC, _cfg(), fed, local_lr=PC.lr)
+    bare.run(6)
+    assert bare.trace_counter.count == 1
+    traced = Simulator(PC, _cfg(), fed, local_lr=PC.lr)
+    with TraceCollector(str(tmp_path / "t.jsonl")) as col:
+        traced.run(6, collector=col, flush_every=2)
+    assert traced.trace_counter.count == 1
+
+
+def test_disabled_collector_is_noop(tmp_path):
+    path = tmp_path / "off.jsonl"
+    col = TraceCollector(str(path), enabled=False)
+    assert col.record_span("x", 0.0, 1.0) is None
+    assert col.record_round(0, None) is None       # never touches stats
+    col.close()
+    assert not path.exists()
+    assert TraceCollector(None).enabled is False
+
+
+# ---------------------------------------------------------------------------
+# Sync batching (satellite: one device_get per flush)
+# ---------------------------------------------------------------------------
+
+def test_history_syncs_once_per_flush(fed, monkeypatch):
+    fetches = []
+    real = sim_mod._fetch_logs
+    monkeypatch.setattr(sim_mod, "_fetch_logs",
+                        lambda buf: fetches.append(len(buf)) or real(buf))
+    sim = Simulator(PC, _cfg(), fed, local_lr=PC.lr)
+    out = sim.run(10, flush_every=4)
+    assert [n for n in fetches if n] == [4, 4, 2]
+    assert len(out["bits"]) == 10
+
+
+def test_flush_cadence_does_not_change_curves(fed):
+    a = Simulator(PC, _cfg(), fed, local_lr=PC.lr).run(7, flush_every=1)
+    b = Simulator(PC, _cfg(), fed, local_lr=PC.lr).run(7, flush_every=100)
+    assert a["loss"] == b["loss"]
+    assert a["bits"] == b["bits"]
+    assert a["nnz"] == b["nnz"]
+
+
+# ---------------------------------------------------------------------------
+# ‖e_dead‖ fault metric (satellite: scripted relay death)
+# ---------------------------------------------------------------------------
+
+def test_dead_banked_mass_unit():
+    ef = np.asarray([[1., -2.], [3., 4.], [0., -5.]], np.float32)
+    part = np.asarray([1., 0., 0.], np.float32)
+    assert float(dead_banked_mass(ef, part)) == pytest.approx(7.0 + 5.0)
+    assert float(dead_banked_mass(ef, np.ones(3, np.float32))) == 0.0
+
+
+def test_relay_death_exposes_ef_dead_mass(fed, tmp_path):
+    path = tmp_path / "death.jsonl"
+    topo = TreeTopology(tg.walker_delta(2, K // 2, gateways=(1, K // 2)),
+                        routing="widest")
+    sim = Simulator(PC, _cfg(), fed, local_lr=PC.lr, tree_topology=topo)
+    fails = FailureSchedule(K, {2: ([0], []), 5: ([], [0])})
+    with TraceCollector(str(path)) as col:
+        sim.run(7, failure_schedule=fails, collector=col)
+    recs = _rounds(path)
+    for rec in recs:
+        # defining identity: Σ of non-participants' banked ‖e‖₁
+        dead = [m for m, p in zip(rec["stages"][0]["ef_mass"],
+                                  rec["participation"]) if p == 0]
+        assert rec["ef_dead_mass"] == pytest.approx(sum(dead), rel=1e-6)
+    assert all(r["ef_dead_mass"] == 0 for r in recs[:2])
+    assert all(r["ef_dead_mass"] > 0 for r in recs[2:5])      # client 0 dead
+    assert all(r["ef_dead_mass"] == 0 for r in recs[5:])      # recovered
+
+
+# ---------------------------------------------------------------------------
+# Schema validation + report CLI + Chrome export
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def trace_file(fed, tmp_path_factory):
+    path = tmp_path_factory.mktemp("obs") / "trace.jsonl"
+    sim = Simulator(PC, _cfg(), fed, local_lr=PC.lr)
+    with TraceCollector(str(path)) as col:
+        sim.run(5, collector=col, flush_every=2)
+    return str(path)
+
+
+def test_validate_rejects_malformed(trace_file, tmp_path):
+    bad = tmp_path / "bad.jsonl"
+    lines = open(trace_file).read().splitlines()
+    round_line = next(ln for ln in lines
+                      if json.loads(ln)["kind"] == "round")
+    rec = json.loads(round_line)
+    del rec["totals"]
+    rec["stages"][0]["bits"] = "oops"
+    bad.write_text("\n".join([lines[0], json.dumps(rec)]) + "\n")
+    res = validate_trace(str(bad))
+    assert any("bits" in e for e in res["errors"])
+    assert any("totals" in e for e in res["errors"])
+    # and a trace without a meta head is rejected
+    nometa = tmp_path / "nometa.jsonl"
+    nometa.write_text(round_line + "\n")
+    assert any("meta" in e for e in validate_trace(str(nometa))["errors"])
+
+
+def test_report_cli(trace_file, tmp_path, capsys):
+    assert report_main(["validate", trace_file]) == 0
+    assert report_main(["summary", trace_file]) == 0
+    txt = capsys.readouterr().out
+    assert "bit-identical" in txt and "cl_sia" in txt
+    assert report_main(["summary", trace_file, "--json"]) == 0
+    summary = json.loads(capsys.readouterr().out)
+    assert summary["closed_form"]["matches"] == 5
+    assert summary["rounds"] == 5
+    assert report_main(["diff", trace_file, trace_file]) == 0
+    assert "identical" in capsys.readouterr().out
+    bad = tmp_path / "bad.jsonl"
+    bad.write_text('{"schema": "nope/9", "kind": "mystery"}\n')
+    assert report_main(["validate", str(bad)]) == 1
+
+
+def test_chrome_export(trace_file, tmp_path):
+    out = export_chrome_trace(trace_file, str(tmp_path / "c.json"))
+    doc = json.load(open(out))
+    hops = [e for e in doc["traceEvents"] if e.get("cat") == "hop"]
+    spans = [e for e in doc["traceEvents"] if e.get("cat") == "span"]
+    assert len(hops) == 5 * K            # every hop of every round
+    assert spans                          # simulator flush spans
+    assert all(e["dur"] > 0 for e in hops)
+    # rounds are laid head-to-tail: starts strictly increase per round
+    starts = sorted({e["args"]["round"]: e["ts"] for e in hops}.items())
+    assert all(a[1] < b[1] for a, b in zip(starts, starts[1:]))
+
+
+def test_plan_meta_roundtrip(fed):
+    from repro.agg import compile_plan
+    plan = compile_plan(K)
+    meta = plan_meta(plan)
+    assert meta["type"] == "flat" and len(meta["stages"]) == 1
+    st = meta["stages"][0]
+    assert len(st["parent"]) == K
+    assert sum(1 for p in st["parent"] if p < 0) == 1      # one PS uplink
+    assert subtree_sizes_from_parent(st["parent"]).max() == K
+
+
+def test_record_train_metrics_adapter(tmp_path):
+    path = tmp_path / "train.jsonl"
+    with TraceCollector(str(path), d=PC.d, num_clients=4) as col:
+        for step in range(3):
+            col.record_train_metrics(step, {
+                "agg_bits": 1234.0, "agg_nnz": 77.0, "agg_err_sq": 0.5,
+                "loss": 2.0 - step * 0.1, "ef_mass": 9.0,
+                "ef_dead_mass": 0.0})
+    assert validate_trace(str(path))["errors"] == []
+    recs = _rounds(path)
+    assert [r["totals"]["bits"] for r in recs] == [1234.0] * 3
+    assert recs[-1]["loss"] == pytest.approx(1.8)
