@@ -262,6 +262,42 @@ def bench_nested(k_pod, k_data, d, q, reps):
     return out
 
 
+def bench_scenario(name: str):
+    """Run a fault-injection preset through the simulator and record the
+    realized per-round §V bits (the curve a relay-cascade / link-flap /
+    degradation scenario actually produces), plus wall-clock per round.
+
+    The whole scenario runs inside one jit specialization (asserted), so
+    the per-round wall time is an honest steady-state number — the trace
+    is written to a temp file and validated like the CI smoke gate.
+    """
+    from repro.scenario import preset
+    from repro.scenario.run import run_scenario
+
+    spec = preset(name)
+    trace = os.path.join(tempfile.gettempdir(),
+                         f"bench_scenario_{name}.jsonl")
+    t0 = time.perf_counter()
+    curves = run_scenario(spec, backend="host", out=trace)
+    wall = time.perf_counter() - t0
+    assert curves["_retraces"] == 1, curves["_retraces"]
+    from repro.obs import validate_trace
+    assert validate_trace(trace)["errors"] == []
+    compiled = curves["_scenario"]
+    return {
+        "preset": name, "rounds": spec.rounds,
+        "clients": spec.num_clients,
+        "distinct_plans": len(compiled.schedule.plans),
+        "injected_events": len(compiled.events),
+        "retraces": curves["_retraces"],
+        "round_us": round(wall / spec.rounds * 1e6, 1),
+        "bits_per_round": [round(b, 1) for b in curves["bits"]],
+        "bits_total": round(float(sum(curves["bits"])), 1),
+        "loss_first": round(float(curves["loss"][0]), 6),
+        "loss_last": round(float(curves["loss"][-1]), 6),
+    }
+
+
 def smoke_fused_interpret(k, d, q):
     """Run one fused (Pallas-interpret) round per algorithm and check it
     against the unfused oracle — keeps the kernel path exercised by CI on
@@ -304,6 +340,10 @@ def main(argv=None) -> dict:
                     help="add the pod×data staged round (2 pods × 4 ranks "
                          "on the 8 fake devices): per-stage §V bits and "
                          "the DCI-wire reduction vs the flat ring")
+    ap.add_argument("--scenario", default=None, metavar="PRESET",
+                    help="also run a repro.scenario preset (e.g. "
+                         "relay-cascade) through the simulator and record "
+                         "its realized per-round SS V bits")
     ap.add_argument("--out", default=None,
                     help="output path (default: repo-root "
                          "BENCH_agg_round.json; temp file under --smoke)")
@@ -360,6 +400,9 @@ def main(argv=None) -> dict:
     if args.nested:
         with timer.phase("nested_round", track="bench"):
             result["nested_round"] = bench_nested(2, 4, d, q, args.reps)
+    if args.scenario:
+        with timer.phase("scenario_round", track="bench"):
+            result["scenario_round"] = bench_scenario(args.scenario)
     result["meta"]["phases_s"] = {name: round(secs, 4) for name, secs
                                   in timer.totals().items()}
     if args.trace:

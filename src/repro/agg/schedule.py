@@ -47,10 +47,16 @@ class TopologySchedule:
     plans: tuple                  # tuple[AggPlan, ...], one shape
     round_index: tuple            # per-round index into ``plans``
     cyclic: bool = True
+    # optional raw topologies aligned with ``plans`` (AggTree / NestedTopology
+    # / None) — the link model :meth:`raw_at` hands the trace collector for
+    # crit-path timelines; () when the constructor had nothing to keep
+    raws: tuple = ()
 
     def __post_init__(self):
         if not self.plans:
             raise ValueError("empty schedule")
+        if self.raws and len(self.raws) != len(self.plans):
+            raise ValueError("raws must align with plans")
         shape = self.plans[0].shape
         k = self.plans[0].num_clients
         budgeted = self.plans[0].q_budget is not None
@@ -81,10 +87,19 @@ class TopologySchedule:
     def __len__(self) -> int:
         return len(self.round_index)
 
-    def plan_at(self, r: int) -> AggPlan:
+    def _index_at(self, r: int) -> int:
         n = len(self.round_index)
         j = r % n if self.cyclic else min(r, n - 1)
-        return self.plans[self.round_index[j]]
+        return self.round_index[j]
+
+    def plan_at(self, r: int) -> AggPlan:
+        return self.plans[self._index_at(r)]
+
+    def raw_at(self, r: int):
+        """Round r's raw topology (an :class:`~repro.topo.tree.AggTree`
+        carrying the link model, or a ``NestedTopology``), if the
+        constructor kept it; None otherwise."""
+        return self.raws[self._index_at(r)] if self.raws else None
 
     # -- constructors -------------------------------------------------------
 
@@ -92,31 +107,42 @@ class TopologySchedule:
     def from_topologies(cls, topologies: Sequence, *,
                         num_clients: Optional[int] = None,
                         q_budgets: Optional[Sequence] = None,
+                        round_index: Optional[Sequence] = None,
                         cyclic: bool = True) -> "TopologySchedule":
         """One plan per topology (graph, tree, chain order, int K — or a
         nested topology: a :class:`~repro.agg.nested.NestedPlan`, a routed
         ``NestedTopology``, or a stage spec already compiled), padded to
         the common (per-stage) shape. Flat and nested topologies cannot
-        mix in one schedule (their round signatures differ)."""
+        mix in one schedule (their round signatures differ). ``round_index``
+        maps rounds onto the topology list (default: one round each) — the
+        scenario compiler's store-each-route-once timeline."""
         from repro.agg.nested import NestedPlan, compile_nested
+        from repro.agg.plan import as_tree
 
         if q_budgets is None:
             q_budgets = [None] * len(topologies)
 
         def build(t, qb):
             if isinstance(t, NestedPlan) or hasattr(t, "nested_stages"):
+                raw = t if hasattr(t, "nested_stages") else None
                 return compile_nested(t, num_clients=num_clients,
-                                      q_budget=qb)
-            return compile_plan(t, num_clients=num_clients, q_budget=qb)
+                                      q_budget=qb), raw
+            return (compile_plan(t, num_clients=num_clients, q_budget=qb),
+                    as_tree(t, num_clients))
 
-        plans = [build(t, qb) for t, qb in zip(topologies, q_budgets)]
+        built = [build(t, qb) for t, qb in zip(topologies, q_budgets)]
+        plans = [p for p, _ in built]
+        raws = tuple(raw for _, raw in built)
         nested = [isinstance(p, NestedPlan) for p in plans]
         if any(nested) and not all(nested):
             raise ValueError("cannot mix flat and nested topologies in one "
                              "schedule")
         shape = common_shape(plans)
         return cls(plans=tuple(p.pad(shape) for p in plans),
-                   round_index=tuple(range(len(plans))), cyclic=cyclic)
+                   round_index=(tuple(range(len(plans)))
+                                if round_index is None
+                                else tuple(int(i) for i in round_index)),
+                   cyclic=cyclic, raws=raws)
 
     @classmethod
     def from_link_events(cls, graph: ConstellationGraph, events: dict, *,
@@ -131,16 +157,12 @@ class TopologySchedule:
         subtree, and clients a partition strands become non-participating
         stubs (``plan.alive`` zeros them).
         """
-        from repro.topo.routing import shortest_path_tree, widest_path_tree
-
-        def route(g):
-            if routing == "widest":
-                return widest_path_tree(g)
-            return shortest_path_tree(g, metric=routing)
+        from repro.topo.routing import route_tree
 
         down: set = set()
         compiled: dict = {}
         plans: list = []
+        raws: list = []
         round_index = []
         for r in range(rounds):
             if r in events:
@@ -153,8 +175,11 @@ class TopologySchedule:
             if key not in compiled:
                 g = graph.without_links(down) if down else graph
                 compiled[key] = len(plans)
-                plans.append(compile_plan(route(g)))
+                tree = route_tree(g, routing)
+                raws.append(tree)
+                plans.append(compile_plan(tree))
             round_index.append(compiled[key])
         shape = common_shape(plans)
         return cls(plans=tuple(p.pad(shape) for p in plans),
-                   round_index=tuple(round_index), cyclic=cyclic)
+                   round_index=tuple(round_index), cyclic=cyclic,
+                   raws=tuple(raws))

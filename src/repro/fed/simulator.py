@@ -329,7 +329,7 @@ class Simulator:
             failure_schedule: Optional[FailureSchedule] = None,
             order_fn: Optional[Callable] = None,
             topology_schedule: Optional[TopologySchedule] = None,
-            collector=None, flush_every: int = 32):
+            scenario=None, collector=None, flush_every: int = 32):
         """→ dict of curves (accuracy, loss, bits/round).
 
         Per-round topology sources (mutually exclusive):
@@ -342,7 +342,14 @@ class Simulator:
           chain visiting orders, compiled and cached per distinct order;
         * ``topology_schedule``: a pre-padded
           :class:`~repro.agg.TopologySchedule` — graph-per-round or link
-          up/down events, one jit specialization for the whole schedule.
+          up/down events, one jit specialization for the whole schedule;
+        * ``scenario``: a :class:`repro.scenario.Scenario` (compiled here)
+          or a pre-compiled :class:`repro.scenario.CompiledScenario` — its
+          schedule and realized participation drive every round, the
+          simulator seed is pinned to the spec's ``seed``, and the spec
+          dict + realized event stream are embedded in the trace (meta
+          ``scenario_spec`` + ``track="scenario"`` spans), so the run is
+          bit-reproducible from the spec *or* from its own trace.
 
         ``collector`` (a :class:`repro.obs.TraceCollector`) records every
         round to a JSONL trace; attaching one never changes the jitted
@@ -350,6 +357,24 @@ class Simulator:
         ``device_get`` every ``flush_every`` rounds (plus once at the
         end), so the device backend is not forced to sync per round.
         """
+        compiled = None
+        if scenario is not None:
+            if (participate_fn is not None or failure_schedule is not None
+                    or order_fn is not None or topology_schedule is not None
+                    or self.tree_topology is not None
+                    or self._nested is not None):
+                raise ValueError("a scenario carries its own topology and "
+                                 "participation — pass it alone")
+            from repro.scenario import CompiledScenario, compile_scenario
+            compiled = (scenario if isinstance(scenario, CompiledScenario)
+                        else compile_scenario(scenario, cfg=self.agg))
+            if compiled.num_clients != self.k:
+                raise ValueError(f"scenario has {compiled.num_clients} "
+                                 f"clients, data has {self.k}")
+            # replay determinism: the model/data stream is pinned by the
+            # spec, not the call site
+            seed = compiled.spec.seed
+            topology_schedule = compiled.schedule
         state = self.init(seed)
         topo = self.tree_topology
         if failure_schedule is not None and topo is None:
@@ -381,7 +406,9 @@ class Simulator:
             if self._nested is not None:
                 return self._nested, None
             if topology_schedule is not None:
-                return topology_schedule.plan_at(r), None
+                raw = topology_schedule.raw_at(r)
+                return (topology_schedule.plan_at(r),
+                        raw if hasattr(raw, "uplink_bw_bps") else None)
             if topo is not None:
                 dead = (tuple(failure_schedule.dead_at(r))
                         if failure_schedule is not None else ())
@@ -395,13 +422,29 @@ class Simulator:
             return cache.get(("chain",), lambda: self.k), None
 
         if collector is not None:
+            extra = {}
+            if compiled is not None:
+                # the full spec rides in the trace meta: a recorded trace is
+                # sufficient to re-run its scenario (scenario_from_trace)
+                extra = {"scenario": compiled.spec.name,
+                         "scenario_spec": compiled.spec.to_dict()}
             collector.configure(
                 cfg=self.agg, d=self.d, num_clients=self.k,
                 backend=self.backend,
-                topology=("nested" if self._nested is not None
+                topology=("scenario" if compiled is not None
+                          else "nested" if self._nested is not None
                           else "schedule" if topology_schedule is not None
                           else "tree" if topo is not None
-                          else "order" if order_fn is not None else "chain"))
+                          else "order" if order_fn is not None else "chain"),
+                **extra)
+            if compiled is not None:
+                # realized event stream → span records on the scenario
+                # track (t0_s/dur_s are in *rounds*, not seconds)
+                for ev in compiled.events:
+                    collector.record_span(
+                        ev["name"], float(ev["round"]), float(ev["rounds"]),
+                        track="scenario",
+                        args={"kind": ev["kind"], **(ev.get("args") or {})})
 
         timer = PhaseTimer()
         buf = RoundBuffer()
@@ -439,7 +482,9 @@ class Simulator:
             with timer.phase("plan"):
                 plan, tree = plan_for(r, state)
                 part = None
-                if participate_fn is not None:
+                if compiled is not None:
+                    part = jnp.asarray(compiled.participate_at(r))
+                elif participate_fn is not None:
                     part = participate_fn(r, state)
             # stranded/dead clients are masked inside execute via plan.alive
             with timer.phase("dispatch"):

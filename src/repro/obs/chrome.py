@@ -11,7 +11,12 @@ format (https://ui.perfetto.dev loads it directly, as does
   laid head-to-tail separated by a small gap so the per-level wavefront
   structure of the ``(L, W)`` schedule is visible;
 * every **span** record becomes an "X" event on a host wall-clock process
-  (one thread per ``track`` name) — the benchmark/simulator phase hooks.
+  (one thread per ``track`` name) — the benchmark/simulator phase hooks;
+* ``track="scenario"`` spans are special: their ``t0_s``/``dur_s`` are
+  *round* coordinates (the scenario engine's injected-fault windows), so
+  they render on the simulated axis as an "injected faults" process whose
+  events stretch across the rounds they cover — crash/flap/degradation
+  windows line up under the hop wavefronts they perturb.
 
 Units: the simulated axis is scaled so 1 second → 1 ms of trace time when
 a link model was recorded (critical paths are tens of ms), and 1 unit hop
@@ -28,6 +33,10 @@ from repro.obs.record import iter_trace
 
 #: pid of the host wall-clock process; stage s uses pid = s + 1.
 HOST_PID = 0
+
+#: pid of the injected-fault process (scenario event windows, simulated
+#: axis). Large so it sorts after any realistic stage count.
+FAULT_PID = 99
 
 #: simulated seconds → trace µs (1 s → 1 ms of trace time)
 SIM_SCALE_US = 1e3
@@ -61,10 +70,17 @@ def chrome_events(records: Iterable[dict], *, gap_frac: float = 0.1) -> list:
             events.append(_thread_meta(pid, tid, name))
 
     cursor = 0.0          # simulated-axis cursor (seconds/units)
+    scenario_spans: list = []
+    round_windows: dict = {}     # round → (sim start, sim end)
     for rec in records:
         kind = rec.get("kind")
         if kind == "span":
             track = rec.get("track", "host")
+            if track == "scenario":
+                # round-coordinate windows; rendered on the simulated axis
+                # once the rounds they span have been laid out
+                scenario_spans.append(rec)
+                continue
             tid = tracks.setdefault(track, len(tracks))
             ensure_proc(HOST_PID, "host wall-clock")
             ensure_thread(HOST_PID, tid, track)
@@ -111,7 +127,34 @@ def chrome_events(records: Iterable[dict], *, gap_frac: float = 0.1) -> list:
                                         "bits"),
                                     "retraces": rec.get("retraces")}})
             dur = max(t_end - cursor, 1e-9)
+            round_windows[rnd] = (cursor, t_end if t_end > cursor
+                                  else cursor + dur)
             cursor = t_end + gap_frac * dur
+
+    if scenario_spans and round_windows:
+        ensure_proc(FAULT_PID, "injected faults")
+        kinds: dict = {}
+        last_round = max(round_windows)
+        for rec in scenario_spans:
+            r0 = int(rec["t0_s"])
+            r1 = min(r0 + max(int(rec["dur_s"]), 1) - 1, last_round)
+            covered = [round_windows[r] for r in range(r0, r1 + 1)
+                       if r in round_windows]
+            if not covered:
+                continue
+            t_start = covered[0][0]
+            t_stop = max(b for _, b in covered)
+            fkind = (rec.get("args") or {}).get("kind", "event")
+            tid = kinds.setdefault(fkind, len(kinds))
+            ensure_thread(FAULT_PID, tid, fkind)
+            events.append({
+                "ph": "X", "cat": "fault", "name": rec["name"],
+                "pid": FAULT_PID, "tid": tid,
+                "ts": t_start * SIM_SCALE_US,
+                "dur": max((t_stop - t_start) * SIM_SCALE_US, 0.01),
+                "args": {**(rec.get("args") or {}),
+                         "round": r0, "rounds": int(rec["dur_s"])},
+            })
     return events
 
 

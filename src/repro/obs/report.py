@@ -138,7 +138,10 @@ def summarize(path: str) -> dict:
         out["num_clients"] = meta.get("num_clients")
         out["context"] = {k: v for k, v in meta.items()
                           if k not in ("schema", "kind", "cfg", "d",
-                                       "num_clients", "ts_unix")}
+                                       "num_clients", "ts_unix",
+                                       "scenario_spec")}
+        if meta.get("scenario_spec") is not None:
+            out["scenario_spec"] = meta["scenario_spec"]
     if rounds:
         bits = [r["totals"]["bits"] for r in rounds]
         out["bits"] = {"total": float(sum(bits)),
@@ -180,12 +183,20 @@ def summarize(path: str) -> dict:
             for name, secs in (r.get("phases") or {}).items():
                 phases[name] = phases.get(name, 0.0) + secs
         for sp in spans:
+            if sp.get("track") == "scenario":
+                continue     # round-coordinate fault windows, not seconds
             phases[sp["name"]] = phases.get(sp["name"], 0.0) + sp["dur_s"]
         if phases:
             out["phases_s"] = phases
         check = closed_form_check(meta, rounds)
         if check:
             out["closed_form"] = check
+    injected = [{"name": sp["name"],
+                 "kind": (sp.get("args") or {}).get("kind", "event"),
+                 "round": int(sp["t0_s"]), "rounds": int(sp["dur_s"])}
+                for sp in spans if sp.get("track") == "scenario"]
+    if injected:
+        out["injected"] = injected
     return out
 
 
@@ -240,6 +251,13 @@ def print_summary(out: dict) -> None:
     if retr:
         print(f"  jit traces: {retr['total']} "
               f"(events at rounds {retr['events_at_rounds']})")
+    injected = out.get("injected")
+    if injected:
+        print(f"  injected events: {len(injected)}")
+        for ev in injected:
+            span = (f"round {ev['round']}" if ev["rounds"] <= 1 else
+                    f"rounds {ev['round']}–{ev['round'] + ev['rounds'] - 1}")
+            print(f"    [{ev['kind']}] {ev['name']} ({span})")
     loss = out.get("loss")
     if loss:
         print(f"  loss: {loss['first']:.6g} → {loss['last']:.6g}")

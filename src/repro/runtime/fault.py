@@ -53,9 +53,17 @@ def deadline_mask(arrival_times: Array, deadline: float) -> Array:
     return (arrival_times <= deadline).astype(jnp.float32)
 
 
-def heal_chain(order: np.ndarray, dead: int) -> np.ndarray:
-    """Remove a dead relay from a chain order (numpy, host-side decision)."""
-    return np.asarray([o for o in order if o != dead], dtype=np.int32)
+def heal_chain(order: np.ndarray, dead) -> np.ndarray:
+    """Remove dead relay(s) from a chain order (numpy, host-side decision).
+
+    ``dead`` is a single node or any iterable of simultaneously dead nodes
+    (the scenario compiler's multi-node crash events); the single-node call
+    is bit-compatible with the historic signature. Relative order of the
+    survivors is preserved — the chain splices around the gap(s).
+    """
+    dead_set = {int(dead)} if np.isscalar(dead) else {int(d) for d in dead}
+    return np.asarray([o for o in order if int(o) not in dead_set],
+                      dtype=np.int32)
 
 
 def banked_mass(ef: Array) -> Array:

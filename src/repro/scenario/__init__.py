@@ -1,0 +1,44 @@
+"""Declarative fault-injection scenarios with deterministic replay.
+
+Real constellation FL (the on-board satellite setting of arXiv 2307.08346
+and the sparse-IA follow-up arXiv 2501.11385) is defined by orbital link
+churn, relay deaths, and straggler bursts. This package makes those
+failure modes *config files* instead of hand-written test functions:
+
+* :mod:`repro.scenario.spec` — the declarative scenario schema
+  (:class:`Scenario`: link-flap schedules, crash/recovery events,
+  straggler windows wrapping :class:`repro.runtime.fault.StragglerModel`,
+  bandwidth-degradation ramps, deadline windows) with a dict/JSON
+  round-trip, so a scenario travels as a file and rides inside every
+  emitted trace;
+* :mod:`repro.scenario.compile` — :func:`compile_scenario` lowers a spec +
+  base :class:`~repro.topo.graph.ConstellationGraph` onto the objects the
+  system already consumes: a padded
+  :class:`~repro.agg.schedule.TopologySchedule` (one jit specialization
+  for the whole scenario), per-round participation masks, and per-round
+  ``q_budget`` arrays — nothing inside jit changes;
+* :mod:`repro.scenario.presets` — the small preset library
+  (relay-cascade, orbital-eclipse link flaps, heterogeneous-uplink
+  degradation, straggler-storm);
+* :mod:`repro.scenario.run` — ``python -m repro.scenario.run spec.json``
+  executes a scenario through the :class:`~repro.fed.simulator.Simulator`
+  (host or device backend) and writes a validated ``repro.obs`` trace.
+
+Replay is deterministic by construction: every stochastic ingredient
+(straggler draws, latency samples) is seeded in the spec and realized at
+compile time, so the same spec — whether loaded from JSON or recovered
+from a previously emitted trace via :func:`spec.scenario_from_trace` —
+re-runs bit-exactly on ``backend="host"`` and ``backend="device"``.
+"""
+
+from repro.scenario.compile import CompiledScenario, compile_scenario
+from repro.scenario.presets import PRESETS, preset
+from repro.scenario.spec import (BandwidthRamp, Crash, DeadlineWindow,
+                                 LinkFlap, Scenario, StragglerWindow,
+                                 TopologySpec, scenario_from_trace)
+
+__all__ = [
+    "Scenario", "TopologySpec", "LinkFlap", "Crash", "StragglerWindow",
+    "BandwidthRamp", "DeadlineWindow", "scenario_from_trace",
+    "CompiledScenario", "compile_scenario", "PRESETS", "preset",
+]

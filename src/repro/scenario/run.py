@@ -1,0 +1,114 @@
+"""Scenario driver — ``python -m repro.scenario.run SPEC``.
+
+``SPEC`` is a preset name (:mod:`repro.scenario.presets`), a path to a
+scenario JSON file (:meth:`~repro.scenario.spec.Scenario.to_json`), or a
+path to a previously emitted ``repro.obs`` trace — in which case the spec
+embedded in the trace meta is replayed bit-exactly. The scenario is
+compiled once, run through the :class:`~repro.fed.simulator.Simulator`
+(``--backend host|device``), and written as a schema-validated JSONL trace
+whose meta carries the spec and whose ``track="scenario"`` spans carry the
+realized event stream. Exits nonzero if the trace fails validation or the
+run took more than one jit specialization.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+
+
+def load_spec(ref: str):
+    """Resolve a preset name / spec JSON path / trace path to a Scenario."""
+    from repro.scenario.presets import PRESETS, preset
+    from repro.scenario.spec import Scenario, scenario_from_trace
+    if ref in PRESETS:
+        return preset(ref)
+    if not os.path.exists(ref):
+        raise FileNotFoundError(f"{ref}: not a preset "
+                                f"({', '.join(sorted(PRESETS))}) and not a "
+                                f"file")
+    with open(ref) as f:
+        head = f.readline()
+    try:                    # a JSONL trace has a one-line meta record first
+        obj = json.loads(head)
+    except json.JSONDecodeError:
+        obj = None          # multi-line spec JSON
+    if isinstance(obj, dict) and obj.get("kind") == "meta":
+        return scenario_from_trace(ref)[0]
+    return Scenario.from_json(ref)
+
+
+def run_scenario(spec, *, backend: str = "host", out: str = "trace.jsonl",
+                 flush_every: int = 8) -> dict:
+    """Compile + run one scenario; → the simulator's curves dict plus the
+    compiled scenario and trace counter under ``_scenario``/``_retraces``."""
+    import jax
+
+    from repro.configs import PAPER
+    from repro.data.federated import partition_iid
+    from repro.data.synthetic import make_synthetic_mnist
+    from repro.fed.simulator import Simulator
+    from repro.obs import TraceCollector
+    from repro.scenario.compile import compile_scenario
+
+    k = spec.num_clients
+    pc = dataclasses.replace(PAPER, num_clients=k)
+    train = make_synthetic_mnist(jax.random.PRNGKey(0), k * 40)
+    fed = partition_iid(jax.random.PRNGKey(2), train, k)
+    sim = Simulator(pc, spec.agg_config(), fed, local_lr=pc.lr,
+                    backend=backend)
+    compiled = compile_scenario(spec, cfg=sim.agg)
+    with TraceCollector(out) as col:
+        curves = sim.run(spec.rounds, scenario=compiled, collector=col,
+                         flush_every=flush_every)
+    curves["_scenario"] = compiled
+    curves["_retraces"] = sim.trace_counter.count
+    return curves
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.scenario.run",
+                                 description=__doc__.split("\n")[0])
+    ap.add_argument("spec", help="preset name, scenario .json, or a "
+                                 "recorded trace to replay")
+    ap.add_argument("--out", default="scenario_trace.jsonl",
+                    help="output trace path")
+    ap.add_argument("--backend", default="host",
+                    choices=("host", "device"))
+    ap.add_argument("--flush-every", type=int, default=8)
+    args = ap.parse_args(argv)
+
+    spec = load_spec(args.spec)
+
+    import jax
+    if args.backend == "device" and jax.device_count() < spec.num_clients:
+        print(f"--backend device needs {spec.num_clients} devices, have "
+              f"{jax.device_count()} (set XLA_FLAGS="
+              f"--xla_force_host_platform_device_count="
+              f"{spec.num_clients})")
+        return 2
+
+    curves = run_scenario(spec, backend=args.backend, out=args.out)
+
+    from repro.obs import validate_trace
+    from repro.obs.report import print_summary, summarize
+    res = validate_trace(args.out)
+    errs = list(res.pop("errors"))
+    if curves["_retraces"] != 1:
+        errs.append(f"{curves['_retraces']} jit specializations (want 1)")
+    status = "OK" if not errs else "FAIL"
+    events = curves["_scenario"].events
+    print(f"[{status}] {spec.name}: {spec.rounds} rounds, "
+          f"{len(events)} injected events, final loss "
+          f"{curves['loss'][-1]:.6f} → {args.out} ({res})")
+    for e in errs[:10]:
+        print(f"    {e}")
+    print_summary(summarize(args.out))
+    return 0 if not errs else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -103,6 +103,32 @@ class ConstellationGraph:
                                   latency_s=self.latency_s[keep],
                                   ps=self.ps)
 
+    def with_bandwidth_scaled(self, factor: float,
+                              links: Iterable[tuple] = None
+                              ) -> "ConstellationGraph":
+        """Copy with link bandwidths multiplied by ``factor``.
+
+        ``links`` restricts the scaling to the given ``(u, v)`` pairs
+        (canonicalized; unknown pairs ignored); None scales every link.
+        This is the bandwidth-degradation primitive: rain fade or a
+        contended gateway shrinks capacity while the link stays up, so
+        routing (widest-path) and bandwidth-aware Top-Q budgets shift.
+        """
+        if factor <= 0:
+            raise ValueError("bandwidth factor must be positive")
+        bw = self.bandwidth_bps.copy()
+        if links is None:
+            bw *= factor
+        else:
+            sel = {(min(int(u), int(v)), max(int(u), int(v)))
+                   for u, v in links}
+            for i, (u, v) in enumerate(self.edges):
+                if (int(u), int(v)) in sel:
+                    bw[i] *= factor
+        return ConstellationGraph(num_nodes=self.num_nodes, edges=self.edges,
+                                  bandwidth_bps=bw, latency_s=self.latency_s,
+                                  ps=self.ps)
+
     def is_connected(self, exclude: Iterable[int] = ()) -> bool:
         dead = set(exclude)
         alive = [v for v in range(self.num_nodes) if v not in dead]

@@ -103,6 +103,46 @@ def widest_path_tree(graph: ConstellationGraph,
     return extract_tree(graph, parent, via)
 
 
+def route_tree(graph: ConstellationGraph, routing: str = "latency",
+               exclude: Iterable[int] = ()) -> AggTree:
+    """Route by policy name: ``latency``/``hops`` (shortest-path) or
+    ``widest`` (max-bottleneck-bandwidth). The string dispatch the schedule
+    and scenario compilers share."""
+    if routing == "widest":
+        return widest_path_tree(graph, exclude=exclude)
+    if routing in ("latency", "hops"):
+        return shortest_path_tree(graph, metric=routing, exclude=exclude)
+    raise ValueError(f"unknown routing {routing!r}")
+
+
+def healed_chain_tree(num_clients: int, dead: Iterable[int] = (),
+                      order: Optional[Sequence] = None) -> AggTree:
+    """The paper's chain with dead clients spliced out, as an
+    :class:`AggTree`.
+
+    ``order`` lists client indices PS-outward (default 0..K−1); ``dead``
+    clients are removed via :func:`repro.runtime.fault.heal_chain` and the
+    survivors chained in healed order (``order[0]`` adjacent to the PS).
+    The dead clients stay in the tree as unreachable stubs (parent = PS,
+    ``reachable`` False) so the [K]-shaped arrays keep their rows — the
+    plan's ``alive`` mask zeros them. This keeps multi-node crash healing
+    inside ``compile_plan``'s full-permutation contract.
+    """
+    from repro.runtime.fault import heal_chain
+    if order is None:
+        order = np.arange(num_clients, dtype=np.int32)
+    healed = heal_chain(np.asarray(order, np.int32), tuple(dead))
+    parent = np.full((num_clients,), PS, np.int64)
+    reach = np.zeros((num_clients,), bool)
+    prev = PS
+    for o in healed:
+        parent[int(o)] = prev
+        reach[int(o)] = True
+        prev = int(o)
+    return AggTree(parent=tuple(int(p) for p in parent),
+                   reachable=tuple(bool(r) for r in reach))
+
+
 def extract_tree(graph: ConstellationGraph, parent_of_node: dict,
                  via_edge: Optional[dict] = None) -> AggTree:
     """Relabel a {node: parent_node} map into client index space.

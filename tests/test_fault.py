@@ -65,6 +65,17 @@ def test_heal_chain():
     np.testing.assert_array_equal(healed, [0, 1, 2, 4, 5])
 
 
+def test_heal_chain_multi_node():
+    order = np.asarray([2, 0, 5, 1, 4, 3], np.int32)
+    # set form splices all dead nodes at once, preserving survivor order
+    np.testing.assert_array_equal(heal_chain(order, {0, 4}), [2, 5, 1, 3])
+    np.testing.assert_array_equal(heal_chain(order, [3]),
+                                  heal_chain(order, 3))
+    np.testing.assert_array_equal(heal_chain(order, ()), order)
+    # single-node call stays bit-compatible (dtype included)
+    assert heal_chain(order, 3).dtype == np.int32
+
+
 def test_sim_with_stragglers_still_converges():
     train = make_synthetic_mnist(jax.random.PRNGKey(0), 10 * 100)
     test = make_synthetic_mnist(jax.random.PRNGKey(1), 500)

@@ -1,0 +1,78 @@
+"""Property tests (hypothesis): ``StragglerModel.sample`` seed-stream
+determinism and ``prev``-correlation semantics — the scenario engine's
+deterministic replay rests on these."""
+
+import jax
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.runtime.fault import StragglerModel
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       rounds=st.integers(1, 6),
+       k=st.integers(1, 16),
+       p=st.floats(0.05, 0.95),
+       correlated=st.booleans(),
+       p_recover=st.floats(0.0, 1.0))
+def test_seed_stream_determinism(seed, rounds, k, p, correlated, p_recover):
+    """The fold_in(key, round) stream realizes the same masks on every
+    replay — bit-identical, prev threading included."""
+    sm = StragglerModel(p_straggle=p, correlated=correlated,
+                        p_recover=p_recover)
+    base = jax.random.PRNGKey(seed)
+
+    def realize():
+        out, prev = [], None
+        for r in range(rounds):
+            m = sm.sample(jax.random.fold_in(base, r), k, prev)
+            prev = m
+            out.append(np.asarray(m))
+        return out
+
+    a, b = realize(), realize()
+    for ma, mb in zip(a, b):
+        np.testing.assert_array_equal(ma, mb)
+        assert set(np.unique(ma)) <= {0.0, 1.0}
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       k=st.integers(1, 32),
+       p=st.floats(0.05, 0.95),
+       prev_bits=st.lists(st.booleans(), min_size=32, max_size=32))
+def test_prev_correlation_semantics(seed, k, p, prev_bits):
+    """correlated + p_recover=0: a prev-slow client stays slow; a
+    prev-fast client draws exactly the fresh (uncorrelated) mask; and the
+    correlated mask never resurrects clients the fresh draw slowed."""
+    key = jax.random.PRNGKey(seed)
+    prev = np.asarray(prev_bits[:k], np.float32)
+    fresh = np.asarray(
+        StragglerModel(p_straggle=p).sample(key, k), np.float32)
+    stuck = np.asarray(
+        StragglerModel(p_straggle=p, correlated=True, p_recover=0.0)
+        .sample(key, k, prev), np.float32)
+    np.testing.assert_array_equal(stuck[prev == 0], 0.0)
+    np.testing.assert_array_equal(stuck[prev == 1], fresh[prev == 1])
+    assert np.all(stuck <= fresh)
+    # p_recover=1: the correlation term vanishes entirely
+    free = np.asarray(
+        StragglerModel(p_straggle=p, correlated=True, p_recover=1.0)
+        .sample(key, k, prev), np.float32)
+    np.testing.assert_array_equal(free, fresh)
+
+
+def test_prev_none_matches_uncorrelated():
+    key = jax.random.PRNGKey(3)
+    a = StragglerModel(p_straggle=0.4).sample(key, 64)
+    b = StragglerModel(p_straggle=0.4, correlated=True).sample(key, 64)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_p_zero_all_participate():
+    m = StragglerModel(p_straggle=0.0).sample(jax.random.PRNGKey(0), 9)
+    np.testing.assert_array_equal(np.asarray(m), np.ones(9, np.float32))

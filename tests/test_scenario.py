@@ -1,0 +1,274 @@
+"""Scenario engine: spec round-trip, compiler lowering, deterministic
+replay (run-twice + replay-from-trace bit-identical, one jit
+specialization), and the injected-event telemetry path."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.scenario import (BandwidthRamp, CompiledScenario, Crash,
+                            DeadlineWindow, LinkFlap, PRESETS, Scenario,
+                            StragglerWindow, TopologySpec, compile_scenario,
+                            preset, scenario_from_trace)
+
+
+# ---------------------------------------------------------------------------
+# Spec schema
+# ---------------------------------------------------------------------------
+
+def test_spec_json_roundtrip_presets():
+    for name in PRESETS:
+        s = preset(name)
+        s2 = Scenario.from_dict(json.loads(json.dumps(s.to_dict())))
+        assert s2 == s
+
+
+def test_spec_roundtrip_all_fault_types(tmp_path):
+    s = Scenario(
+        name="everything", rounds=12, seed=5,
+        topology=TopologySpec(kind="grid", clients=8,
+                              params={"rows": 2, "cols": 4},
+                              routing="widest"),
+        agg={"kind": "cl_sia", "q": 10},
+        bandwidth_aware=True,
+        link_flaps=(LinkFlap(link=(2, 3), start=1, down=2, period=6),),
+        crashes=(Crash(node=1, round=3, recover=7),),
+        stragglers=(StragglerWindow(p_straggle=0.3, start=2, end=9,
+                                    correlated=True, seed=4),),
+        ramps=(BandwidthRamp(start=2, end=8, floor=0.25, recover=10,
+                             links=((0, 1),)),),
+        deadlines=(DeadlineWindow(deadline_s=1.5, start=4, end=8, seed=2),))
+    path = tmp_path / "spec.json"
+    s.to_json(str(path))
+    s2 = Scenario.from_json(str(path))
+    assert s2 == s
+    assert s2.agg_config().q == 10
+
+
+def test_spec_validation():
+    chain = TopologySpec(kind="chain", clients=4)
+    with pytest.raises(ValueError, match="link"):
+        Scenario(name="x", rounds=4, topology=chain,
+                 link_flaps=(LinkFlap(link=(1, 2)),))
+    with pytest.raises(ValueError, match="routing"):
+        TopologySpec(kind="grid", routing="fastest")
+    with pytest.raises(ValueError, match="recover"):
+        Crash(node=0, round=5, recover=5)
+    with pytest.raises(ValueError, match="window"):
+        BandwidthRamp(start=4, end=4)
+    with pytest.raises(ValueError, match="period"):
+        LinkFlap(link=(0, 1), down=4, period=2)
+    with pytest.raises(ValueError, match="preset"):
+        preset("no-such-preset")
+
+
+def test_fault_timelines():
+    fl = LinkFlap(link=(3, 1), start=2, down=2, period=5)
+    assert fl.link == (1, 3)                    # canonicalized
+    downs = [r for r in range(12) if fl.is_down(r)]
+    assert downs == [2, 3, 7, 8]
+    one = LinkFlap(link=(0, 1), start=4, down=3)
+    assert [r for r in range(10) if one.is_down(r)] == [4, 5, 6]
+
+    rp = BandwidthRamp(start=2, end=6, floor=0.2, recover=8)
+    assert rp.factor(0) == 1.0 and rp.factor(2) == 1.0
+    assert rp.factor(4) == 0.6                  # halfway down the ramp
+    assert rp.factor(6) == 0.2 and rp.factor(7) == 0.2
+    assert rp.factor(8) == 1.0                  # snapped back
+
+    cr = Crash(node=2, round=3, recover=6)
+    assert [r for r in range(8) if cr.is_dead(r)] == [3, 4, 5]
+
+
+# ---------------------------------------------------------------------------
+# Compiler
+# ---------------------------------------------------------------------------
+
+def test_compile_relay_cascade_lowering():
+    c = compile_scenario(preset("relay-cascade"))
+    s = c.spec
+    assert isinstance(c, CompiledScenario)
+    assert c.rounds == s.rounds and c.num_clients == 8
+    # distinct dead-sets compile once; every plan shares one (L, W)
+    dead_sets = {frozenset(cr.node for cr in s.crashes if cr.is_dead(r))
+                 for r in range(s.rounds)}
+    assert len(c.schedule.plans) == len(dead_sets) < s.rounds
+    assert len({p.shape for p in c.schedule.plans}) == 1
+    # crashed clients: zero participation + dead plan row
+    for r in range(s.rounds):
+        plan = c.schedule.plan_at(r)
+        for cr in s.crashes:
+            if cr.is_dead(r):
+                assert c.participation[r, cr.node] == 0.0
+                assert plan.alive[cr.node] == 0.0
+            else:
+                assert plan.alive[cr.node] == 1.0
+    # realized event windows
+    kinds = sorted(ev["kind"] for ev in c.events)
+    assert kinds == ["crash", "crash", "crash"]
+    by_node = {ev["args"]["node"]: ev for ev in c.events}
+    assert by_node[2]["round"] == 8 and by_node[2]["rounds"] == 8
+    assert by_node[5]["rounds"] == s.rounds - 4    # clipped at the horizon
+
+
+def test_compile_flaps_share_plans_cyclically():
+    c = compile_scenario(preset("orbital-eclipse"))
+    # periodic flaps revisit configurations → far fewer plans than rounds
+    assert len(c.schedule.plans) < c.rounds
+    assert len(c.schedule.round_index) == c.rounds
+    assert all(p.q_budget is None for p in c.schedule.plans)
+    assert len({p.shape for p in c.schedule.plans}) == 1
+
+
+def test_compile_bandwidth_aware_budgets_follow_ramp():
+    s = preset("uplink-degradation")
+    c = compile_scenario(s)
+    # all-or-none q_budget across the schedule (one pytree structure)
+    assert all(p.q_budget is not None for p in c.schedule.plans)
+    before = c.schedule.plan_at(0).q_budget
+    floored = c.schedule.plan_at(13).q_budget      # both ramps at floor
+    assert int(floored.sum()) < int(before.sum())
+    after = c.schedule.plan_at(17).q_budget        # ground link recovered
+    assert int(after.sum()) > int(floored.sum())
+
+
+def test_compile_is_deterministic():
+    a = compile_scenario(preset("straggler-storm"))
+    b = compile_scenario(preset("straggler-storm"))
+    np.testing.assert_array_equal(a.participation, b.participation)
+    assert a.events == b.events
+    # straggling confined to the declared windows
+    s = a.spec
+    active = [any(w.active(r) for w in s.stragglers)
+              or any(d.active(r) for d in s.deadlines)
+              for r in range(s.rounds)]
+    for r in range(s.rounds):
+        if not active[r]:
+            np.testing.assert_array_equal(a.participation[r], 1.0)
+    assert a.participation.min() == 0.0            # the storm actually hits
+
+
+def test_compile_rejects_bad_combinations():
+    with pytest.raises(ValueError, match="bandwidth_aware"):
+        compile_scenario(Scenario(
+            name="x", rounds=2, bandwidth_aware=True,
+            topology=TopologySpec(kind="chain", clients=4)))
+    with pytest.raises(ValueError, match="widest"):
+        compile_scenario(Scenario(
+            name="x", rounds=2,
+            topology=TopologySpec(kind="grid", clients=8,
+                                  params={"rows": 2, "cols": 4},
+                                  routing="widest", clusters=2)))
+
+
+# ---------------------------------------------------------------------------
+# Deterministic replay through the simulator
+# ---------------------------------------------------------------------------
+
+def _small_spec():
+    return Scenario(
+        name="small-cascade", rounds=8, seed=1,
+        topology=TopologySpec(kind="chain", clients=5),
+        crashes=(Crash(node=2, round=2, recover=6),),
+        stragglers=(StragglerWindow(p_straggle=0.35, start=3, end=7,
+                                    correlated=True, seed=9),))
+
+
+def test_run_twice_and_replay_from_trace_bit_identical(tmp_path):
+    from repro.scenario.run import run_scenario
+
+    t1, t2, t3 = (str(tmp_path / f"t{i}.jsonl") for i in (1, 2, 3))
+    a = run_scenario(_small_spec(), out=t1)
+    b = run_scenario(_small_spec(), out=t2)
+    assert a["_retraces"] == 1 and b["_retraces"] == 1
+    assert a["loss"] == b["loss"]                  # bit-identical, not close
+    assert a["bits"] == b["bits"]
+
+    # a recorded trace alone reconstructs and re-runs the scenario
+    spec2, meta = scenario_from_trace(t1)
+    assert spec2 == _small_spec()
+    assert meta["topology"] == "scenario"
+    c = run_scenario(spec2, out=t3)
+    assert c["loss"] == a["loss"] and c["bits"] == a["bits"]
+
+    from repro.obs import validate_trace
+    assert validate_trace(t1)["errors"] == []
+
+
+def test_simulator_scenario_exclusivity():
+    import dataclasses
+
+    import jax
+
+    from repro.configs import PAPER
+    from repro.core.algorithms import AggConfig, AggKind
+    from repro.data.federated import partition_iid
+    from repro.data.synthetic import make_synthetic_mnist
+    from repro.fed.simulator import Simulator
+
+    k = 5
+    pc = dataclasses.replace(PAPER, num_clients=k)
+    train = make_synthetic_mnist(jax.random.PRNGKey(0), k * 20)
+    fed = partition_iid(jax.random.PRNGKey(2), train, k)
+    sim = Simulator(pc, AggConfig(kind=AggKind.CL_SIA, q=pc.q), fed)
+    spec = _small_spec()
+    with pytest.raises(ValueError, match="alone"):
+        sim.run(2, scenario=spec, participate_fn=lambda r, s: None)
+    wrong_k = Scenario(name="x", rounds=2,
+                       topology=TopologySpec(kind="chain", clients=3))
+    with pytest.raises(ValueError, match="clients"):
+        sim.run(2, scenario=wrong_k)
+
+
+# ---------------------------------------------------------------------------
+# Injected-event telemetry
+# ---------------------------------------------------------------------------
+
+def test_injected_events_in_trace_report_and_chrome(tmp_path):
+    from repro.obs import iter_trace
+    from repro.obs.chrome import FAULT_PID, export_chrome_trace
+    from repro.obs.report import summarize
+    from repro.scenario.run import run_scenario
+
+    path = str(tmp_path / "trace.jsonl")
+    run_scenario(_small_spec(), out=path)
+
+    spans = [r for r in iter_trace(path)
+             if r["kind"] == "span" and r["track"] == "scenario"]
+    assert len(spans) == 2                      # crash window + stragglers
+    meta = next(r for r in iter_trace(path) if r["kind"] == "meta")
+    assert meta["scenario_spec"]["name"] == "small-cascade"
+
+    out = summarize(path)
+    assert {ev["kind"] for ev in out["injected"]} == {"crash", "stragglers"}
+    crash = next(ev for ev in out["injected"] if ev["kind"] == "crash")
+    assert crash["round"] == 2 and crash["rounds"] == 4
+    # fault windows are round coordinates — they must not pollute the
+    # wall-clock phase totals
+    assert "crash client 2" not in out.get("phases_s", {})
+    assert "scenario_spec" not in out["context"]
+
+    chrome = export_chrome_trace(path)
+    events = json.load(open(chrome))["traceEvents"]
+    faults = [e for e in events if e.get("cat") == "fault"]
+    assert len(faults) == 2
+    assert all(e["pid"] == FAULT_PID for e in faults)
+    hop_ts = [e["ts"] for e in events if e.get("cat") == "hop"]
+    for e in faults:                            # inside the simulated axis
+        assert min(hop_ts) <= e["ts"] <= max(hop_ts)
+
+
+def test_cli_run_and_replay(tmp_path):
+    from repro.obs.report import diff
+    from repro.scenario.run import main
+
+    spec_path = str(tmp_path / "spec.json")
+    _small_spec().to_json(spec_path)
+    t1 = str(tmp_path / "a.jsonl")
+    t2 = str(tmp_path / "b.jsonl")
+    assert main([spec_path, "--out", t1]) == 0
+    assert main([t1, "--out", t2]) == 0         # replay straight from trace
+    d = diff(t1, t2)
+    assert d["rounds_bits_differ"] == []
+    assert d["bits_total_delta"] == 0.0

@@ -1,0 +1,44 @@
+"""Scenario replay on the device backend: run-twice bit-identical, §V hop
+bits bit-identical to host, one jit specialization — 8 fake devices via
+subprocess (see conftest)."""
+
+SCENARIO_DEVICE = r"""
+import os, tempfile
+from repro.obs import iter_trace, validate_trace
+from repro.scenario import preset
+from repro.scenario.run import run_scenario
+
+tmp = tempfile.mkdtemp()
+
+def rounds_of(path):
+    return [r for r in iter_trace(path) if r["kind"] == "round"]
+
+for name in ("relay-cascade", "straggler-storm"):
+    paths = {key: os.path.join(tmp, f"{name}_{key}.jsonl")
+             for key in ("host", "dev1", "dev2")}
+    host = run_scenario(preset(name), backend="host", out=paths["host"])
+    dev1 = run_scenario(preset(name), backend="device", out=paths["dev1"])
+    dev2 = run_scenario(preset(name), backend="device", out=paths["dev2"])
+    assert host["_retraces"] == 1 and dev1["_retraces"] == 1, (
+        host["_retraces"], dev1["_retraces"])
+
+    # device replay is bit-deterministic: loss curves AND traces identical
+    assert dev1["loss"] == dev2["loss"], name
+    assert dev1["bits"] == dev2["bits"], name
+
+    # round-level SS V hop bits are bit-identical across backends
+    for a, b in zip(rounds_of(paths["host"]), rounds_of(paths["dev1"])):
+        for sa, sb in zip(a["stages"], b["stages"]):
+            assert sa["bits"] == sb["bits"], (name, a["round"])
+            assert sa["nnz"] == sb["nnz"], (name, a["round"])
+        assert a["participation"] == b["participation"], (name, a["round"])
+
+    for p in paths.values():
+        assert validate_trace(p)["errors"] == []
+    print(f"{name}: device scenario bit-identical (replay + vs host)")
+print("PASS")
+"""
+
+
+def test_scenario_device_bit_identical(multidev):
+    multidev(SCENARIO_DEVICE, devices=8)
