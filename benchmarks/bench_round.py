@@ -33,7 +33,9 @@ write + W-fold read before).
 
 Run ``PYTHONPATH=src python benchmarks/bench_round.py`` (add ``--smoke``
 for the CI-sized instant version; ``--dim/--clients/--reps`` to scale;
-``--nested`` for the pod×data staged round and its DCI-wire split).
+``--nested`` for the pod×data staged round and its DCI-wire split;
+``--cohorts B`` caps the multi-tenant ``batched_round`` section — B
+cohorts as one launch vs a B-sequential loop, host and 8-device).
 The JSON lands at the repo root so every future PR diffs against it.
 """
 
@@ -262,6 +264,113 @@ def bench_nested(k_pod, k_data, d, q, reps):
     return out
 
 
+def bench_batched(k, d, reps, cohort_sizes, wave_dim=512):
+    """Multi-tenant batched rounds: B cohorts as ONE launch vs B sequential
+    rounds, on the host executor (``execute_batched`` vs an ``execute``
+    loop) and the 8-device shard_map lowering (``execute_sharded_batched``
+    vs an ``execute_sharded`` loop). Records per-cohort round latency and
+    aggregate rounds/s for each B, plus the speedup over the sequential
+    loop, in TWO regimes:
+
+    * ``wavefront`` (d = ``wave_dim``): per-hop payloads are small (the
+      multi-hop constellation case — q ≈ d/100 compact coordinates per
+      ISL hop), so the round is dominated by the launch + per-level
+      collective wavefront the batched path amortizes — B cohorts cost
+      one L-level wavefront instead of B. This is the headline: the
+      term that dominates real multi-hop rounds shrinks ~B×.
+    * ``compute`` (d = the caller's ``--dim``): per-element work
+      dominates. The forced-host-device CPU backend serializes lanes and
+      the B-wide working set ([K, B, d] gathers) falls out of cache, so
+      batching can go *below* 1× here — recorded deliberately, so the
+      crossover is visible instead of hidden by a flattering dim choice.
+
+    Also audits the scheduler contract: cohorts are submitted through one
+    :class:`repro.agg.RoundScheduler` and the trace counter must not
+    exceed one jit specialization per (bucket, shape, padded-B) — the
+    batched path adds zero specializations beyond the bucket set.
+    """
+    import functools
+    from repro.agg import (CohortRound, RoundScheduler, compile_plan,
+                           execute, execute_batched, execute_sharded,
+                           execute_sharded_batched)
+    from repro.agg.device import client_mesh
+    plan = compile_plan(k)
+    have_dev = jax.device_count() >= k
+    mesh = client_mesh(k) if have_dev else None
+
+    out = {"alg": "cl_sia", "plan": "chain", "regimes": {}}
+    for regime, dd in (("wavefront", wave_dim), ("compute", d)):
+        q = max(1, dd // 100)
+        cfg = _cfg("cl_sia", q, "exact", "never")
+        seq_h = jax.jit(functools.partial(execute, cfg))
+        bat_h = jax.jit(functools.partial(execute_batched, cfg))
+        if have_dev:
+            seq_d = jax.jit(functools.partial(execute_sharded, cfg,
+                                              mesh=mesh))
+            bat_d = jax.jit(functools.partial(execute_sharded_batched, cfg,
+                                              mesh=mesh))
+        cohorts = {}
+        for b in cohort_sizes:
+            key = jax.random.PRNGKey(b)
+            g = jax.random.normal(key, (b, k, dd))
+            e = 0.1 * jax.random.normal(jax.random.fold_in(key, 1),
+                                        (b, k, dd))
+            w = jnp.ones((b, k), jnp.float32)
+
+            def seq_loop(fn):
+                return [fn(plan, g[i], e[i], w[i]).aggregate
+                        for i in range(b)]
+
+            entry = {}
+            for backend, ok, seq_fn, bat_fn in (
+                    ("host", True, seq_h, bat_h),
+                    ("device", have_dev,
+                     seq_d if have_dev else None,
+                     bat_d if have_dev else None)):
+                if not ok:
+                    entry[backend] = {"skipped": f"needs {k} devices"}
+                    continue
+                us_seq = _timed(lambda: seq_loop(seq_fn), reps)
+                # the shared [L, W] plan keeps the compact wire live on
+                # the batched path, same as the sequential baseline;
+                # stacked [B, L, W] plans are the scheduler's business
+                us_bat = _timed(lambda: bat_fn(plan, g, e, w).aggregate,
+                                reps)
+                entry[backend] = {
+                    "sequential_us": round(us_seq, 1),
+                    "batched_us": round(us_bat, 1),
+                    "per_cohort_us": round(us_bat / b, 1),
+                    "rounds_per_s": round(b / (us_bat * 1e-6), 1),
+                    "rounds_per_s_sequential": round(b / (us_seq * 1e-6),
+                                                     1),
+                    "speedup_x": round(us_seq / us_bat, 2),
+                }
+            cohorts[str(b)] = entry
+        out["regimes"][regime] = {"d": dd, "q": q, "cohorts": cohorts}
+
+    # scheduler audit (wavefront dim): two passes over every B — the
+    # second pass hits warm buckets, so traces must not grow past the
+    # (bucket, shape, padded-B) set
+    q = max(1, wave_dim // 100)
+    cfg = _cfg("cl_sia", q, "exact", "never")
+    sched = RoundScheduler(cfg)
+    for rnd in range(2):
+        for b in cohort_sizes:
+            key = jax.random.PRNGKey(100 * rnd + b)
+            g = jax.random.normal(key, (b, k, wave_dim))
+            sched.submit([CohortRound(cohort_id=i, plan=plan, grads=g[i],
+                                      e=0.1 * g[i],
+                                      weights=jnp.ones((k,)))
+                          for i in range(b)])
+    sched.assert_bucket_specializations()
+    out["scheduler"] = {
+        "submits": 2 * len(cohort_sizes),
+        "shape_buckets": sched.expected_specializations,
+        "jit_traces": sched.trace_counter.count,
+    }
+    return out
+
+
 def bench_scenario(name: str):
     """Run a fault-injection preset through the simulator and record the
     realized per-round §V bits (the curve a relay-cascade / link-flap /
@@ -340,6 +449,10 @@ def main(argv=None) -> dict:
                     help="add the pod×data staged round (2 pods × 4 ranks "
                          "on the 8 fake devices): per-stage §V bits and "
                          "the DCI-wire reduction vs the flat ring")
+    ap.add_argument("--cohorts", type=int, default=8, metavar="B",
+                    help="multi-tenant batched-round section: bench B in "
+                         "{1, 4, 8} up to this cap (batched single-launch "
+                         "vs B-sequential, host + 8-device); 0 disables")
     ap.add_argument("--scenario", default=None, metavar="PRESET",
                     help="also run a repro.scenario preset (e.g. "
                          "relay-cascade) through the simulator and record "
@@ -397,6 +510,11 @@ def main(argv=None) -> dict:
         # fused path correctness + interpret-mode smoke (see docstring)
         "fused_interpret_rounds_us": fused_interpret,
     }
+    if args.cohorts:
+        sizes = sorted({b for b in (1, 4, 8) if b <= args.cohorts}
+                       | {args.cohorts})
+        with timer.phase("batched_round", track="bench"):
+            result["batched_round"] = bench_batched(k, d, args.reps, sizes)
     if args.nested:
         with timer.phase("nested_round", track="bench"):
             result["nested_round"] = bench_nested(2, 4, d, q, args.reps)
@@ -419,6 +537,17 @@ def main(argv=None) -> dict:
         print(f"round,{name},host_chain_threshold_us,{h['threshold']}")
         print(f"round,{name},passes_unfused,{passes[name]['unfused']}")
         print(f"round,{name},passes_fused,{passes[name]['fused']}")
+    if args.cohorts:
+        for regime, rg in result["batched_round"]["regimes"].items():
+            for b, entry in rg["cohorts"].items():
+                for backend in ("host", "device"):
+                    be = entry[backend]
+                    if "skipped" in be:
+                        continue
+                    print(f"batched,{regime},B={b},{backend}_rounds_per_s,"
+                          f"{be['rounds_per_s']}")
+                    print(f"batched,{regime},B={b},{backend}_speedup_x,"
+                          f"{be['speedup_x']}")
     return result
 
 

@@ -22,6 +22,9 @@ def main() -> None:
                     help="kernel-bench vector length d")
     ap.add_argument("--reps", type=int, default=3,
                     help="kernel-bench timing repetitions")
+    ap.add_argument("--cohorts", type=int, default=8,
+                    help="multi-tenant batched-round cap forwarded to "
+                         "bench_round (0 disables the section)")
     args = ap.parse_args()
 
     import bench_kernels
@@ -36,7 +39,8 @@ def main() -> None:
     print("\n== aggregation round (BENCH_agg_round.json) ==")
     # device section auto-skips unless this process was launched with
     # XLA_FLAGS=--xla_force_host_platform_device_count=8
-    bench_round.main(["--reps", str(args.reps), "--nested"])
+    bench_round.main(["--reps", str(args.reps), "--nested",
+                      "--cohorts", str(args.cohorts)])
     print("\n== fig2a: transmitted bits vs K ==")
     fig2a_comm_cost.main()
     print("\n== fig2b: normalized efficiency vs K ==")

@@ -7,19 +7,30 @@ padded ``(L, W)`` level schedule (:class:`AggPlan`); ``execute(cfg, plan,
 to the tree engine it subsumes. :class:`TopologySchedule` strings plans over
 time (graph-per-round or link up/down events) under a single jit
 specialization; :class:`Aggregator` is the pytree-aware object API on top.
+
+Multi-tenant batched rounds: ``execute_batched`` (host) /
+``execute_sharded_batched`` (device) run B cohorts through one launch —
+bitwise identical per cohort to B sequential rounds — and
+:class:`RoundScheduler` packs heterogeneous cohorts into padded shape
+buckets so one jit specialization per bucket serves arbitrarily many
+tenants.
 """
 
 from repro.agg.aggregator import AggState, Aggregator, RoundOut, flat_dim
+from repro.agg.batching import CohortRound, RoundScheduler
 from repro.agg.device import (client_mesh, execute_nested_sharded,
-                              execute_sharded, ring_chain_plan,
-                              run_nested_segments_local,
+                              execute_sharded, execute_sharded_batched,
+                              ring_chain_plan, run_nested_segments_local,
+                              run_plan_clients_batched,
                               run_plan_clients_local,
+                              run_plan_segments_batched,
                               run_plan_segments_local)
 from repro.agg.nested import (NestedPlan, NestedResult, as_nested,
                               compile_nested, execute_nested,
                               pod_ring_nested, zero_stage_ef)
 from repro.agg.plan import (AggPlan, RoundResult, as_tree, bandwidth_budgets,
-                            compile_plan, execute)
+                            compile_plan, execute, execute_batched,
+                            stack_plans)
 from repro.agg.schedule import TopologySchedule, common_shape
 
 __all__ = [
@@ -31,4 +42,7 @@ __all__ = [
     "client_mesh", "execute_sharded", "execute_nested_sharded",
     "ring_chain_plan", "run_plan_clients_local", "run_plan_segments_local",
     "run_nested_segments_local",
+    "execute_batched", "stack_plans", "execute_sharded_batched",
+    "run_plan_clients_batched", "run_plan_segments_batched",
+    "CohortRound", "RoundScheduler",
 ]

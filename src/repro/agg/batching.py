@@ -1,0 +1,180 @@
+"""Shape-bucket round scheduler — multi-tenant batched aggregation.
+
+Serving many *independent* cohorts (per-region models, per-task adapters,
+A/B arms) over one constellation means many concurrent rounds whose
+``pallas_call`` + collective launch overhead would otherwise be paid once
+per cohort. :class:`RoundScheduler` packs submitted cohort rounds into
+**shape buckets** and runs each bucket through one
+:func:`repro.agg.plan.execute_batched` launch:
+
+* bucket identity is the jit-specialization structure — client count, sink
+  count, ``q_budget`` presence, model dimension and gradient dtype;
+* within a bucket, plans of different ``(L, W)`` are re-padded to the
+  bucket's **running-max** shape (the ``_PlanCache`` policy of
+  :class:`repro.fed.simulator.Simulator`, built on the elementwise-max
+  ``common_shape`` rule of :class:`repro.agg.schedule.TopologySchedule`)
+  and stacked with :func:`repro.agg.plan.stack_plans` — padding slots are
+  bit-exact no-ops, so heterogeneous topologies share one executable;
+* the cohort count is padded up to a power of two with zero dummy cohorts,
+  so arbitrarily many tenants hit a bounded set of ``[B, ...]`` shapes.
+
+One jit specialization per (bucket, padded shape, padded B) serves every
+subsequent round of that bucket — audited by a
+:class:`repro.obs.collector.TraceCounter` bumped at trace time
+(:meth:`RoundScheduler.assert_bucket_specializations`). Results are
+bitwise identical, per cohort, to a sequential ``execute`` call on the
+cohort's own (unpadded) plan — except the ``err_sq`` diagnostic, which
+the stacked-plan gathers let XLA re-associate (see
+:func:`repro.agg.plan.execute_batched`; value leaves and integer §V
+counters stay exact).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Hashable, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.agg.plan import (AggPlan, RoundResult, execute_batched,
+                            stack_plans)
+from repro.core.algorithms import AggConfig
+from repro.obs.collector import TraceCounter
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class CohortRound:
+    """One tenant's round submission: a plan plus its round inputs.
+
+    ``global_mask`` / ``participate`` may be None (zeros / full
+    participation — identical to the ``execute`` defaults).
+    """
+
+    cohort_id: Hashable
+    plan: AggPlan
+    grads: Array                         # [K, d]
+    e: Array                             # [K, d]
+    weights: Array                       # [K]
+    global_mask: Optional[Array] = None  # [d]
+    participate: Optional[Array] = None  # [K]
+
+
+def _pow2(n: int) -> int:
+    return 1 << max(0, n - 1).bit_length() if n > 1 else 1
+
+
+class RoundScheduler:
+    """Packs heterogeneous cohort rounds into padded shape buckets.
+
+    One scheduler serves one :class:`AggConfig` (the config is a static
+    jit argument — cohorts with different algorithms belong to different
+    schedulers, which is the same specialization boundary jit itself
+    draws).
+    """
+
+    def __init__(self, cfg: AggConfig, *,
+                 trace_counter: Optional[TraceCounter] = None):
+        self.cfg = cfg
+        self.trace_counter = trace_counter or TraceCounter()
+        self._bucket_shape: Dict[tuple, tuple] = {}   # key → running (L, W)
+        self._specs: set = set()            # (key, (L, W), B) launched
+        self.bucket_log: List[dict] = []    # one entry per bucket launch
+
+        def _run(plan, grads, e, weights, global_mask, participate):
+            self.trace_counter.bump()
+            return execute_batched(self.cfg, plan, grads, e, weights,
+                                   global_mask=global_mask,
+                                   participate=participate)
+
+        self._run = jax.jit(_run)
+
+    # -- bucketing ---------------------------------------------------------
+
+    @staticmethod
+    def _bucket_key(r: CohortRound) -> tuple:
+        return (r.plan.num_clients, r.plan.num_sinks,
+                r.plan.q_budget is not None, r.grads.shape[-1],
+                jnp.asarray(r.grads).dtype.name)
+
+    def _bucket(self, rounds: Sequence[CohortRound]) -> Dict[tuple, list]:
+        buckets: Dict[tuple, list] = {}
+        for r in rounds:
+            if np.ndim(r.plan.node_id) != 2:
+                raise ValueError("submit unstacked plans; the scheduler "
+                                 "stacks buckets itself")
+            buckets.setdefault(self._bucket_key(r), []).append(r)
+        return buckets
+
+    @property
+    def expected_specializations(self) -> int:
+        """Distinct (bucket, padded shape, padded B) launches so far —
+        the ceiling the trace counter must not exceed."""
+        return len(self._specs)
+
+    def assert_bucket_specializations(self):
+        """Raise unless jit traced at most once per shape bucket."""
+        if self.trace_counter.count > self.expected_specializations:
+            raise AssertionError(
+                f"batched round path traced {self.trace_counter.count}× "
+                f"for {self.expected_specializations} shape bucket(s) — "
+                f"a plan/input shape is leaking into new specializations")
+
+    # -- execution ---------------------------------------------------------
+
+    def submit(self, rounds: Sequence[CohortRound]
+               ) -> Dict[Hashable, RoundResult]:
+        """Run every submitted cohort round; returns per-cohort results.
+
+        Cohorts land in their shape bucket, each bucket runs as ONE
+        batched launch, and each cohort's ``RoundResult`` is bitwise what
+        a sequential ``execute`` on its own plan would have produced
+        (``err_sq`` to float summation order — module doc).
+        """
+        out: Dict[Hashable, RoundResult] = {}
+        for key, members in self._bucket(rounds).items():
+            shape = self._grow_shape(key, members)
+            b, b_pad = len(members), _pow2(len(members))
+            plans = [m.plan.pad(shape) for m in members]
+            plans += [plans[-1]] * (b_pad - b)          # dummy cohorts
+            plan = stack_plans(plans)
+
+            k, d = members[0].grads.shape
+            dt = jnp.asarray(members[0].grads).dtype
+
+            def stack(get, fill, shp, dtype):
+                rows = [jnp.asarray(get(m) if get(m) is not None else fill,
+                                    dtype) for m in members]
+                rows += [jnp.asarray(fill, dtype)] * (b_pad - b)
+                return jnp.stack(rows).reshape((b_pad,) + shp)
+
+            # mask/participation are exact 0/1 in any float dtype; weights
+            # keep their own dtype so per-cohort bits match sequential
+            wdt = jnp.asarray(members[0].weights).dtype
+            grads = stack(lambda m: m.grads, jnp.zeros((k, d)), (k, d), dt)
+            e = stack(lambda m: m.e, jnp.zeros((k, d)), (k, d), dt)
+            weights = stack(lambda m: m.weights, jnp.zeros((k,)), (k,),
+                            wdt)
+            gmask = stack(lambda m: m.global_mask, jnp.zeros((d,)), (d,),
+                          dt)
+            part = stack(lambda m: m.participate, jnp.ones((k,)), (k,), dt)
+
+            self._specs.add((key, shape, b_pad))
+            self.bucket_log.append(dict(key=key, shape=shape, cohorts=b,
+                                        padded_cohorts=b_pad))
+            res = self._run(plan, grads, e, weights, gmask, part)
+            for i, m in enumerate(members):
+                out[m.cohort_id] = jax.tree.map(lambda x: x[i], res)
+        return out
+
+    def _grow_shape(self, key: tuple, members: Sequence[CohortRound]
+                    ) -> tuple:
+        shapes = [m.plan.shape for m in members]
+        prev = self._bucket_shape.get(key, (1, 1))
+        shape = (max(prev[0], *(s[0] for s in shapes)),
+                 max(prev[1], *(s[1] for s in shapes)))
+        self._bucket_shape[key] = shape
+        return shape

@@ -58,7 +58,7 @@ from repro import compat
 from repro.agg.plan import AggPlan, RoundResult, compile_plan
 from repro.core import sparsify as sp
 from repro.core.algorithms import (AggConfig, AggKind, HopStats, NodeCtx,
-                                   level_step, node_step)
+                                   level_step, level_step_batched, node_step)
 from repro.core.ring import RingStats
 
 Array = jax.Array
@@ -162,19 +162,34 @@ def _shift_perm(num_ranks: int, shift: int) -> list:
     return [(i, (i + shift) % num_ranks) for i in range(num_ranks)]
 
 
+def _nest_vmap(fn, levels: int):
+    for _ in range(levels):
+        fn = jax.vmap(fn)
+    return fn
+
+
 def _send_static(cfg: AggConfig, payload: Array, seg: int, axis,
                  shift: int, compact: bool) -> Array:
-    """One logical hop by a static ring shift (the ring's ``_send``)."""
+    """One logical hop by a static ring shift (the ring's ``_send``).
+
+    ``payload`` may carry leading batch axes (``[B, seg]`` cohort batches
+    — B cohorts ride ONE ppermute per hop; compact transport compacts per
+    trailing vector).
+    """
     if shift == 0:
         return payload
     perm = _shift_perm(compat.axis_size(axis), shift)
     if not compact:
         return jax.lax.ppermute(payload, axis, perm)
-    vals, idx, _ = sp.compact(payload, _wire_budget(cfg))
+    lead = payload.ndim - 1
+    q = _wire_budget(cfg)
+    vals, idx, _ = _nest_vmap(lambda x: sp.compact(x, q), lead)(payload)
     vals = jax.lax.ppermute(vals.astype(jnp.dtype(cfg.wire_dtype)), axis,
                             perm)
     idx = jax.lax.ppermute(idx, axis, perm)
-    return sp.scatter(vals.astype(jnp.float32), idx, seg)
+    return _nest_vmap(
+        lambda v, i: sp.scatter(v.astype(jnp.float32), i, seg),
+        lead)(vals, idx)
 
 
 def _route_butterfly(cfg: AggConfig, payload: Array, offsets: Array,
@@ -184,12 +199,19 @@ def _route_butterfly(cfg: AggConfig, payload: Array, offsets: Array,
     Offsets are *traced* (plan-dependent) but rank-uniform per slot, so a
     ⌈log₂K⌉-round butterfly of whole-bundle ppermutes with per-slot bit
     selection realizes any shift pattern under one specialization.
+
+    ``payload`` is ``[W, seg]``, or ``[W, B, seg]`` for a cohort batch —
+    slots stay the leading axis (the bit selection broadcasts over the
+    cohorts) and each butterfly round remains ONE ppermute of the whole
+    bundle for all B cohorts.
     """
     K = compat.axis_size(axis)
     rounds = max(1, math.ceil(math.log2(K))) if K > 1 else 0
+    lead = payload.ndim - 1
     if compact:
         q = _wire_budget(cfg)
-        vals, idx, _ = jax.vmap(lambda x: sp.compact(x, q))(payload)
+        vals, idx, _ = _nest_vmap(lambda x: sp.compact(x, q),
+                                  lead)(payload)
         vals = vals.astype(jnp.dtype(cfg.wire_dtype))
         bundle = (vals, idx)
     else:
@@ -203,8 +225,8 @@ def _route_butterfly(cfg: AggConfig, payload: Array, offsets: Array,
             for b, m in zip(bundle, moved))
     if compact:
         vals, idx = bundle
-        return jax.vmap(lambda v, i: sp.scatter(
-            v.astype(jnp.float32), i, seg))(vals, idx)
+        return _nest_vmap(lambda v, i: sp.scatter(
+            v.astype(jnp.float32), i, seg), lead)(vals, idx)
     return bundle[0]
 
 
@@ -629,6 +651,380 @@ def execute_sharded(
         body, mesh=mesh,
         in_specs=(plan_specs, P(axis), P(axis), P(axis), P(axis), P()),
         out_specs=(P(), P(axis), stats_specs),
+        axis_names={axis},
+    )(plan, grads, e, weights, part, gmask)
+    return RoundResult(aggregate=agg, e_new=e_new, stats=stats)
+
+
+# ---------------------------------------------------------------------------
+# Cohort-batched lowerings: B multi-tenant rounds ride one collective
+# ---------------------------------------------------------------------------
+
+def _run_chain_register_batched(cfg, plan, flat_local, ef_local, weight, *,
+                                axis, np_node, np_par, global_mask_local,
+                                p_eff, qb, compact):
+    """Cohort-batched chain register loop: γ is a ``[B, seg]`` carry.
+
+    Same hop schedule as :func:`_run_chain_register`, but the B cohorts run
+    the level as one :func:`level_step` launch (lanes = B) and every hop is
+    ONE ``ppermute`` of the ``[B, seg]`` register — the collective count of
+    the sequential ring, whatever B is.
+    """
+    K = compat.axis_size(axis)
+    r = jax.lax.axis_index(axis)
+    b_coh, n = flat_local.shape
+    seg = n // K
+    L = plan.shape[0]
+    x = flat_local.reshape(b_coh, K, seg)
+    ef = ef_local.reshape(b_coh, K, seg)
+    gm = (None if global_mask_local is None
+          else global_mask_local.reshape(b_coh, K, seg))
+
+    lvl_fn = level_step(cfg)
+    gamma = jnp.zeros((b_coh, seg), jnp.float32)
+    bits = jnp.zeros((b_coh,), jnp.float32)
+    nnz = jnp.zeros((b_coh,), jnp.float32)
+    err = jnp.zeros((b_coh,), jnp.float32)
+    for l in range(L):
+        b, p = int(np_node[l, 0]), int(np_par[l, 0])
+        s = jnp.mod(r - b, K)
+        g_seg = x[:, s].astype(jnp.float32)
+        e_seg = ef[:, s].astype(jnp.float32)
+        m_seg = (jnp.zeros((b_coh, seg), jnp.float32) if gm is None
+                 else gm[:, s].astype(jnp.float32))
+        gamma_out, e_new, st = lvl_fn(g_seg, gamma, e_seg, weight, p_eff,
+                                      m_seg, qb)
+        ef = ef.at[:, s].set(e_new.astype(ef.dtype))
+        bits = bits + st.bits
+        nnz = nnz + st.nnz_out.astype(jnp.float32)
+        err = err + st.err_sq
+        shift = (-b) % K if p == K else (p - b) % K
+        gamma = _send_static(cfg, gamma_out, seg, axis, shift, compact)
+    return gamma, ef.reshape(b_coh, n), RingStats(bits=bits, nnz=nnz,
+                                                  err_sq=err)
+
+
+def run_plan_segments_batched(
+    cfg: AggConfig,
+    plan: AggPlan,
+    flat_local: Array,                # [B, n] this rank's cohort slices
+    ef_local: Array,                  # [B, n] EF memories
+    weight: Array,                    # [B] per-cohort D_k
+    *,
+    axis,
+    global_mask_local: Optional[Array] = None,   # [B, n]
+    participate: Optional[Array] = None,         # [B] 0/1
+    transport: str = "auto",
+    wire: str = "auto",
+) -> tuple[Array, Array, RingStats]:
+    """Cohort-batched :func:`run_plan_segments_local` — one shared plan,
+    B tenants per rank, one ppermute wavefront per level.
+
+    Every cohort runs the plan exactly as the sequential kernel would; the
+    payloads stack to ``[B, seg]`` (chain register) / ``[W, B, seg]``
+    (butterfly bundle) so each hop or butterfly round stays a single
+    collective for all B cohorts. Per cohort the result is bitwise what
+    the sequential kernel returns. Returns ``([B, seg], [B, n],``
+    :class:`RingStats` with ``[B]`` leaves``)``.
+    """
+    if jnp.ndim(jnp.asarray(plan.node_id)) == 3:
+        raise ValueError("the batched segments kernel runs one shared "
+                         "plan; stacked per-cohort plans are a host "
+                         "(execute_batched) feature")
+    K = compat.axis_size(axis)
+    if plan.num_clients != K:
+        raise ValueError(
+            f"plan has {plan.num_clients} clients but the mesh axis "
+            f"{axis!r} has {K} ranks")
+    if plan.num_sinks != 1:
+        raise ValueError("the batched segments kernel runs single-sink "
+                         "plans")
+    r = jax.lax.axis_index(axis)
+    b_coh, n = flat_local.shape
+    assert n % K == 0, (n, K)
+    seg = n // K
+    L, W = plan.shape
+
+    if transport not in ("auto", "static", "butterfly"):
+        raise ValueError(f"unknown transport {transport!r}")
+    static = (_is_static_plan(plan) if transport == "auto"
+              else transport == "static")
+    if static and not _is_static_plan(plan):
+        raise ValueError("transport='static' needs a trace-time-constant "
+                         "plan (numpy arrays, not traced jit arguments)")
+    np_node = np.asarray(plan.node_id) if static else None
+    np_par = np.asarray(plan.parent_row) if static else None
+
+    compact = _use_compact(cfg, seg, plan, participate is not None, wire)
+    alive_r = jnp.asarray(plan.alive)[r]
+    p_vec = (jnp.ones((b_coh,), jnp.float32) if participate is None
+             else participate.astype(jnp.float32))
+    p_eff = p_vec * alive_r
+    qb = (None if plan.q_budget is None
+          else jnp.broadcast_to(jnp.asarray(plan.q_budget, jnp.int32)[r],
+                                (b_coh,)))
+
+    if static and _is_register_chain(plan, np_node, np_par):
+        return _run_chain_register_batched(
+            cfg, plan, flat_local, ef_local, weight, axis=axis,
+            np_node=np_node, np_par=np_par,
+            global_mask_local=global_mask_local, p_eff=p_eff, qb=qb,
+            compact=compact)
+
+    node_id = jnp.asarray(plan.node_id)
+    slot_mask = jnp.asarray(plan.slot_mask)
+    parent_row = jnp.asarray(plan.parent_row)
+
+    zrow = lambda buf: jnp.zeros((b_coh, 1, seg), buf.dtype)
+    x_ext = jnp.concatenate([flat_local.reshape(b_coh, K, seg),
+                             zrow(flat_local)], axis=1)
+    ef_ext = jnp.concatenate([ef_local.reshape(b_coh, K, seg),
+                              zrow(ef_local), zrow(ef_local)], axis=1)
+    gm_ext = None
+    if global_mask_local is not None:
+        gm_ext = jnp.concatenate([global_mask_local.reshape(b_coh, K, seg),
+                                  zrow(global_mask_local)], axis=1)
+
+    inbox = jnp.zeros((b_coh, K + 3, seg), jnp.float32)
+
+    lvl_fn = level_step_batched(cfg)
+    w_bcast = jnp.broadcast_to(jnp.asarray(weight, jnp.float32)[:, None],
+                               (b_coh, W))
+    p_bcast = jnp.broadcast_to(p_eff[:, None], (b_coh, W))
+    qb_bcast = (None if qb is None
+                else jnp.broadcast_to(qb[:, None], (b_coh, W)))
+    bits = jnp.zeros((b_coh,), jnp.float32)
+    nnz = jnp.zeros((b_coh,), jnp.float32)
+    err = jnp.zeros((b_coh,), jnp.float32)
+
+    for l in range(L):
+        ids_l = node_id[l]                               # [W]
+        mask_l = slot_mask[l]
+        par_l = parent_row[l]
+        valid = mask_l > 0
+        s_w = jnp.mod(r - ids_l, K).astype(jnp.int32)
+        s_read = jnp.where(valid, s_w, K)
+
+        g_lvl = x_ext[:, s_read].astype(jnp.float32)     # [B, W, seg]
+        e_lvl = ef_ext[:, s_read].astype(jnp.float32)
+        gam_in = inbox[:, jnp.where(valid, s_w, K + 2)]
+        m_lvl = (jnp.zeros((b_coh, W, seg), jnp.float32) if gm_ext is None
+                 else gm_ext[:, s_read].astype(jnp.float32))
+        valid_b = jnp.broadcast_to(mask_l, (b_coh, W))
+
+        gamma_out, e_new, st = lvl_fn(g_lvl, gam_in, e_lvl, w_bcast,
+                                      p_bcast, m_lvl, qb_bcast, valid_b)
+
+        rows_ef = jnp.where(valid, s_w, K + 1)
+        ef_ext = jax.vmap(lambda efc, en: efc.at[rows_ef].set(
+            en.astype(ef_ext.dtype)))(ef_ext, e_new)
+        bits = bits + jnp.sum(st.bits * mask_l, axis=1)
+        nnz = nnz + jnp.sum(st.nnz_out.astype(jnp.float32) * mask_l,
+                            axis=1)
+        err = err + jnp.sum(st.err_sq * mask_l, axis=1)
+
+        payload = gamma_out * mask_l[None, :, None]      # [B, W, seg]
+        is_ps = par_l == K
+        if static:
+            arrived = []
+            for w in range(W):
+                b = int(np_node[l, w])
+                if b >= K:                               # padding slot
+                    arrived.append(jnp.zeros((b_coh, seg), jnp.float32))
+                    continue
+                p = int(np_par[l, w])
+                shift = (-b) % K if p == K else (p - b) % K
+                arrived.append(_send_static(cfg, payload[:, w], seg, axis,
+                                            shift, compact))
+            arrived = jnp.stack(arrived, axis=1)         # [B, W, seg]
+        else:
+            offsets = jnp.where(is_ps, jnp.mod(-ids_l, K),
+                                jnp.mod(par_l - ids_l, K)).astype(jnp.int32)
+            arrived = jnp.moveaxis(
+                _route_butterfly(cfg, jnp.moveaxis(payload, 0, 1), offsets,
+                                 seg, axis, compact), 0, 1)
+        rows = jnp.where(valid,
+                         jnp.where(is_ps, K, jnp.mod(r - par_l, K)),
+                         K + 1).astype(jnp.int32)
+        inbox = jax.vmap(lambda ib, ar: ib.at[rows].add(ar))(inbox, arrived)
+
+    final = inbox[:, K]
+    return final, ef_ext[:, :K].reshape(b_coh, n), RingStats(
+        bits=bits, nnz=nnz, err_sq=err)
+
+
+def run_plan_clients_batched(
+    cfg: AggConfig,
+    plan: AggPlan,
+    g_local: Array,                   # [B, d] this client's cohort grads
+    ef_local: Array,                  # [B, d] EF memories
+    weight: Array,                    # [B] per-cohort D_k
+    *,
+    axis,
+    global_mask: Optional[Array] = None,   # [B, d] per-cohort TCS masks
+    participate: Optional[Array] = None,   # [B] 0/1
+    wire: str = "auto",
+) -> tuple[Array, Array, HopStats]:
+    """Cohort-batched :func:`run_plan_clients_local` — B tenants per rank.
+
+    ``plan`` is shared ``[L, W]`` or stacked ``[B, L, W]``
+    (:func:`repro.agg.plan.stack_plans`); either way each level is ONE
+    :func:`level_step` launch (lanes = B) plus ONE ``all_gather`` of the
+    ``[B, d]`` payload stack for all cohorts. Per cohort, bit-exact to the
+    sequential kernel and hence to host ``execute``. Returns the sink
+    aggregates ``[B, d]`` (or ``[B, R, d]``), EF ``[B, d]``, and this
+    rank's per-cohort :class:`HopStats` (``[B]`` leaves).
+    """
+    K = compat.axis_size(axis)
+    if plan.num_clients != K:
+        raise ValueError(
+            f"plan has {plan.num_clients} clients but the mesh axis "
+            f"{axis!r} has {K} ranks")
+    r = jax.lax.axis_index(axis)
+    b_coh, d = g_local.shape
+
+    node_id = jnp.asarray(plan.node_id)
+    slot_mask = jnp.asarray(plan.slot_mask)
+    parent_row = jnp.asarray(plan.parent_row)
+    stacked = node_id.ndim == 3
+    if stacked and node_id.shape[0] != b_coh:
+        raise ValueError(f"stacked plan has {node_id.shape[0]} cohorts, "
+                         f"inputs {b_coh}")
+    L, W = plan.shape[-2:]
+    lvl = lambda a, l: a[:, l] if a.ndim == 3 else a[l]   # [B, W] | [W]
+
+    dt = g_local.dtype
+    alive = jnp.asarray(plan.alive, dt)
+    alive_r = alive[:, r] if alive.ndim == 2 else jnp.broadcast_to(
+        alive[r], (b_coh,))
+    p_vec = jnp.ones((b_coh,), dt) if participate is None else participate
+    p_eff = p_vec * alive_r
+    if plan.q_budget is None:
+        qb = None
+    else:
+        qbs = jnp.asarray(plan.q_budget, jnp.int32)
+        qb = qbs[:, r] if qbs.ndim == 2 else jnp.broadcast_to(
+            qbs[r], (b_coh,))
+    compact = _use_compact(cfg, d, plan, participate is not None, wire)
+    if wire == "auto" and jnp.dtype(cfg.wire_dtype) != jnp.float32:
+        compact = False
+    q_wire = _wire_budget(cfg)
+
+    gm = jnp.zeros((b_coh, d), dt) if global_mask is None else global_mask
+    lvl_fn = level_step(cfg)
+
+    r_sinks = plan.num_sinks
+    buf = jnp.zeros((b_coh, 2 + r_sinks, d), dt)
+    e_cur = ef_local
+    zero_i = jnp.zeros((b_coh,), jnp.int32)
+    my_stats = HopStats(nnz_out=zero_i, nnz_global=zero_i,
+                        nnz_local=zero_i,
+                        bits=jnp.zeros((b_coh,), jnp.float32),
+                        err_sq=jnp.zeros((b_coh,), jnp.float32))
+
+    for l in range(L):
+        ids_l = jnp.broadcast_to(lvl(node_id, l), (b_coh, W))
+        mask_l = jnp.broadcast_to(lvl(slot_mask, l), (b_coh, W))
+        par_l = jnp.broadcast_to(lvl(parent_row, l), (b_coh, W))
+        valid = mask_l > 0
+        active = jnp.any((ids_l == r) & valid, axis=1)   # [B]
+
+        gamma_out, e_new, st = lvl_fn(g_local, buf[:, 0], e_cur, weight,
+                                      p_eff, gm, qb)
+        e_cur = jnp.where(active[:, None], e_new, e_cur)
+        my_stats = jax.tree.map(
+            lambda acc, s: jnp.where(active, s, acc), my_stats, st)
+
+        payload = gamma_out * active[:, None].astype(gamma_out.dtype)
+        b_clip = jnp.clip(ids_l, 0, K - 1)               # [B, W]
+        if compact:
+            vals, idx, _ = jax.vmap(
+                lambda x: sp.compact(x, q_wire))(payload)
+            all_vals = jax.lax.all_gather(
+                vals.astype(jnp.dtype(cfg.wire_dtype)), axis)  # [K, B, q]
+            all_idx = jax.lax.all_gather(idx, axis)
+            sel = lambda a: jnp.take_along_axis(
+                jnp.moveaxis(a, 0, 1), b_clip[:, :, None], axis=1)
+            arrived = jax.vmap(jax.vmap(
+                lambda v, i: sp.scatter(v.astype(payload.dtype), i, d)))(
+                    sel(all_vals), sel(all_idx))         # [B, W, d]
+        else:
+            all_pay = jax.lax.all_gather(payload, axis)  # [K, B, d]
+            arrived = jnp.take_along_axis(
+                jnp.moveaxis(all_pay, 0, 1), b_clip[:, :, None], axis=1)
+        arrived = arrived * mask_l[:, :, None]
+        p_clients = plan.num_clients
+        rows = jnp.where(
+            valid & (par_l == r), 0,
+            jnp.where(valid & (par_l >= p_clients)
+                      & (par_l < p_clients + r_sinks),
+                      1 + par_l - p_clients,
+                      1 + r_sinks)).astype(jnp.int32)    # [B, W]
+        # per-cohort slot-ordered scatter-add, same (intentionally
+        # mixed-dtype) duplicate combining as the sequential kernel
+        buf = jax.vmap(lambda bc, rc, ac: bc.at[rc].add(ac))(
+            buf, rows, arrived)
+
+    agg = buf[:, 1] if r_sinks == 1 else buf[:, 1:1 + r_sinks]
+    return agg, e_cur, my_stats
+
+
+def execute_sharded_batched(
+    cfg: AggConfig,
+    plan: AggPlan,
+    grads: Array,                  # [B, K, d] per-cohort client gradients
+    e: Array,                      # [B, K, d] EF memories
+    weights: Array,                # [B, K]
+    *,
+    mesh=None,
+    global_mask: Optional[Array] = None,   # [B, d]
+    participate: Optional[Array] = None,   # [B, K]
+    wire: str = "auto",
+) -> RoundResult:
+    """B cohort rounds on devices as ONE shard_map launch — the device twin
+    of :func:`repro.agg.plan.execute_batched`.
+
+    Clients shard one-per-device exactly as :func:`execute_sharded`; the
+    cohort axis stays local to every rank, so each level still costs one
+    ``all_gather`` however many tenants ride it — this is where the
+    multi-tenant throughput win lives. Per cohort, bit-exact to
+    ``execute_sharded`` (and hence host ``execute``) on that cohort's
+    inputs. Returns a :class:`RoundResult` with a leading cohort axis.
+    """
+    b, k, d = grads.shape
+    if plan.num_clients != k:
+        raise ValueError(f"plan has {plan.num_clients} clients, grads {k}")
+    if mesh is None:
+        mesh = client_mesh(k)
+    axis = mesh.axis_names[0]
+    from jax.sharding import PartitionSpec as P
+
+    has_part = participate is not None
+    part = (jnp.ones((b, k), grads.dtype) if participate is None
+            else participate)
+    gmask = (jnp.zeros((b, d), grads.dtype) if global_mask is None
+             else global_mask)
+
+    wire_fmt = ("compact" if _use_compact(cfg, d, plan, has_part, wire)
+                and (wire == "compact"
+                     or jnp.dtype(cfg.wire_dtype) == jnp.float32)
+                else "dense")
+
+    def body(plan, g_l, e_l, w_l, part_l, gm):
+        agg, e_new, st = run_plan_clients_batched(
+            cfg, plan, g_l[:, 0], e_l[:, 0], w_l[:, 0], axis=axis,
+            global_mask=gm,
+            participate=part_l[:, 0] if has_part else None, wire=wire_fmt)
+        return agg, e_new[:, None], jax.tree.map(lambda s: s[:, None], st)
+
+    plan_specs = jax.tree.map(lambda _: P(), plan)
+    stats_specs = jax.tree.map(lambda _: P(None, axis), HopStats(
+        0, 0, 0, 0., 0.))
+    agg, e_new, stats = compat.shard_map(
+        body, mesh=mesh,
+        in_specs=(plan_specs, P(None, axis), P(None, axis), P(None, axis),
+                  P(None, axis), P()),
+        out_specs=(P(), P(None, axis), stats_specs),
         axis_names={axis},
     )(plan, grads, e, weights, part, gmask)
     return RoundResult(aggregate=agg, e_new=e_new, stats=stats)

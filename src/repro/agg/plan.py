@@ -31,7 +31,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.algorithms import AggConfig, AggKind, HopStats, level_step
+from repro.core.algorithms import (AggConfig, AggKind, HopStats, level_step,
+                                   level_step_batched)
 from repro.topo.tree import PS, AggTree, build_schedule, path_tree
 
 Array = jax.Array
@@ -306,4 +307,146 @@ def execute(
     stats = jax.tree.map(
         lambda s: s.reshape((-1,) + s.shape[2:])[pos], st_lvl)
     agg = inbox[k] if r_sinks == 1 else inbox[k:k + r_sinks]
+    return RoundResult(aggregate=agg, e_new=e_new, stats=stats)
+
+
+# ---------------------------------------------------------------------------
+# execute_batched — B cohorts per launch (multi-tenant rounds)
+# ---------------------------------------------------------------------------
+
+def stack_plans(plans: Sequence[AggPlan]) -> AggPlan:
+    """Stack B shape-identical plans into one cohort-batched plan.
+
+    The result's array leaves carry a leading cohort axis ``[B, ...]``
+    (still traced jit args — B plans with one ``(L, W)`` shape share one
+    specialization of :func:`execute_batched`). Plans must agree on shape,
+    client count, sink count and ``q_budget`` presence — pad heterogeneous
+    plans to a common shape first (:func:`repro.agg.schedule.common_shape`;
+    the bucket packing of :class:`repro.agg.batching.RoundScheduler` does
+    this for you). A stacked plan is only consumable by the batched
+    executors; ``pad`` it *before* stacking.
+    """
+    if not plans:
+        raise ValueError("stack_plans needs at least one plan")
+    p0 = plans[0]
+    for p in plans[1:]:
+        if p.shape != p0.shape:
+            raise ValueError(f"plan shapes differ: {p.shape} vs {p0.shape} "
+                             f"(pad to a common shape first)")
+        if (p.num_clients, p.num_sinks) != (p0.num_clients, p0.num_sinks):
+            raise ValueError("stacked plans must share client/sink counts")
+        if (p.q_budget is None) != (p0.q_budget is None):
+            raise ValueError("stacked plans must agree on q_budget presence")
+    stk = lambda leaf: np.stack([np.asarray(getattr(p, leaf))
+                                 for p in plans])
+    return AggPlan(node_id=stk("node_id"), slot_mask=stk("slot_mask"),
+                   parent_row=stk("parent_row"), flat_pos=stk("flat_pos"),
+                   alive=stk("alive"),
+                   q_budget=None if p0.q_budget is None else stk("q_budget"),
+                   num_clients=p0.num_clients, num_sinks=p0.num_sinks)
+
+
+def execute_batched(
+    cfg: AggConfig,
+    plan: AggPlan,
+    grads: Array,                  # [B, K, d] per-cohort client gradients
+    e: Array,                      # [B, K, d] per-cohort EF memory
+    weights: Array,                # [B, K]
+    *,
+    global_mask: Optional[Array] = None,   # [B, d] per-cohort TCS masks
+    participate: Optional[Array] = None,   # [B, K] per-cohort stragglers
+) -> RoundResult:
+    """B independent aggregation rounds in one launch.
+
+    ``plan`` is either a single plan shared by every cohort (leaves
+    ``[L, W]``) or a :func:`stack_plans` batch of B shape-identical plans
+    (leaves ``[B, L, W]`` — heterogeneous topologies in one bucket). The
+    levels run through :func:`level_step_batched`, which flattens the B
+    cohorts cohort-major into one ``level_step`` launch — a single
+    ``pallas_call`` per kernel stage on the fused path, instead of B.
+
+    Every cohort's math is independent (gathers, row-parallel lanes, and a
+    per-cohort scatter-add identical to :func:`execute`'s), so the result
+    leaves ``[B, ...]`` are bitwise identical, per cohort, to B sequential
+    ``execute`` calls — the multi-tenant contract pinned by
+    tests/test_batched_rounds.py in interpret mode. One caveat: on
+    *stacked* plans the per-cohort index gathers lower through
+    ``take_along_axis``, and XLA may fuse the ``err_sq`` ‖e‖² reduction
+    with a different association than the sequential executor — the
+    aggregate, EF rows, and integer-valued §V counters (``nnz*``,
+    ``bits``) stay bitwise, but ``err_sq`` is only reproduced to float
+    summation order (≲1 ulp).
+    """
+    b, k, d = grads.shape
+    if plan.num_clients != k:
+        raise ValueError(f"plan has {plan.num_clients} clients, grads {k}")
+    stacked = np.ndim(plan.node_id) == 3
+    if stacked and plan.node_id.shape[0] != b:
+        raise ValueError(f"stacked plan has {plan.node_id.shape[0]} "
+                         f"cohorts, grads {b}")
+    if global_mask is None:
+        global_mask = jnp.zeros((b, d), grads.dtype)
+    if participate is None:
+        participate = jnp.ones((b, k), grads.dtype)
+    participate = participate * jnp.asarray(plan.alive, grads.dtype)
+    lvl = level_step_batched(cfg)
+
+    zrow = jnp.zeros((b, 1, d), grads.dtype)
+    g_ext = jnp.concatenate([grads, zrow], axis=1)
+    e_ext = jnp.concatenate([e, zrow], axis=1)
+    w_ext = jnp.concatenate(
+        [weights, jnp.zeros((b, 1), weights.dtype)], axis=1)
+    p_ext = jnp.concatenate(
+        [participate, jnp.zeros((b, 1), participate.dtype)], axis=1)
+    q_ext = None
+    if plan.q_budget is not None:
+        qb = jnp.asarray(plan.q_budget, jnp.int32)
+        if not stacked and qb.ndim == 1:
+            qb = jnp.broadcast_to(qb[None], (b, k))
+        q_ext = jnp.concatenate([qb, jnp.zeros((b, 1), jnp.int32)], axis=1)
+
+    def take_rows(x, ids):
+        # ids [W] (shared plan) or [B, W] (stacked): per-cohort row gather
+        if ids.ndim == 1:
+            return x[:, ids]
+        idx = ids.reshape(ids.shape + (1,) * (x.ndim - 2))
+        return jnp.take_along_axis(x, idx, axis=1)
+
+    def body(inbox, xs):
+        ids, mask, par = xs
+        mask_b = (mask if mask.ndim == 2
+                  else jnp.broadcast_to(mask, (b,) + mask.shape))
+        gamma_out, e_new, stats = lvl(
+            take_rows(g_ext, ids), take_rows(inbox, ids),
+            take_rows(e_ext, ids), take_rows(w_ext, ids),
+            take_rows(p_ext, ids), global_mask,
+            None if q_ext is None else take_rows(q_ext, ids), mask_b)
+        scatter = lambda ib, go, pr, mk: ib.at[pr].add(go * mk[:, None])
+        par_ax = 0 if par.ndim == 2 else None
+        inbox = jax.vmap(scatter, in_axes=(0, 0, par_ax, 0))(
+            inbox, gamma_out, par, mask_b)
+        return inbox, (e_new, stats)
+
+    r_sinks = plan.num_sinks
+    lead = lambda x: (jnp.moveaxis(jnp.asarray(x), 1, 0) if stacked
+                      else jnp.asarray(x))
+    inbox0 = jnp.zeros((b, k + r_sinks + 1, d), grads.dtype)
+    inbox, (e_lvl, st_lvl) = jax.lax.scan(
+        body, inbox0,
+        (lead(plan.node_id), lead(plan.slot_mask), lead(plan.parent_row)))
+
+    # scan outputs are [L, B, W, ...] → cohort-major [B, L*W, ...] →
+    # per-cohort client index order via flat_pos
+    pos = jnp.asarray(plan.flat_pos)
+
+    def reorder(x):
+        flat = jnp.moveaxis(x, 1, 0).reshape((b, -1) + x.shape[3:])
+        if pos.ndim == 1:
+            return flat[:, pos]
+        idx = pos.reshape(pos.shape + (1,) * (flat.ndim - 2))
+        return jnp.take_along_axis(flat, idx, axis=1)
+
+    e_new = reorder(e_lvl)
+    stats = jax.tree.map(reorder, st_lvl)
+    agg = inbox[:, k] if r_sinks == 1 else inbox[:, k:k + r_sinks]
     return RoundResult(aggregate=agg, e_new=e_new, stats=stats)

@@ -284,10 +284,16 @@ def _stats_no_gmask(cfg: AggConfig, d: int, nnz: Array,
 
 
 def _stats_gmask(cfg: AggConfig, d: int, gm: Array, nnz: Array,
-                 nnz_off: Array, e_new: Array) -> HopStats:
+                 nnz_off: Array, e_new: Array, cohorts: int = 0) -> HopStats:
     if gm.ndim == 1:       # lane-shared mask: one count, broadcast
         nz_g = jnp.broadcast_to(jnp.sum(gm > 0).astype(jnp.int32),
                                 nnz.shape)
+    elif cohorts and gm.shape[0] != nnz.shape[0]:
+        # cohort-shared [B, d] mask over B*W cohort-major lanes: one count
+        # per cohort, tiled to its W lanes — the same per-row reduction the
+        # sequential lane-shared branch runs, so bitwise comparable
+        nz_gc = jnp.sum(gm > 0, axis=-1).astype(jnp.int32)
+        nz_g = jnp.repeat(nz_gc, nnz.shape[0] // cohorts)
     else:
         nz_g = jax.vmap(
             lambda m: jnp.sum(m > 0).astype(jnp.int32))(gm)
@@ -296,7 +302,20 @@ def _stats_gmask(cfg: AggConfig, d: int, gm: Array, nnz: Array,
                     err_sq=_lane_err_sq(e_new))
 
 
-def _fused_level_sia(cfg, g, gam, e, w, p, gm, qb, valid):
+def _gm_rows(gm: Array, lanes: int, cohorts: int) -> Array:
+    """Per-lane-broadcastable view of the gmask for jnp-side level math.
+
+    A cohort-shared [B, d] mask (``cohorts=B``, lanes cohort-major) is
+    expanded lazily to [lanes, d] — XLA fuses the equal-repeat broadcast,
+    nothing lands in HBM; the kernels keep streaming the compact [B, d]
+    form through their cohort-shared block spec.
+    """
+    if cohorts and gm.ndim == 2 and gm.shape[0] != lanes:
+        return jnp.repeat(gm, lanes // cohorts, axis=0)
+    return gm
+
+
+def _fused_level_sia(cfg, g, gam, e, w, p, gm, qb, valid, cohorts=0):
     d = g.shape[-1]
     gt = w[:, None] * g + e
     mask, tau = _local_mask_tau(cfg, gt, cfg.q, p, qb)
@@ -307,7 +326,7 @@ def _fused_level_sia(cfg, g, gam, e, w, p, gm, qb, valid):
     return gout, e_new, _stats_no_gmask(cfg, d, nnz, e_new)
 
 
-def _fused_level_re_sia(cfg, g, gam, e, w, p, gm, qb, valid):
+def _fused_level_re_sia(cfg, g, gam, e, w, p, gm, qb, valid, cohorts=0):
     d = g.shape[-1]
     gt = w[:, None] * g + e
     m_in = sp.support(gam)
@@ -324,28 +343,31 @@ def _fused_level_re_sia(cfg, g, gam, e, w, p, gm, qb, valid):
     return gout, e_new, _stats_no_gmask(cfg, d, nnz, e_new)
 
 
-def _fused_level_tc_sia(cfg, g, gam, e, w, p, gm, qb, valid):
+def _fused_level_tc_sia(cfg, g, gam, e, w, p, gm, qb, valid, cohorts=0):
     d = g.shape[-1]
+    gme = _gm_rows(gm, g.shape[0], cohorts)
     gt = w[:, None] * g + e
-    m_k, tau = _local_mask_tau(cfg, (1 - gm) * gt, cfg.q_local,
+    m_k, tau = _local_mask_tau(cfg, (1 - gme) * gt, cfg.q_local,
                                jnp.ones_like(p), qb)
-    m_in = jnp.clip(sp.support(gam) - gm, 0, 1)
+    m_in = jnp.clip(sp.support(gam) - gme, 0, 1)
     if m_k is None:
         # threshold impl: materialize the local mask to union it with the
         # global/incoming masks (matches the unfused topq_mask_fn exactly)
-        x = (1 - gm) * gt
+        x = (1 - gme) * gt
         m_k = (jnp.abs(x) >= tau[:, None]).astype(x.dtype)
         tau = _lane_inf(g.shape[0])
-    mm = sp.mask_union(gm, m_k, m_in)
+    mm = sp.mask_union(gme, m_k, m_in)
     mask = mm * p[:, None]
     gbar, e_new, _ = kops.sparsify_ef_level(g, e, mask, w, tau, valid,
                                             mode=cfg.kernel_mode)
     gout, nnz, nnz_off = kops.chain_accum_level(gam, gbar, valid, gm,
+                                                gmask_cohorts=cohorts,
                                                 mode=cfg.kernel_mode)
-    return gout, e_new, _stats_gmask(cfg, d, gm, nnz, nnz_off, e_new)
+    return gout, e_new, _stats_gmask(cfg, d, gm, nnz, nnz_off, e_new,
+                                     cohorts)
 
 
-def _fused_level_cl_sia(cfg, g, gam, e, w, p, gm, qb, valid):
+def _fused_level_cl_sia(cfg, g, gam, e, w, p, gm, qb, valid, cohorts=0):
     d = g.shape[-1]
     gt = w[:, None] * g + e
     gamma_t = p[:, None] * gt + gam
@@ -356,16 +378,18 @@ def _fused_level_cl_sia(cfg, g, gam, e, w, p, gm, qb, valid):
     return gout, e_new, _stats_no_gmask(cfg, d, nnz, e_new)
 
 
-def _fused_level_cl_tc_sia(cfg, g, gam, e, w, p, gm, qb, valid):
+def _fused_level_cl_tc_sia(cfg, g, gam, e, w, p, gm, qb, valid, cohorts=0):
     d = g.shape[-1]
+    gme = _gm_rows(gm, g.shape[0], cohorts)
     gt = w[:, None] * g + e
-    lam_t = (1 - gm) * (p[:, None] * gt + gam)
+    lam_t = (1 - gme) * (p[:, None] * gt + gam)
     mask, tau = _local_mask_tau(cfg, lam_t, cfg.q_local, jnp.ones_like(p),
                                 qb)
     gout, e_new, nnz, nnz_off = kops.cl_fuse_level(
         g, e, gam, w, tau, p, valid, gmask=gm, mask_in=mask,
-        mode=cfg.kernel_mode)
-    return gout, e_new, _stats_gmask(cfg, d, gm, nnz, nnz_off, e_new)
+        gmask_cohorts=cohorts, mode=cfg.kernel_mode)
+    return gout, e_new, _stats_gmask(cfg, d, gm, nnz, nnz_off, e_new,
+                                     cohorts)
 
 
 _FUSED_LEVEL = {
@@ -378,18 +402,20 @@ _FUSED_LEVEL = {
 
 
 def _run_fused_level(cfg, g, gamma_in, e, weight, participate, global_mask,
-                     q_budget, valid):
+                     q_budget, valid, cohorts=0):
     w_lanes = g.shape[0]
     # a 1-D (lane-shared) TCS mask stays 1-D all the way into the kernels:
     # the level kernels stream it once per block (shared block spec)
-    # instead of materializing a [W, d] broadcast in HBM
+    # instead of materializing a [W, d] broadcast in HBM; a cohort-shared
+    # [B, d] mask (``cohorts=B``, lanes cohort-major) likewise streams
+    # through the cohort block spec
     gm = _f32(global_mask)
     qb = None if q_budget is None else jnp.asarray(q_budget, jnp.int32)
     v = (jnp.ones((w_lanes,), jnp.float32) if valid is None
          else _f32(valid))
     gout, e_new, stats = _FUSED_LEVEL[cfg.kind](
         cfg, _f32(g), _f32(gamma_in), _f32(e), _f32(weight),
-        _f32(participate), gm, qb, v)
+        _f32(participate), gm, qb, v, cohorts)
     # padding lanes count nothing — the kernels already zero their outputs
     # and nnz accumulators, but the jnp-side global-mask word count
     # (nnz_global → bits) is lane-agnostic and must be masked to keep the
@@ -636,5 +662,57 @@ def level_step(cfg: AggConfig):
             stats = jax.tree.map(
                 lambda s: jnp.where(ok, s, jnp.zeros_like(s)), stats)
         return gamma_out, e_new, stats
+
+    return run
+
+
+def level_step_batched(cfg: AggConfig):
+    """Whole-level node step over a cohort batch — one launch for B levels.
+
+    Signature::
+
+        fn(g [B,W,d], gamma_in [B,W,d], e [B,W,d], weight [B,W],
+           participate [B,W],
+           global_mask ([B,d] cohort-shared or [B,W,d] per-lane),
+           q_budget ([B,W]|None), valid ([B,W]|None))
+          -> (gamma_out [B,W,d], e_new [B,W,d], HopStats [B,W])
+
+    B shape-identical cohorts flatten **cohort-major** to ``B*W`` lanes
+    (cohort b owns lanes ``b*W .. (b+1)*W-1``) and run through a single
+    :func:`level_step` launch — on the fused path that is ONE
+    ``pallas_call`` per kernel stage for all cohorts, with per-cohort TC
+    global masks streamed compact ([B, d], cohort-shared block spec)
+    rather than vmapping the pallas_call. Every lane's math is row
+    independent, so the result is bitwise identical, per cohort, to B
+    sequential ``level_step`` calls (tests/test_batched_rounds.py pins
+    this in interpret mode).
+    """
+    run1 = level_step(cfg)
+
+    def run(g, gamma_in, e, weight, participate, global_mask,
+            q_budget=None, valid=None):
+        b, w, d = g.shape
+        lanes = b * w
+
+        def fl(x):
+            return None if x is None else x.reshape((lanes,) + x.shape[2:])
+
+        cohort_gm = getattr(global_mask, "ndim", 2) == 2   # [B, d]
+        gf, gamf, ef = fl(g), fl(gamma_in), fl(e)
+        wf, pf = fl(weight), fl(participate)
+        qbf, vf = fl(q_budget), fl(valid)
+        if cohort_gm and fused_node_steps(cfg, weight, g, e, gamma_in):
+            gout, e_new, stats = _run_fused_level(
+                cfg, gf, gamf, ef, wf, pf, _f32(global_mask), qbf, vf,
+                cohorts=b)
+        else:
+            gm = (jnp.repeat(global_mask, w, axis=0) if cohort_gm
+                  else fl(global_mask))
+            gout, e_new, stats = run1(gf, gamf, ef, wf, pf, gm, qbf, vf)
+
+        def unfl(x):
+            return x.reshape((b, w) + x.shape[1:])
+
+        return unfl(gout), unfl(e_new), jax.tree.map(unfl, stats)
 
     return run

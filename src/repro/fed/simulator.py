@@ -38,7 +38,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.agg import (AggPlan, NestedPlan, TopologySchedule, compile_nested,
-                       compile_plan, execute, execute_nested, zero_stage_ef)
+                       compile_plan, execute, execute_batched, execute_nested,
+                       zero_stage_ef)
 from repro.configs.paper_mnist import PaperConfig
 from repro.core import tcs as tcs_mod
 from repro.core.algorithms import AggConfig, AggKind
@@ -321,6 +322,239 @@ class Simulator:
             return new_state, log
 
         return one_round
+
+    # -- batched multi-tenant rounds -----------------------------------------
+
+    def init_batched(self, seeds) -> SimState:
+        """Stacked :class:`SimState` for B cohorts (leading cohort axis on
+        every leaf except the shared round counter)."""
+        if self._nested is not None:
+            raise ValueError("batched rounds run flat plans; nested "
+                             "topologies aggregate per cohort")
+        states = [self.init(int(s)) for s in seeds]
+        return SimState(
+            round=jnp.int32(0),
+            flat_w=jnp.stack([s.flat_w for s in states]),
+            ef=jnp.stack([s.ef for s in states]),
+            tcs_prev=jnp.stack([s.tcs_prev for s in states]),
+            rng=jnp.stack([s.rng for s in states]))
+
+    def round_fn_batched(self) -> Callable:
+        """Cohort-batched round closure — B tenants through ONE launch.
+
+        ``(state [B-stacked], plan, participate [B, K] | None) -> (state,
+        log)``. The aggregation rides :func:`repro.agg.execute_batched`
+        (host) / :func:`repro.agg.device.execute_sharded_batched` (device),
+        so B cohorts cost one executor launch — one ``pallas_call`` per
+        fused level, one collective wavefront per level on devices — while
+        per-cohort EF, §V HopStats, and model trajectories stay exactly
+        separated (bitwise equal per cohort to the sequential round on the
+        same inputs; see tests/test_batched_rounds.py).
+        """
+        pc, agg_cfg, k = self.pc, self.agg, self.k
+        fed, weights, lr = self.fed, self.weights, self.local_lr
+        needs_tcs = agg_cfg.kind in (AggKind.TC_SIA, AggKind.CL_TC_SIA)
+        mesh = self._mesh
+        if mesh is None:
+            run_batch = execute_batched
+        else:
+            from repro.agg.device import execute_sharded_batched
+
+            def run_batch(cfg, plan, g, e, w, *, global_mask=None,
+                          participate=None):
+                return execute_sharded_batched(cfg, plan, g, e, w,
+                                               mesh=mesh,
+                                               global_mask=global_mask,
+                                               participate=participate)
+
+        trace_counter = self.trace_counter
+
+        def one_round(state: SimState, plan: AggPlan,
+                      participate: Optional[Array] = None):
+            trace_counter.bump()        # runs at trace time only
+            b = state.flat_w.shape[0]
+            keys = jax.vmap(jax.random.split)(state.rng)   # [B, 2, 2]
+            rng, kb = keys[:, 0], keys[:, 1]
+
+            def cohort_grads(flat_w, key):
+                params = unflatten_lr(flat_w, pc)
+                bx, by = client_minibatch(fed, key, pc.batch_size)
+
+                def client_grad(x, y):
+                    gr = jax.grad(lr_loss)(params, x, y)
+                    return -lr * flatten_lr(gr)
+
+                return jax.vmap(client_grad)(bx, by)
+
+            g = jax.vmap(cohort_grads)(state.flat_w, kb)   # [B, K, d]
+
+            global_mask = None
+            tcs_prev = state.tcs_prev
+            if needs_tcs:
+                global_mask = jax.vmap(
+                    lambda prev, w: tcs_mod.global_mask(
+                        tcs_mod.TCSState(prev), w, agg_cfg.q_global))(
+                            tcs_prev, state.flat_w)        # [B, d]
+                tcs_prev = state.flat_w
+
+            res = run_batch(agg_cfg, plan, g, state.ef,
+                            jnp.broadcast_to(weights, (b, k)),
+                            global_mask=global_mask,
+                            participate=participate)
+
+            alive = jnp.asarray(plan.alive, weights.dtype)
+            alive = jnp.broadcast_to(alive, (b, k))        # [K] | [B, K]
+            part = alive if participate is None else participate * alive
+            d_total = jnp.maximum(
+                jnp.sum(weights * part, axis=1), 1e-9)     # [B]
+            flat_new = state.flat_w + res.aggregate / d_total[:, None]
+
+            new_state = SimState(round=state.round + 1, flat_w=flat_new,
+                                 ef=res.e_new, tcs_prev=tcs_prev, rng=rng)
+            xs = fed.x.reshape(-1, pc.input_dim)
+            ys = fed.y.reshape(-1)
+            log = RoundLog(
+                loss=jax.vmap(lambda w: lr_loss(unflatten_lr(w, pc),
+                                                xs, ys))(flat_new),
+                stats=(res.stats,),                        # leaves [B, K]
+                participation=part,
+                ef_mass=banked_mass(res.e_new),            # [B, K]
+                stage_ef_mass=(),
+                ef_dead_mass=jax.vmap(dead_banked_mass)(res.e_new, part),
+            )
+            return new_state, log
+
+        return one_round
+
+    def run_batched(self, rounds: int, *, seeds, eval_every: int = 10,
+                    test_x: Optional[Array] = None,
+                    test_y: Optional[Array] = None,
+                    participate_fn: Optional[Callable] = None,
+                    failure_schedule: Optional[FailureSchedule] = None,
+                    order_fn: Optional[Callable] = None,
+                    topology_schedule: Optional[TopologySchedule] = None,
+                    collector=None, flush_every: int = 32):
+        """Train B independent cohorts through batched rounds → per-cohort
+        curves.
+
+        ``seeds`` (length B) initializes one model/data stream per cohort;
+        all cohorts share the constellation (the per-round plan sources
+        behave exactly as in :meth:`run`) and every round is ONE batched
+        launch. The jitted round specializes once per plan *shape* — the
+        cohort count rides the same specialization, audited by
+        ``trace_counter`` exactly like the sequential loop. ``collector``
+        records one round record per cohort per round, tagged with
+        ``cohort=i`` (trace schema 1.1), so telemetry stays queryable per
+        tenant. Returns ``{"state", "loss" [rounds][B], "bits" [rounds][B],
+        "nnz" [rounds][B], "accuracy" [(round, [B])]}``.
+        """
+        seeds = list(seeds)
+        b = len(seeds)
+        state = self.init_batched(seeds)
+        topo = self.tree_topology
+        if failure_schedule is not None and topo is None:
+            raise ValueError("failure_schedule needs tree_topology (chain "
+                             "failures go through participate_fn + order_fn)")
+        if order_fn is not None and (topo is not None
+                                     or topology_schedule is not None):
+            raise ValueError("order_fn is a chain-mode knob; trees and "
+                             "schedules carry their own topology")
+        if topology_schedule is not None and topo is not None:
+            raise ValueError("pass either tree_topology or "
+                             "topology_schedule, not both")
+        if (topology_schedule is not None and len(topology_schedule)
+                and isinstance(topology_schedule.plan_at(0), NestedPlan)):
+            raise ValueError("batched rounds run flat plans; nested "
+                             "topologies aggregate per cohort")
+
+        step = jax.jit(self.round_fn_batched())
+        cache = _PlanCache(self.k)
+
+        def plan_for(r: int, state: SimState) -> tuple:
+            if topology_schedule is not None:
+                raw = topology_schedule.raw_at(r)
+                return (topology_schedule.plan_at(r),
+                        raw if hasattr(raw, "uplink_bw_bps") else None)
+            if topo is not None:
+                dead = (tuple(failure_schedule.dead_at(r))
+                        if failure_schedule is not None else ())
+                key = ("tree", dead)
+                plan = cache.get(key, lambda: topo.tree(dead=dead))
+                return plan, cache.raw(key)
+            if order_fn is not None:
+                order = np.asarray(order_fn(r, state), np.int32)
+                return cache.get(("order", tuple(order.tolist())),
+                                 lambda: order), None
+            return cache.get(("chain",), lambda: self.k), None
+
+        if collector is not None:
+            collector.configure(
+                cfg=self.agg, d=self.d, num_clients=self.k,
+                backend=self.backend, cohorts=b,
+                topology=("schedule" if topology_schedule is not None
+                          else "tree" if topo is not None
+                          else "order" if order_fn is not None else "chain"))
+
+        timer = PhaseTimer()
+        buf = RoundBuffer()
+        pending: list = []
+        accs, losses, bits, nnzs = [], [], [], []
+        run_t0 = time.perf_counter()
+
+        def flush():
+            t0 = time.perf_counter()
+            logs = _fetch_logs(buf)
+            dur = time.perf_counter() - t0
+            if collector is not None and logs:
+                collector.record_span("flush", t0 - run_t0, dur,
+                                      track="simulator",
+                                      args={"rounds": len(logs)})
+            for (log, acc), (r, plan, tree, retraces, phases) in zip(
+                    logs, pending):
+                losses.append(np.asarray(log.loss).tolist())
+                st0 = log.stats[0]
+                bits.append(np.sum(np.asarray(st0.bits), axis=-1).tolist())
+                nnzs.append(np.sum(np.asarray(st0.nnz_out),
+                                   axis=-1).tolist())
+                if acc is not None:
+                    accs.append((r, np.asarray(acc).tolist()))
+                if collector is not None:
+                    for i in range(b):
+                        coh = jax.tree.map(lambda x: np.asarray(x)[i],
+                                           log.stats[0])
+                        collector.record_round(
+                            r, coh, plan=plan, tree=tree,
+                            loss=np.asarray(log.loss)[i],
+                            participate=np.asarray(log.participation)[i],
+                            ef_mass=np.asarray(log.ef_mass)[i],
+                            ef_dead_mass=np.asarray(log.ef_dead_mass)[i],
+                            retraces=retraces, phases=phases, cohort=i)
+            del pending[:]
+
+        for r in range(rounds):
+            with timer.phase("plan"):
+                plan, tree = plan_for(r, state)
+                part = None
+                if participate_fn is not None:
+                    part = jnp.asarray(participate_fn(r, state))
+                    if part.ndim == 1:     # one mask for every cohort
+                        part = jnp.broadcast_to(part, (b, self.k))
+            with timer.phase("dispatch"):
+                state, log = step(state, plan, part)
+                acc = None
+                if test_x is not None and (r % eval_every == 0
+                                           or r == rounds - 1):
+                    acc = jax.vmap(
+                        lambda w: lr_accuracy(unflatten_lr(w, self.pc),
+                                              test_x, test_y))(state.flat_w)
+            buf.push((log, acc))
+            pending.append((r, plan, tree, self.trace_counter.count,
+                            timer.take()))
+            if len(buf) >= max(1, flush_every):
+                flush()
+        flush()
+        return {"state": state, "loss": losses, "bits": bits, "nnz": nnzs,
+                "accuracy": accs}
 
     # -- host loop ------------------------------------------------------------
     def run(self, rounds: int, *, seed: int = 0, eval_every: int = 10,

@@ -15,6 +15,14 @@ executors' masked scatter-adds no-ops. The DMA for a skipped lane still
 runs (block specs are static); the saved work is the VPU math and the
 output traffic semantics stay identical to computing on the zero dummy row.
 
+Cohort batching (multi-tenant rounds) flattens B shape-identical levels
+into one launch: lanes are laid out cohort-major (``[B*W, d]`` — cohort b
+owns lanes ``b*W .. (b+1)*W-1``) so the same ``(lanes, blocks)`` grid
+serves all B cohorts in a **single** ``pallas_call``. Per-cohort TC global
+masks stay compact ``[B, d]`` in HBM: ``gmask_cohorts=B`` selects a
+cohort-shared block spec whose index map sends lane ``w`` to tile
+``w // (lanes // B)`` — no ``[B*W, d]`` broadcast, no vmap-of-pallas_call.
+
 ``cl_fuse_level`` is the whole CL-family node step (Algorithms 3 and 5,
 stragglers included) in a single pass:
 
@@ -76,8 +84,37 @@ def _blk_shared():
     return pl.BlockSpec((1, SUBLANES, LANES), lambda w, j: (j, 0, 0))
 
 
+def _blk_cohort(lanes_per_cohort: int):
+    # block index maps lane w to its cohort w // lanes_per_cohort: with
+    # lanes flattened cohort-major, every lane of a cohort reads the SAME
+    # tile of that cohort's [d] mask — stored once per cohort as [B, d],
+    # never broadcast to [B*W, d] in HBM
+    return pl.BlockSpec((1, 1, SUBLANES, LANES),
+                        lambda w, j: (w // lanes_per_cohort, j, 0, 0))
+
+
 def _lane():
     return pl.BlockSpec((1,), lambda w, j: (w,))
+
+
+def _gmask_operand(gmask, w_lanes: int, gmask_cohorts: int, n_blocks: int,
+                   pad: int):
+    """Pick the (padded operand, block spec) for a TC global mask.
+
+    [d] → lane-shared; [B, d] with ``gmask_cohorts == B`` → cohort-shared
+    (requires ``w_lanes % B == 0``); [W, d] → per-lane.
+    """
+    if gmask.ndim == 1:
+        return _pad_shared(gmask.astype(jnp.float32), n_blocks, pad), \
+            _blk_shared()
+    if gmask_cohorts:
+        if gmask.shape[0] != gmask_cohorts or w_lanes % gmask_cohorts:
+            raise ValueError(
+                f"cohort gmask {gmask.shape} incompatible with "
+                f"{w_lanes} lanes / {gmask_cohorts} cohorts")
+        return _pad_lanes(gmask.astype(jnp.float32), n_blocks, pad), \
+            _blk_cohort(w_lanes // gmask_cohorts)
+    return _pad_lanes(gmask.astype(jnp.float32), n_blocks, pad), _blk()
 
 
 # ---------------------------------------------------------------------------
@@ -192,16 +229,19 @@ def _chain_accum_level_kernel(gin_ref, gbar_ref, v_ref, *rest,
         gout_ref[...] = jnp.zeros_like(gout_ref)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("gmask_cohorts", "interpret"))
 def chain_accum_level_pallas(gamma_in, gbar, valid, gmask=None, *,
+                             gmask_cohorts: int = 0,
                              interpret: bool = False):
     """Batched γ_out = γ_in + ḡ with fused counts.
 
     gamma_in, gbar: [W,d]; valid: [W]; gmask (optional): the TCS global
-    mask — per-lane [W,d], or lane-shared [d] (streamed once per block,
-    not broadcast); when given, ``nnz_off`` counts the off-mask support
-    ``#{γ_out ≠ 0 ∧ m = 0}`` (the §V locally-indexed part); without it,
-    ``nnz_off == nnz``. Returns (γ_out [W,d], nnz [W] i32, nnz_off [W] i32).
+    mask — per-lane [W,d], lane-shared [d] (streamed once per block, not
+    broadcast), or cohort-shared [B,d] with ``gmask_cohorts=B`` (lanes
+    flattened cohort-major); when given, ``nnz_off`` counts the off-mask
+    support ``#{γ_out ≠ 0 ∧ m = 0}`` (the §V locally-indexed part);
+    without it, ``nnz_off == nnz``.
+    Returns (γ_out [W,d], nnz [W] i32, nnz_off [W] i32).
     """
     w_lanes, d = gamma_in.shape
     n_blocks, pad = _geometry(d)
@@ -211,14 +251,10 @@ def chain_accum_level_pallas(gamma_in, gbar, valid, gmask=None, *,
     operands = [gi, gb, valid.astype(jnp.float32)]
     in_specs = [_blk(), _blk(), _lane()]
     if has_gmask:
-        if gmask.ndim == 1:
-            operands.append(_pad_shared(gmask.astype(jnp.float32),
-                                        n_blocks, pad))
-            in_specs.append(_blk_shared())
-        else:
-            operands.append(_pad_lanes(gmask.astype(jnp.float32), n_blocks,
-                                       pad))
-            in_specs.append(_blk())
+        op, spec = _gmask_operand(gmask, w_lanes, gmask_cohorts, n_blocks,
+                                  pad)
+        operands.append(op)
+        in_specs.append(spec)
 
     gout, nnz, nnz_off = pl.pallas_call(
         functools.partial(_chain_accum_level_kernel, has_gmask=has_gmask),
@@ -297,15 +333,17 @@ def _cl_fuse_level_kernel(g_ref, e_ref, gin_ref, w_ref, tau_ref, p_ref,
         enew_ref[...] = jnp.zeros_like(enew_ref)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("gmask_cohorts", "interpret"))
 def cl_fuse_level_pallas(g, e, gamma_in, weight, tau, participate, valid,
                          gmask=None, mask_in=None, *,
+                         gmask_cohorts: int = 0,
                          interpret: bool = False):
     """Batched complete CL node step (Algs 3/5, stragglers included).
 
     g, e, gamma_in: [W,d]; weight, tau, participate, valid: [W];
     gmask (optional): TCS global mask m (Alg 5; None = Alg 3) — per-lane
-    [W,d] or lane-shared [d] (streamed once per block, not broadcast);
+    [W,d], lane-shared [d] (streamed once per block, not broadcast), or
+    cohort-shared [B,d] with ``gmask_cohorts=B`` (lanes cohort-major);
     mask_in (optional, [W,d]): precomputed keep mask OR-ed with the τ test
     (pass τ=+inf for a pure-mask exact sparsifier).
 
@@ -324,14 +362,10 @@ def cl_fuse_level_pallas(g, e, gamma_in, weight, tau, participate, valid,
                 valid.astype(jnp.float32)]
     in_specs = [_blk(), _blk(), _blk(), _lane(), _lane(), _lane(), _lane()]
     if has_gmask:
-        if gmask.ndim == 1:
-            operands.append(_pad_shared(gmask.astype(jnp.float32), n_blocks,
-                                        pad))
-            in_specs.append(_blk_shared())
-        else:
-            operands.append(_pad_lanes(gmask.astype(jnp.float32), n_blocks,
-                                       pad))
-            in_specs.append(_blk())
+        op, spec = _gmask_operand(gmask, w_lanes, gmask_cohorts, n_blocks,
+                                  pad)
+        operands.append(op)
+        in_specs.append(spec)
     if has_mask:
         operands.append(_pad_lanes(mask_in.astype(jnp.float32), n_blocks,
                                    pad))

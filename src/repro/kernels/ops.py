@@ -101,18 +101,24 @@ def sparsify_ef_level(g, e, mask_in, weight, tau, valid, *,
 
 
 def chain_accum_level(gamma_in, gbar, valid, gmask=None, *,
-                      mode: Mode = "auto"):
-    """Batched IA combine with fused (total, off-global-mask) counts."""
+                      gmask_cohorts: int = 0, mode: Mode = "auto"):
+    """Batched IA combine with fused (total, off-global-mask) counts.
+
+    ``gmask_cohorts=B`` marks a cohort-shared [B, d] gmask for lanes laid
+    out cohort-major (the multi-tenant batched round path).
+    """
     use, interp = _resolve(mode)
     if use:
         return chain_accum_level_pallas(gamma_in, gbar, jnp.asarray(valid),
-                                        gmask, interpret=interp)
+                                        gmask, gmask_cohorts=gmask_cohorts,
+                                        interpret=interp)
     return ref.ref_chain_accum_level(gamma_in, gbar, jnp.asarray(valid),
-                                     gmask)
+                                     gmask, gmask_cohorts=gmask_cohorts)
 
 
 def cl_fuse_level(g, e, gamma_in, weight, tau, participate, valid,
-                  gmask=None, mask_in=None, *, mode: Mode = "auto"):
+                  gmask=None, mask_in=None, *, gmask_cohorts: int = 0,
+                  mode: Mode = "auto"):
     """Batched complete CL node step (Algs 3/5, stragglers included)."""
     use, interp = _resolve(mode)
     if use:
@@ -120,10 +126,12 @@ def cl_fuse_level(g, e, gamma_in, weight, tau, participate, valid,
                                     jnp.asarray(tau),
                                     jnp.asarray(participate),
                                     jnp.asarray(valid), gmask, mask_in,
+                                    gmask_cohorts=gmask_cohorts,
                                     interpret=interp)
     return ref.ref_cl_fuse_level(g, e, gamma_in, jnp.asarray(weight),
                                  jnp.asarray(tau), jnp.asarray(participate),
-                                 jnp.asarray(valid), gmask, mask_in)
+                                 jnp.asarray(valid), gmask, mask_in,
+                                 gmask_cohorts=gmask_cohorts)
 
 
 def count_ge_level(x: jax.Array, taus: jax.Array, *, mode: Mode = "auto"):

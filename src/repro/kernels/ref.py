@@ -92,8 +92,23 @@ def ref_sparsify_ef_level(g, e, mask_in, weight, tau, valid):
     return gbar.astype(g.dtype), e_new.astype(e.dtype), nnz
 
 
-def ref_chain_accum_level(gamma_in, gbar, valid, gmask=None):
+def _expand_gmask(gmask, lanes: int, gmask_cohorts: int):
+    """Cohort-shared [B, d] gmask → per-lane [lanes, d] (cohort-major).
+
+    Broadcast semantics only — values are replicated, so results are
+    bitwise identical to the sequential per-cohort [d]-shared call.
+    """
+    if gmask is None or not gmask_cohorts or gmask.ndim != 2:
+        return gmask
+    if gmask.shape[0] == lanes:
+        return gmask
+    return jnp.repeat(gmask, lanes // gmask.shape[0], axis=0)
+
+
+def ref_chain_accum_level(gamma_in, gbar, valid, gmask=None, *,
+                          gmask_cohorts: int = 0):
     """Batched :func:`ref_chain_accum` + off-global-mask support count."""
+    gmask = _expand_gmask(gmask, gamma_in.shape[0], gmask_cohorts)
     gamma = gamma_in.astype(jnp.float32) + gbar.astype(jnp.float32)
     gamma = _apply_valid(valid, gamma)
     nz = gamma != 0
@@ -106,12 +121,13 @@ def ref_chain_accum_level(gamma_in, gbar, valid, gmask=None):
 
 
 def ref_cl_fuse_level(g, e, gamma_in, weight, tau, participate, valid,
-                      gmask=None, mask_in=None):
+                      gmask=None, mask_in=None, *, gmask_cohorts: int = 0):
     """Batched complete CL node step (Algorithms 3/5 with stragglers).
 
     See :func:`repro.kernels.level.cl_fuse_level_pallas` for the math.
     Returns (γ_out [W,d], e' [W,d], nnz [W] i32, nnz_off [W] i32).
     """
+    gmask = _expand_gmask(gmask, g.shape[0], gmask_cohorts)
     w = weight[:, None].astype(jnp.float32)
     p = participate[:, None].astype(jnp.float32)
     gt = w * g.astype(jnp.float32) + e.astype(jnp.float32)

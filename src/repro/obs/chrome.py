@@ -106,15 +106,18 @@ def chrome_events(records: Iterable[dict], *, gap_frac: float = 0.1) -> list:
                         continue          # skipped hop (stub / zero bw)
                     ensure_thread(pid, i,
                                   f"{'client' if s == 0 else 'unit'} {i}")
+                    ev_args = {"round": rnd, "bits": st["bits"][i],
+                               "nnz": st["nnz"][i],
+                               "err_sq": st["err_sq"][i]}
+                    if "cohort" in rec:        # multi-tenant batched round
+                        ev_args["cohort"] = rec["cohort"]
                     events.append({
                         "ph": "X", "cat": "hop",
                         "name": f"r{rnd} L{levels[i]} hop {i}",
                         "pid": pid, "tid": i,
                         "ts": (cursor + a) * SIM_SCALE_US,
                         "dur": max((b - a) * SIM_SCALE_US, 0.01),
-                        "args": {"round": rnd, "bits": st["bits"][i],
-                                 "nnz": st["nnz"][i],
-                                 "err_sq": st["err_sq"][i]},
+                        "args": ev_args,
                     })
                     t_end = max(t_end, cursor + b)
             # round boundary marker (instant event on stage 0)

@@ -150,7 +150,8 @@ class TraceCollector:
                      loss=None, participate=None, ef_mass=None,
                      stage_ef_mass: Sequence = (), ef_dead_mass=None,
                      retraces: Optional[int] = None,
-                     phases: Optional[dict] = None) -> Optional[dict]:
+                     phases: Optional[dict] = None,
+                     cohort=None) -> Optional[dict]:
         """Record one aggregation round.
 
         ``stats`` is a :class:`~repro.core.algorithms.HopStats` (leaves
@@ -161,7 +162,12 @@ class TraceCollector:
         ``tree`` (an :class:`~repro.topo.tree.AggTree` with link
         attributes) upgrades stage 0's timeline to the
         :func:`~repro.topo.tree.round_latency_s` link model, which defines
-        ``crit_path_s``.
+        ``crit_path_s``. ``cohort`` tags the record with its tenant id
+        when the round came out of a batched multi-tenant launch
+        (:meth:`repro.fed.simulator.Simulator.run_batched`,
+        :class:`repro.agg.batching.RoundScheduler`) — per-cohort records
+        of one batched round share a ``round`` number and differ only in
+        ``cohort``, so traces stay queryable per tenant.
         """
         if not self.enabled:
             return None
@@ -237,6 +243,9 @@ class TraceCollector:
             out["retraces"] = int(retraces)
         if phases:
             out["phases"] = {k: float(v) for k, v in phases.items()}
+        if cohort is not None:
+            out["cohort"] = (cohort if isinstance(cohort, (int, str))
+                             else str(cohort))
         self._write(out)
         return out
 

@@ -12,8 +12,10 @@ A trace is a JSONL file: one JSON object per line, every line carrying
   per-client EF mass, the dead-client banked-EF metric, the simulated
   per-hop timeline + critical-path latency (the
   :func:`repro.topo.tree.round_latency_s` model when link attributes are
-  known, unit hop times otherwise), the cumulative jit retrace count, and
-  host wall-clock per phase;
+  known, unit hop times otherwise), the cumulative jit retrace count,
+  host wall-clock per phase, and — for multi-tenant batched rounds
+  (schema ≥ 1.1) — the ``cohort`` id the record belongs to, so one trace
+  stays queryable per tenant;
 * ``span`` — a host wall-clock interval (benchmark/simulator phase hooks:
   compile, dispatch, flush, …).
 
@@ -30,7 +32,8 @@ import numpy as np
 
 #: Versioned schema tag carried by every trace line. Bump the suffix when
 #: a record field changes meaning; readers reject unknown majors.
-SCHEMA = "repro.obs.trace/1"
+#: 1.1: round records may carry a ``cohort`` tenant id (batched rounds).
+SCHEMA = "repro.obs.trace/1.1"
 
 _KINDS = ("meta", "round", "span")
 
@@ -245,6 +248,10 @@ def validate_record(obj) -> list:
         for key in ("ef_dead_mass", "crit_path_s", "loss", "retraces"):
             if obj.get(key) is not None and not _is_num(obj[key]):
                 errs.append(f"round.{key} must be a number or null")
+        cohort = obj.get("cohort")
+        if cohort is not None and not (_is_num(cohort)
+                                       or isinstance(cohort, str)):
+            errs.append("round.cohort must be a number or string")
         tot = obj.get("totals")
         if not isinstance(tot, dict) or not all(
                 _is_num(tot.get(key)) for key in ("bits", "nnz", "err_sq")):

@@ -128,10 +128,24 @@ def _hist(values: list, bins: int = 8, width: int = 40) -> list:
             for i, c in enumerate(counts)]
 
 
-def summarize(path: str) -> dict:
-    """Build the summary dict (the ``summary`` subcommand prints it)."""
+def summarize(path: str, *, cohort=None) -> dict:
+    """Build the summary dict (the ``summary`` subcommand prints it).
+
+    ``cohort`` restricts the round records to one tenant of a batched
+    multi-tenant trace (records tagged ``cohort`` by
+    :meth:`~repro.obs.collector.TraceCollector.record_round`).
+    """
     meta, rounds, spans = load_trace(path)
+    cohorts = sorted({r["cohort"] for r in rounds if "cohort" in r},
+                     key=str)
+    if cohort is not None:
+        rounds = [r for r in rounds
+                  if str(r.get("cohort")) == str(cohort)]
     out: dict = {"trace": path, "rounds": len(rounds), "spans": len(spans)}
+    if cohorts:
+        out["cohorts"] = cohorts
+    if cohort is not None:
+        out["cohort"] = cohort
     if meta:
         out["cfg"] = meta.get("cfg", {})
         out["d"] = meta.get("d")
@@ -202,6 +216,10 @@ def summarize(path: str) -> dict:
 
 def print_summary(out: dict) -> None:
     print(f"trace: {out['trace']}")
+    if out.get("cohorts"):
+        sel = (f" (showing cohort {out['cohort']})"
+               if out.get("cohort") is not None else "")
+        print(f"cohorts: {', '.join(str(c) for c in out['cohorts'])}{sel}")
     cfg = out.get("cfg") or {}
     if cfg:
         print(f"  algorithm {cfg.get('kind')}  K={out.get('num_clients')}"
@@ -332,6 +350,8 @@ def main(argv=None) -> int:
     p_sum.add_argument("trace")
     p_sum.add_argument("--json", action="store_true",
                        help="machine-readable output")
+    p_sum.add_argument("--cohort", default=None,
+                       help="restrict to one tenant of a batched trace")
     p_diff = sub.add_parser("diff", help="per-round deltas of two traces")
     p_diff.add_argument("trace_a")
     p_diff.add_argument("trace_b")
@@ -345,7 +365,7 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     if args.cmd == "summary":
-        out = summarize(args.trace)
+        out = summarize(args.trace, cohort=args.cohort)
         if args.json:
             print(json.dumps(out, indent=1, sort_keys=True))
         else:

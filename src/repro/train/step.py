@@ -221,13 +221,23 @@ def _master_from_params(cfg: ModelConfig, mesh, layout: FlatLayout, params,
 
 
 def init_state(cfg: ModelConfig, tc: TrainConfig, mesh, rng,
-               topology: Any = None) -> TrainState:
+               topology: Any = None, cohorts: int = 1) -> TrainState:
     """Materializing init (small models / tests). Dry-run uses eval_shape.
 
     ``topology`` must match the one later given to
     :func:`build_train_step`: a nested topology adds the upper EF tiers
     (``stage_ef``) and lays the flat master out in stage order.
+    ``cohorts=B`` stacks B independently-initialized tenant states (one
+    rng split each) with a leading cohort axis on every leaf — the state
+    :func:`build_train_step` with the same ``cohorts`` consumes.
     """
+    if cohorts > 1:
+        if _resolve_topology(mesh, topology)[1] is not None:
+            raise ValueError("cohort batches run flat topologies; nested "
+                             "plans train per tenant")
+        states = [init_state(cfg, tc, mesh, k, topology)
+                  for k in jax.random.split(rng, cohorts)]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *states)
     layout = make_layout(cfg, mesh)
     k_dp = dp_size(mesh)
     _, nested, n_axes = _resolve_topology(mesh, topology)
@@ -249,15 +259,23 @@ def init_state(cfg: ModelConfig, tc: TrainConfig, mesh, rng,
                       opt=opt, ef=ef, tcs_prev=tcs_prev, stage_ef=stage_ef)
 
 
+def _cohort_spec(spec: P) -> P:
+    """Prepend an unsharded leading cohort axis to a PartitionSpec."""
+    return P(*((None,) + tuple(spec)))
+
+
 def state_shardings(cfg: ModelConfig, tc: TrainConfig, mesh,
-                    topology: Any = None):
+                    topology: Any = None, cohorts: int = 1):
     """NamedSharding pytree matching TrainState (pass the same
-    ``topology`` as :func:`build_train_step`)."""
+    ``topology``/``cohorts`` as :func:`build_train_step` — cohort batches
+    keep every per-tenant leaf replicated along the leading cohort
+    axis)."""
     _, nested, n_axes = _resolve_topology(mesh, topology)
     fs = flat_spec(mesh) if nested is None else nested_flat_spec(mesh,
                                                                  n_axes)
     dp = dp_axes(mesh)
-    ns = lambda s: NamedSharding(mesh, s)
+    coh = _cohort_spec if cohorts > 1 else (lambda s: s)
+    ns = lambda s: NamedSharding(mesh, coh(s))
     p_specs = jax.tree.map(ns, partition.param_pspecs(cfg, mesh),
                            is_leaf=lambda x: isinstance(x, P))
     opt_m = None if tc.opt.name == "sgd" else ns(fs)
@@ -285,8 +303,19 @@ def state_shardings(cfg: ModelConfig, tc: TrainConfig, mesh,
 # ---------------------------------------------------------------------------
 
 def build_train_step(cfg: ModelConfig, tc: TrainConfig, mesh,
-                     topology: Any = None, telemetry: bool = False):
+                     topology: Any = None, telemetry: bool = False,
+                     cohorts: int = 1):
     """Returns train_step(state, batch) → (state, metrics). jit-ready.
+
+    ``cohorts=B`` builds the multi-tenant batched step: ``state`` carries
+    a leading cohort axis on every leaf (:func:`init_state` with the same
+    ``cohorts``), ``batch`` leaves carry ``[B, global_batch, …]``, and the
+    B tenants share one compiled step — phase 1 vmaps the per-client
+    grads, phase 2 rides
+    :func:`repro.agg.device.run_plan_segments_batched` (one ppermute
+    wavefront per level for all cohorts), phase 3 vmaps the flat
+    optimizer. Metrics leaves come back per cohort (``[B]``). Flat
+    topologies only; per cohort the math is the sequential step's.
 
     ``telemetry=True`` adds the fault-exposure metrics the trace
     subsystem records (``ef_mass`` = Σ_k ‖e_k‖₁ over every EF tier,
@@ -317,6 +346,7 @@ def build_train_step(cfg: ModelConfig, tc: TrainConfig, mesh,
     """
     from repro.agg.device import (ring_chain_plan,
                                   run_nested_segments_local,
+                                  run_plan_segments_batched,
                                   run_plan_segments_local)
     from repro.agg.plan import AggPlan, compile_plan
 
@@ -326,6 +356,9 @@ def build_train_step(cfg: ModelConfig, tc: TrainConfig, mesh,
     seg = layout.n_local // k_dp
     agg_cfg = _segment_agg_cfg(tc, mesh, layout.d_flat)
     _, nested_plan, n_axes = _resolve_topology(mesh, topology)
+    if cohorts > 1 and nested_plan is not None:
+        raise ValueError("cohort batches run flat topologies; nested "
+                         "plans train per tenant")
     if nested_plan is not None:
         agg_plan = nested_plan
         fs = nested_flat_spec(mesh, n_axes)
@@ -539,7 +572,131 @@ def build_train_step(cfg: ModelConfig, tc: TrainConfig, mesh,
                                tcs_prev=tcs_prev_new, stage_ef=stage_ef_new)
         return new_state, metrics
 
-    return train_step
+    if cohorts == 1:
+        return train_step
+
+    # ---- cohort-batched step (B tenants, one compiled program) -------------
+    b_coh = cohorts
+
+    def _coh_specs(tree):
+        return jax.tree.map(_cohort_spec, tree,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    fs_b = _cohort_spec(fs)
+
+    def ring_fn_b(grads_tree, ef_l, w_l, part_l, params_tree, prev_tree):
+        col, mask_col = jax.vmap(_col_and_mask)(grads_tree, params_tree,
+                                                prev_tree)
+        final, ef_new, stats = run_plan_segments_batched(
+            agg_cfg, agg_plan, col, ef_l[:, 0], w_l[:, 0], axis=dp,
+            global_mask_local=mask_col, participate=part_l[:, 0],
+            transport="static")
+        stats = jax.tree.map(
+            lambda s: jax.lax.psum(s, tuple(manual_axes)), stats)
+        return final, ef_new[:, None], stats
+
+    def downlink_fn_b(master_l):
+        m_idx = _model_axis_index(mesh)
+        col = (jax.lax.all_gather(master_l, gather_axes, axis=1, tiled=True)
+               if k_dp > 1 else master_l)
+        return jax.vmap(lambda c: layout.treedef.unflatten(
+            layout.local_unflatten(c, m_idx)))(col)
+
+    def train_step_cohorts(state: TrainState, batch: dict):
+        batch = dict(batch)
+        weights = batch.pop("weights", None)
+        participate = batch.pop("participate", None)
+        if weights is None:
+            weights = jnp.full((k_dp,), 1.0 / k_dp, jnp.float32)
+        if participate is None:
+            participate = jnp.ones((k_dp,), jnp.float32)
+        weights = jnp.broadcast_to(weights, (b_coh, k_dp))
+        participate = jnp.broadcast_to(participate, (b_coh, k_dp))
+
+        # phase 1 — per-client grads, one partial-manual shard_map per
+        # cohort (the model axis stays auto inside, which XLA only supports
+        # without a vmapped batch dim; grads are embarrassingly parallel so
+        # looping loses nothing — phase 2 is where cohorts share the wire)
+        g_list, l_list = [], []
+        for i in range(b_coh):
+            params_i = jax.tree.map(lambda p: p[i], state.params)
+            batch_i = jax.tree.map(lambda x: x[i], batch)
+            g_i, l_i = compat.shard_map(
+                per_client,
+                mesh=mesh,
+                in_specs=(jax.tree.map(lambda _: P(), params_i),
+                          jax.tree.map(
+                              lambda l: P(dp, *([None] * (l.ndim - 1))),
+                              batch_i)),
+                out_specs=(jax.tree.map(
+                    lambda l: P(dp, *([None] * l.ndim)), params_i), P()),
+                axis_names=set(dp),
+            )(params_i, batch_i)
+            g_list.append(g_i)
+            l_list.append(l_i)
+        grads_stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *g_list)
+        loss = jnp.stack(l_list)
+
+        # phase 2 — batched ring aggregation: B cohorts, one wavefront
+        params_in = state.params
+        prev_in = state.tcs_prev if needs_tcs else state.params
+        stats_specs = jax.tree.map(lambda _: P(),
+                                   ring_mod.RingStats(0., 0., 0.))
+        agg_flat, ef_new, stats = compat.shard_map(
+            ring_fn_b,
+            mesh=mesh,
+            in_specs=(_coh_specs(layout.grads_in_specs(dp)),
+                      P(None, dp, "model"), P(None, dp), P(None, dp),
+                      _coh_specs(layout.param_in_specs()),
+                      _coh_specs(layout.param_in_specs())),
+            out_specs=(fs_b, P(None, dp, "model"), stats_specs),
+            axis_names=manual_axes,
+        )(grads_stacked, state.ef, weights, participate, params_in,
+          prev_in)
+
+        # phase 3 — ZeRO flat optimizer, vmapped per cohort
+        total_w = jnp.maximum(jnp.sum(weights * participate, axis=-1),
+                              1e-9)
+        grad_est = agg_flat.astype(jnp.float32) / total_w[:, None]
+        lr_scale = lr_schedule(state.step, warmup=tc.lr_warmup,
+                               decay_steps=tc.lr_decay_steps)
+        master_new, opt_new = jax.vmap(
+            lambda o, ms, gr, ls: opt_mod.apply_flat(tc.opt, o, ms, gr,
+                                                     ls))(
+            state.opt, state.master, grad_est, lr_scale)
+        master_new = jax.lax.with_sharding_constraint(
+            master_new, NamedSharding(mesh, fs_b))
+
+        params_new = compat.shard_map(
+            downlink_fn_b, mesh=mesh, in_specs=(fs_b,),
+            out_specs=_coh_specs(layout.param_out_specs()),
+            axis_names=manual_axes,
+        )(master_new)
+
+        tcs_prev_new = state.tcs_prev
+        if needs_tcs:
+            tcs_prev_new = jax.tree.map(
+                lambda p: p.astype(jnp.dtype(tc.agg_dtype)), state.params)
+
+        metrics = {
+            "loss": loss,
+            "agg_bits": stats.bits,
+            "agg_nnz": stats.nnz,
+            "agg_err_sq": stats.err_sq,
+            "lr_scale": lr_scale,
+        }
+        if telemetry:
+            from repro.runtime.fault import dead_banked_mass
+            metrics["ef_mass"] = jnp.sum(jnp.abs(ef_new), axis=(1, 2))
+            metrics["ef_dead_mass"] = jax.vmap(dead_banked_mass)(
+                ef_new.reshape(b_coh, k_dp, -1), participate)
+        new_state = TrainState(step=state.step + 1, params=params_new,
+                               master=master_new, opt=opt_new, ef=ef_new,
+                               tcs_prev=tcs_prev_new,
+                               stage_ef=state.stage_ef)
+        return new_state, metrics
+
+    return train_step_cohorts
 
 
 # ---------------------------------------------------------------------------

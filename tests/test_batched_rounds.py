@@ -1,0 +1,300 @@
+"""Multi-tenant batched rounds: the bitwise cohort contract.
+
+Key contracts (ISSUE acceptance criteria):
+
+* ``execute_batched`` over B cohorts is **bitwise identical**, per cohort,
+  to B sequential ``execute`` calls — for all five Algorithm 1–5 node
+  steps, on chain/tree/padded plans, with stragglers, in interpret mode
+  (``kernel_mode="always"`` → Pallas-interpret off-TPU) as well as on the
+  jnp oracle path;
+* heterogeneous topologies stack (``stack_plans``) into one launch and
+  stay per-cohort bit-exact to each cohort's own plan;
+* :class:`repro.agg.RoundScheduler` adds **zero** jit specializations
+  beyond one per shape bucket — audited by its trace counter;
+* ``Simulator.run_batched`` cohorts match sequential ``run`` per seed and
+  the trace collector tags every round record with its cohort id;
+* the cohort-batched ``build_train_step`` state/sharding plumbing
+  validates its flat-topology constraint.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.agg import (CohortRound, RoundScheduler, compile_plan, execute,
+                       execute_batched, stack_plans)
+from repro.core.algorithms import AggConfig, AggKind
+from repro.topo.tree import PS, AggTree
+
+ALL_KINDS = [AggKind.SIA, AggKind.RE_SIA, AggKind.CL_SIA, AggKind.TC_SIA,
+             AggKind.CL_TC_SIA]
+
+K, D, B = 6, 64, 3
+
+TREE = AggTree(parent=(PS, 0, 1, 1, 0, 3))
+
+
+def _cfg(kind, mode="never", q=9):
+    return AggConfig(kind=kind, q=q, kernel_mode=mode)
+
+
+def _inputs(seed, k=K, d=D):
+    r = np.random.default_rng(seed)
+    g = jnp.asarray(r.standard_normal((k, d)), jnp.float32)
+    e = jnp.asarray(0.1 * r.standard_normal((k, d)), jnp.float32)
+    w = jnp.asarray(r.uniform(0.5, 2.0, (k,)), jnp.float32)
+    p = jnp.asarray(r.random((k,)) < 0.8, jnp.float32)
+    gm = jnp.asarray(r.random((d,)) < 0.3, jnp.float32)
+    return g, e, w, p, gm
+
+
+def _stack(cohorts):
+    return tuple(jnp.stack(x) for x in zip(*cohorts))
+
+
+def _assert_result(got, ref):
+    """The batched contract: aggregate/EF/nnz/bits bitwise; err_sq (an
+    inexact f32 ‖e‖² accumulation) to float summation order — stacked-plan
+    gathers let XLA re-associate it (see execute_batched docstring)."""
+    np.testing.assert_array_equal(np.asarray(got.aggregate),
+                                  np.asarray(ref.aggregate))
+    np.testing.assert_array_equal(np.asarray(got.e_new),
+                                  np.asarray(ref.e_new))
+    for fld in ("nnz_out", "nnz_global", "nnz_local", "bits"):
+        np.testing.assert_array_equal(np.asarray(getattr(got.stats, fld)),
+                                      np.asarray(getattr(ref.stats, fld)))
+    np.testing.assert_allclose(np.asarray(got.stats.err_sq),
+                               np.asarray(ref.stats.err_sq),
+                               rtol=1e-5, atol=1e-5)
+
+
+def _assert_cohort_bitwise(res, refs):
+    for i, ref in enumerate(refs):
+        _assert_result(jax.tree.map(lambda x: x[i], res), ref)
+
+
+@pytest.mark.parametrize("kind", ALL_KINDS)
+@pytest.mark.parametrize("mode", ["never", "always"])
+def test_batched_matches_sequential(kind, mode):
+    """B cohorts, one shared plan == B sequential execute calls, bitwise.
+
+    mode="always" forces the fused Pallas path (interpret off-TPU); with
+    stragglers and a TCS global mask in the mix.
+    """
+    cfg = _cfg(kind, mode)
+    plans = {"chain": compile_plan(K), "tree": compile_plan(TREE)}
+    for name, plan in plans.items():
+        ins = [_inputs(31 * i + 7) for i in range(B)]
+        g, e, w, p, gm = _stack(ins)
+        res = execute_batched(cfg, plan, g, e, w, global_mask=gm,
+                              participate=p)
+        refs = [execute(cfg, plan, *c[:3], global_mask=c[4],
+                        participate=c[3]) for c in ins]
+        _assert_cohort_bitwise(res, refs)
+
+
+@pytest.mark.parametrize("kind", ALL_KINDS)
+def test_batched_padded_and_heterogeneous_plans(kind):
+    """chain/tree plans re-padded to one (L, W) and stacked: each cohort
+    still bitwise equals sequential execute on its own unpadded plan."""
+    cfg = _cfg(kind)
+    chain, tree = compile_plan(K), compile_plan(TREE)
+    shape = (max(chain.shape[0], tree.shape[0]) + 1,
+             max(chain.shape[1], tree.shape[1]) + 2)
+    plans = [chain, tree, chain]
+    stacked = stack_plans([pl.pad(shape) for pl in plans])
+    ins = [_inputs(17 * i + 3) for i in range(B)]
+    g, e, w, p, gm = _stack(ins)
+    res = execute_batched(cfg, stacked, g, e, w, global_mask=gm,
+                          participate=p)
+    refs = [execute(cfg, plans[i], *ins[i][:3], global_mask=ins[i][4],
+                    participate=ins[i][3]) for i in range(B)]
+    _assert_cohort_bitwise(res, refs)
+
+
+def test_batched_interpret_heterogeneous():
+    """Stacked heterogeneous plans through the fused interpret path."""
+    cfg = _cfg(AggKind.CL_SIA, "always")
+    chain, tree = compile_plan(K), compile_plan(TREE)
+    shape = (max(chain.shape[0], tree.shape[0]),
+             max(chain.shape[1], tree.shape[1]))
+    plans = [tree, chain]
+    stacked = stack_plans([pl.pad(shape) for pl in plans])
+    ins = [_inputs(5 * i + 1) for i in range(2)]
+    g, e, w, p, gm = _stack(ins)
+    res = execute_batched(cfg, stacked, g, e, w, participate=p)
+    refs = [execute(cfg, plans[i], *ins[i][:3], participate=ins[i][3])
+            for i in range(2)]
+    _assert_cohort_bitwise(res, refs)
+
+
+def test_batched_rejects_shape_mismatches():
+    plan = compile_plan(K)
+    g, e, w, p, gm = _stack([_inputs(i) for i in range(B)])
+    cfg = _cfg(AggKind.SIA)
+    with pytest.raises(ValueError):
+        execute_batched(cfg, plan, g[:, :-1], e[:, :-1], w[:, :-1])
+    tree = compile_plan(TREE)
+    shape = (max(plan.shape[0], tree.shape[0]),
+             max(plan.shape[1], tree.shape[1]))
+    two = stack_plans([plan.pad(shape), tree.pad(shape)])
+    with pytest.raises(ValueError):
+        execute_batched(cfg, two, g, e, w)    # 2 stacked plans, 3 cohorts
+    with pytest.raises(ValueError):
+        stack_plans([plan, tree])             # un-padded shape mismatch
+
+
+# ---------------------------------------------------------------------------
+# RoundScheduler: shape buckets and the jit-specialization audit
+# ---------------------------------------------------------------------------
+
+def _rounds(cfg, plans, seed0=0, d=D):
+    out = []
+    for i, plan in enumerate(plans):
+        g, e, w, p, gm = _inputs(seed0 + 11 * i, k=plan.num_clients, d=d)
+        out.append(CohortRound(cohort_id=f"t{seed0}-{i}", plan=plan,
+                               grads=g, e=e, weights=w, global_mask=gm,
+                               participate=p))
+    return out
+
+
+def test_scheduler_one_specialization_per_bucket():
+    """Heterogeneous cohorts, repeated submits: results stay bitwise
+    sequential and the jit trace count never exceeds one per bucket."""
+    cfg = _cfg(AggKind.CL_SIA)
+    sched = RoundScheduler(cfg)
+    chain, tree = compile_plan(K), compile_plan(TREE)
+    small = compile_plan(4)                       # different K → own bucket
+
+    for seed0 in (0, 100, 200):                   # 3 submits, same shapes
+        subs = _rounds(cfg, [chain, tree, chain], seed0)
+        subs += _rounds(cfg, [small], seed0 + 50)
+        res = sched.submit(subs)
+        for r in subs:
+            ref = execute(cfg, r.plan, r.grads, r.e, r.weights,
+                          global_mask=r.global_mask,
+                          participate=r.participate)
+            _assert_result(res[r.cohort_id], ref)
+
+    # two buckets (K=6 mixed-topology, K=4), each padded-B stable across
+    # submits → exactly 2 specializations, and the audit passes
+    assert sched.expected_specializations == 2
+    assert sched.trace_counter.count == 2
+    sched.assert_bucket_specializations()
+
+
+def test_scheduler_retraces_only_on_shape_growth():
+    cfg = _cfg(AggKind.SIA)
+    sched = RoundScheduler(cfg)
+    chain = compile_plan(K)
+    sched.submit(_rounds(cfg, [chain, chain], 0))
+    n0 = sched.trace_counter.count
+    sched.submit(_rounds(cfg, [chain, chain], 7))     # same bucket: cached
+    assert sched.trace_counter.count == n0
+    tree = compile_plan(TREE)                          # grows (L, W)
+    sched.submit(_rounds(cfg, [tree, chain], 13))
+    assert sched.trace_counter.count == n0 + 1
+    sched.assert_bucket_specializations()
+    # cohort-count padding: 3 cohorts pad to B=4 — a NEW padded-B shape
+    sched.submit(_rounds(cfg, [chain, tree, chain], 23))
+    sched.assert_bucket_specializations()
+
+    # a tampered audit trips: pretend a spec was never recorded
+    sched._specs.pop()
+    with pytest.raises(AssertionError):
+        sched.assert_bucket_specializations()
+
+
+def test_scheduler_rejects_stacked_submissions():
+    cfg = _cfg(AggKind.SIA)
+    sched = RoundScheduler(cfg)
+    chain = compile_plan(4)
+    stacked = stack_plans([chain, chain])
+    g, e, w, p, gm = _inputs(0, k=4)
+    with pytest.raises(ValueError):
+        sched.submit([CohortRound("x", stacked, g, e, w)])
+
+
+# ---------------------------------------------------------------------------
+# Simulator.run_batched: cohort parity + cohort-tagged traces
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def sim_setup():
+    from repro.configs import PAPER
+    from repro.data.federated import partition_iid
+    from repro.data.synthetic import make_synthetic_mnist
+    from repro.fed.simulator import Simulator
+    k = 8
+    pc = dataclasses.replace(PAPER, num_clients=k)
+    train = make_synthetic_mnist(jax.random.PRNGKey(0), k * 60)
+    fed = partition_iid(jax.random.PRNGKey(2), train, k)
+    cfg = AggConfig(kind=AggKind.CL_SIA, q=pc.q, q_global=pc.q_global,
+                    q_local=pc.q_local)
+    return Simulator(pc, cfg, fed)
+
+
+def test_run_batched_matches_sequential_runs(sim_setup, tmp_path):
+    from repro.obs.collector import TraceCollector
+    from repro.obs.record import iter_trace, validate_record
+    from repro.obs.report import summarize
+
+    sim = sim_setup
+    seeds = [0, 1]
+    trace = str(tmp_path / "batched.jsonl")
+    col = TraceCollector(trace)
+    out = sim.run_batched(4, seeds=seeds, eval_every=10, collector=col)
+    col.close()
+    loss = np.asarray(out["loss"])                # [rounds, B]
+    assert loss.shape == (4, len(seeds))
+    for i, s in enumerate(seeds):
+        ref = sim.run(4, seed=s, eval_every=10)
+        assert [float(x) for x in ref["loss"]] == list(loss[:, i])
+
+    recs = list(iter_trace(trace))
+    errs = [e for r in recs for e in validate_record(r)]
+    assert not errs, errs
+    rounds = [r for r in recs if r.get("kind") == "round"]
+    assert sorted({r["cohort"] for r in rounds}) == [0, 1]
+    assert len(rounds) == 4 * len(seeds)
+    summary = summarize(trace)
+    assert summary["cohorts"] == [0, 1]
+    one = summarize(trace, cohort=1)
+    assert one["rounds"] == 4
+
+
+def test_run_batched_straggler_masks(sim_setup):
+    sim = sim_setup
+    drop = jnp.ones((sim.k,)).at[2].set(0.0)
+    out = sim.run_batched(3, seeds=[0, 1],
+                          participate_fn=lambda r, state: drop)
+    assert np.all(np.isfinite(np.asarray(out["loss"])))
+
+
+# ---------------------------------------------------------------------------
+# train-step plumbing: cohort guard (full parity runs in
+# tests/test_ring_shardmap.py-style subprocesses; see the smoke bench)
+# ---------------------------------------------------------------------------
+
+def test_train_step_cohorts_rejects_nested_topologies():
+    from repro.train.step import build_train_step, init_state
+    from repro.configs.base import ModelConfig
+    from repro.optim.optimizers import OptConfig
+    from repro.train.state import TrainConfig
+    from repro import compat
+
+    mesh = compat.make_mesh((1, 1), ("pod", "data"))
+    cfg = ModelConfig(name="tiny", family="dense", num_layers=1,
+                      d_model=32, num_heads=2, num_kv_heads=2, d_ff=64,
+                      vocab_size=64, head_dim=16, param_dtype="float32")
+    tc = TrainConfig(agg=AggConfig(kind=AggKind.SIA, q=1),
+                     opt=OptConfig(name="sgd", lr=1e-2),
+                     agg_dtype="float32", ef_dtype="float32")
+    with pytest.raises(ValueError, match="flat topolog"):
+        build_train_step(cfg, tc, mesh, topology="hierarchical", cohorts=2)
+    with pytest.raises(ValueError, match="flat topolog"):
+        init_state(cfg, tc, mesh, jax.random.PRNGKey(0),
+                   topology="hierarchical", cohorts=2)

@@ -1,0 +1,132 @@
+"""Property test (hypothesis): random (B, plan-shape) bucket packings.
+
+Random cohort batches — random cohort count, random mix of chain /
+permuted-chain / random-tree topologies, random straggler sets, random
+extra padding — always produce, per cohort, the result of a sequential
+``execute`` on that cohort's own plan: value leaves and integer §V
+counters bitwise, ``err_sq`` to float summation order. And the
+:class:`repro.agg.RoundScheduler` never traces more than once per shape
+bucket while doing so.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.agg import (CohortRound, RoundScheduler, compile_plan, execute,
+                       execute_batched, stack_plans)
+from repro.core.algorithms import AggConfig, AggKind
+from repro.topo.tree import PS, AggTree
+
+ALL_KINDS = [AggKind.SIA, AggKind.RE_SIA, AggKind.CL_SIA, AggKind.TC_SIA,
+             AggKind.CL_TC_SIA]
+
+D = 32
+
+
+def _assert_result(got, ref):
+    """Value leaves and integer counters bitwise; err_sq to float
+    summation order (stacked-plan gathers re-associate the reduction)."""
+    np.testing.assert_array_equal(np.asarray(got.aggregate),
+                                  np.asarray(ref.aggregate))
+    np.testing.assert_array_equal(np.asarray(got.e_new),
+                                  np.asarray(ref.e_new))
+    for fld in ("nnz_out", "nnz_global", "nnz_local", "bits"):
+        np.testing.assert_array_equal(np.asarray(getattr(got.stats, fld)),
+                                      np.asarray(getattr(ref.stats, fld)))
+    np.testing.assert_allclose(np.asarray(got.stats.err_sq),
+                               np.asarray(ref.stats.err_sq),
+                               rtol=1e-5, atol=1e-5)
+
+
+def _random_plan(data, k, label):
+    shape_kind = data.draw(st.sampled_from(["chain", "perm", "tree"]),
+                           label=f"{label}-topology")
+    if shape_kind == "chain":
+        return compile_plan(k)
+    if shape_kind == "perm":
+        return compile_plan(data.draw(st.permutations(list(range(k))),
+                                      label=f"{label}-order"))
+    parent = [PS]
+    for i in range(1, k):
+        parent.append(data.draw(st.integers(0, i - 1),
+                                label=f"{label}-parent{i}"))
+    return compile_plan(AggTree(parent=tuple(parent)))
+
+
+def _inputs(data, k, seed, label):
+    r = np.random.default_rng(seed)
+    g = jnp.asarray(r.standard_normal((k, D)), jnp.float32)
+    e = jnp.asarray(0.1 * r.standard_normal((k, D)), jnp.float32)
+    w = jnp.asarray(r.uniform(0.5, 2.0, (k,)), jnp.float32)
+    p = jnp.asarray(
+        data.draw(st.lists(st.sampled_from([0.0, 1.0]), min_size=k,
+                           max_size=k), label=f"{label}-part"),
+        jnp.float32)
+    return g, e, w, p
+
+
+def _gmask(cfg, seed):
+    if cfg.kind in (AggKind.TC_SIA, AggKind.CL_TC_SIA):
+        r = np.random.default_rng(seed + 999)
+        sel = r.choice(D, size=cfg.q_global, replace=False)
+        return jnp.zeros((D,), jnp.float32).at[jnp.asarray(sel)].set(1.0)
+    return None
+
+
+@settings(max_examples=15, deadline=None)
+@given(data=st.data(), kind=st.sampled_from(ALL_KINDS),
+       seed=st.integers(0, 2**16))
+def test_random_packings_bitwise_per_cohort(data, kind, seed):
+    """stack_plans over a random padded bucket == sequential, bitwise."""
+    cfg = AggConfig(kind=kind, q=7, q_global=5, q_local=3)
+    b = data.draw(st.integers(1, 4), label="B")
+    k = data.draw(st.integers(2, 6), label="k")
+    plans = [_random_plan(data, k, f"c{i}") for i in range(b)]
+    pad_l = data.draw(st.integers(0, 2), label="padL")
+    pad_w = data.draw(st.integers(0, 2), label="padW")
+    shape = (max(p.shape[0] for p in plans) + pad_l,
+             max(p.shape[1] for p in plans) + pad_w)
+    stacked = stack_plans([p.pad(shape) for p in plans])
+
+    ins = [_inputs(data, k, seed + 31 * i, f"c{i}") for i in range(b)]
+    gm = _gmask(cfg, seed)
+    g, e, w, p = (jnp.stack([c[j] for c in ins]) for j in range(4))
+    gm_b = None if gm is None else jnp.broadcast_to(gm, (b, D))
+    res = execute_batched(cfg, stacked, g, e, w, global_mask=gm_b,
+                          participate=p)
+    for i in range(b):
+        ref = execute(cfg, plans[i], *ins[i][:3], global_mask=gm,
+                      participate=ins[i][3])
+        _assert_result(jax.tree.map(lambda x: x[i], res), ref)
+
+
+@settings(max_examples=10, deadline=None)
+@given(data=st.data(), seed=st.integers(0, 2**16))
+def test_scheduler_random_buckets_bitwise_and_bounded(data, seed):
+    """Random multi-bucket submissions: per-cohort bitwise parity and
+    spec count ≤ one per (bucket, shape, padded-B)."""
+    cfg = AggConfig(kind=AggKind.CL_SIA, q=7)
+    sched = RoundScheduler(cfg)
+    n_submits = data.draw(st.integers(1, 3), label="submits")
+    cid = 0
+    for s in range(n_submits):
+        subs = []
+        for _ in range(data.draw(st.integers(1, 5), label=f"s{s}-n")):
+            k = data.draw(st.sampled_from([3, 5]), label=f"s{s}-k")
+            plan = _random_plan(data, k, f"s{s}-c{cid}")
+            g, e, w, p = _inputs(data, k, seed + 7 * cid, f"s{s}-c{cid}")
+            subs.append(CohortRound(cohort_id=cid, plan=plan, grads=g,
+                                    e=e, weights=w, participate=p))
+            cid += 1
+        res = sched.submit(subs)
+        for r in subs:
+            ref = execute(cfg, r.plan, r.grads, r.e, r.weights,
+                          participate=r.participate)
+            _assert_result(res[r.cohort_id], ref)
+    sched.assert_bucket_specializations()
+    assert sched.trace_counter.count <= len(sched._specs)
