@@ -104,10 +104,10 @@ def _round_inputs(k: int, d: int):
     return g, e, w
 
 
-def _cfg(name: str, q: int, impl: str, kernel_mode: str = "auto"):
+def _cfg(name: str, q: int, impl: str, kernel_mode: str = "auto", **extra):
     from repro.core.algorithms import AggConfig, AggKind
     return AggConfig(kind=AggKind(name), q=q, topq_impl=impl,
-                     kernel_mode=kernel_mode)
+                     kernel_mode=kernel_mode, **extra)
 
 
 def _gmask(cfg, d):
@@ -141,6 +141,82 @@ def bench_host(k, d, q, reps, impls, kernel_mode="never"):
                 out[name][plan_name][impl] = round(
                     _timed(lambda: fn(plan, g, e, w).aggregate, reps), 1)
     return out
+
+
+TAU_VARIANTS = (
+    # (name, topq_impl, kernel_mode, extra AggConfig kwargs)
+    ("exact", "exact", "never", {}),
+    ("threshold_scan", "threshold", "never", {}),
+    ("threshold_hist", "threshold", "never", {"tau_impl": "hist"}),
+    ("fused_operand", "threshold", "ref", {}),
+)
+
+
+def bench_tau_search(k, d, q, reps, hist_branch, hist_rounds):
+    """µs per jitted round across the four τ-search implementations.
+
+    * ``exact``           — ``lax.top_k`` sparsifier (the O(d log d)
+      oracle the threshold path is racing).
+    * ``threshold_scan``  — branch-and-bisect with per-round
+      ``count_ge_sorted`` counts over the materialized operand.
+    * ``threshold_hist``  — ONE joint digit histogram replaces the
+      ``hist_rounds`` count sweeps; bracket integers are bit-identical
+      to the scan (``tau_impl="hist"``, rounds ∈ {1, 2}).
+    * ``fused_operand``   — the scan's counts consume the bisection
+      operand rebuilt on the fly from the raw node inputs
+      (``kernel_mode="ref"``: fused structure, jnp kernel bodies — the
+      honest host number without Pallas-interpret overhead).
+
+    Host runs every algorithm × {chain, tree}; the 8-device shard_map
+    round runs every algorithm on the chain plan (the per-rank lowering
+    reads ``tau_impl`` off the same config, so the hist variant there is
+    one psum'd histogram instead of ``hist_rounds`` count+psum rounds).
+    """
+    import functools
+    from repro.agg import execute, execute_sharded
+    from repro.agg.device import client_mesh
+    plans = _plans(k)
+    g, e, w = _round_inputs(k, d)
+
+    def cfgs(name):
+        for vname, impl, kmode, extra in TAU_VARIANTS:
+            kw = dict(extra)
+            if kw.get("tau_impl") == "hist":
+                kw["hist_branch"] = hist_branch
+                kw["hist_rounds"] = hist_rounds
+            yield vname, _cfg(name, q, impl, kmode, **kw)
+
+    host = {}
+    for name in ALG_NAMES:
+        host[name] = {}
+        for plan_name, plan in plans.items():
+            row = {}
+            for vname, cfg in cfgs(name):
+                fn = jax.jit(functools.partial(
+                    execute, cfg, global_mask=_gmask(cfg, d)))
+                row[vname] = round(
+                    _timed(lambda: fn(plan, g, e, w).aggregate, reps), 1)
+            host[name][plan_name] = row
+
+    if jax.device_count() < k:
+        device = {"skipped": f"needs {k} devices, have "
+                             f"{jax.device_count()}"}
+    else:
+        mesh = client_mesh(k)
+        plan = plans["chain"]
+        device = {}
+        for name in ALG_NAMES:
+            row = {}
+            for vname, cfg in cfgs(name):
+                fn = jax.jit(functools.partial(
+                    execute_sharded, cfg, mesh=mesh,
+                    global_mask=_gmask(cfg, d)))
+                row[vname] = round(
+                    _timed(lambda: fn(plan, g, e, w).aggregate, reps), 1)
+            device[name] = {"chain": row}
+
+    return {"hist_branch": hist_branch, "hist_rounds": hist_rounds,
+            "host": host, "device": device}
 
 
 def bench_device(k, d, q, reps):
@@ -453,6 +529,17 @@ def main(argv=None) -> dict:
                     help="multi-tenant batched-round section: bench B in "
                          "{1, 4, 8} up to this cap (batched single-launch "
                          "vs B-sequential, host + 8-device); 0 disables")
+    ap.add_argument("--hist", action="store_true",
+                    help="run the tau_search section even under --smoke "
+                         "(the full run always includes it): exact vs "
+                         "threshold-scan vs threshold-hist vs "
+                         "fused-operand, host + 8-device")
+    ap.add_argument("--hist-branch", type=int, default=64, metavar="B",
+                    help="bisection branch factor for the threshold_hist "
+                         "variant (<= 1024)")
+    ap.add_argument("--hist-rounds", type=int, default=2,
+                    help="bisection rounds for the threshold_hist variant "
+                         "(1 or 2 — the joint histogram covers two)")
     ap.add_argument("--scenario", default=None, metavar="PRESET",
                     help="also run a repro.scenario preset (e.g. "
                          "relay-cascade) through the simulator and record "
@@ -510,6 +597,10 @@ def main(argv=None) -> dict:
         # fused path correctness + interpret-mode smoke (see docstring)
         "fused_interpret_rounds_us": fused_interpret,
     }
+    if args.hist or not args.smoke:
+        with timer.phase("tau_search", track="bench"):
+            result["tau_search"] = bench_tau_search(
+                k, d, q, args.reps, args.hist_branch, args.hist_rounds)
     if args.cohorts:
         sizes = sorted({b for b in (1, 4, 8) if b <= args.cohorts}
                        | {args.cohorts})
@@ -537,6 +628,11 @@ def main(argv=None) -> dict:
         print(f"round,{name},host_chain_threshold_us,{h['threshold']}")
         print(f"round,{name},passes_unfused,{passes[name]['unfused']}")
         print(f"round,{name},passes_fused,{passes[name]['fused']}")
+    if "tau_search" in result:
+        for name in ALG_NAMES:
+            row = result["tau_search"]["host"][name]["chain"]
+            for vname, _, _, _ in TAU_VARIANTS:
+                print(f"tau,{name},host_chain_{vname}_us,{row[vname]}")
     if args.cohorts:
         for regime, rg in result["batched_round"]["regimes"].items():
             for b, entry in rg["cohorts"].items():

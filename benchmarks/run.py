@@ -25,6 +25,12 @@ def main() -> None:
     ap.add_argument("--cohorts", type=int, default=8,
                     help="multi-tenant batched-round cap forwarded to "
                          "bench_round (0 disables the section)")
+    ap.add_argument("--hist-branch", type=int, default=64,
+                    help="tau_search bisection branch factor forwarded to "
+                         "bench_round")
+    ap.add_argument("--hist-rounds", type=int, default=2,
+                    help="tau_search bisection rounds (1 or 2) forwarded "
+                         "to bench_round")
     args = ap.parse_args()
 
     import bench_kernels
@@ -40,7 +46,9 @@ def main() -> None:
     # device section auto-skips unless this process was launched with
     # XLA_FLAGS=--xla_force_host_platform_device_count=8
     bench_round.main(["--reps", str(args.reps), "--nested",
-                      "--cohorts", str(args.cohorts)])
+                      "--cohorts", str(args.cohorts),
+                      "--hist-branch", str(args.hist_branch),
+                      "--hist-rounds", str(args.hist_rounds)])
     print("\n== fig2a: transmitted bits vs K ==")
     fig2a_comm_cost.main()
     print("\n== fig2b: normalized efficiency vs K ==")

@@ -34,6 +34,7 @@ import jax.numpy as jnp
 
 from repro.core import sparsify as sp
 from repro.kernels import ops as kops
+from repro.kernels import ref as kref
 
 Array = jax.Array
 
@@ -68,6 +69,18 @@ class AggConfig:
     topq_impl: str = "exact"
     hist_branch: int = 64
     hist_rounds: int = 3
+    # τ-search implementation for the threshold sparsifier: "scan" (the
+    # streaming multi-pass branch-and-bisect) or "hist" (one joint digit
+    # histogram replaces the hist_rounds sequential passes; requires
+    # hist_rounds ∈ {1, 2} — per-round candidate counts and τ stay
+    # bit-identical to the scan, see sparsify._hist_bisect).
+    tau_impl: str = "scan"
+    # ‖e'‖² reduction: "jnp" (the historic vmapped row-sum — HopStats stay
+    # bit-comparable with the unfused bodies) or "kernel" (in-kernel
+    # pinned pairwise-tree order, see kernels.level._pinned_tile_err — no
+    # separate jnp pass over e', but a *different* documented summation
+    # order).
+    err_sq_mode: str = "jnp"
     # Wire dtype for compact ring transport values (f32 matches ω=32;
     # bfloat16 is the beyond-paper ω=16 quantization knob).
     wire_dtype: str = "float32"
@@ -75,7 +88,10 @@ class AggConfig:
     # "auto" = compiled Pallas on TPU, Pallas-interpret off-TPU only when
     # REPRO_PALLAS_INTERPRET=1, pure-jnp otherwise (the host executors stay
     # the bit-exact oracle); "always" = force the kernels (interpret mode
-    # off-TPU — parity tests); "never" = force the unfused jnp reference.
+    # off-TPU — parity tests); "never" = force the unfused jnp reference;
+    # "ref" = fused structure (whole-level steps, fused-operand τ search)
+    # with the jnp reference kernel bodies — the honest host benchmark of
+    # the fused data flow.
     kernel_mode: str = "auto"
 
     def __post_init__(self):
@@ -90,9 +106,21 @@ class AggConfig:
         # split over more ring segments than it has coordinates
         # (core.ring.segment_budget clamps rather than inflate §V bits).
         # Warn loudly: a hand-built q=0 config trains a flat loss curve.
-        if self.kernel_mode not in ("auto", "always", "never"):
+        if self.kernel_mode not in ("auto", "always", "never", "ref"):
             raise ValueError(f"unknown kernel_mode {self.kernel_mode!r} "
-                             f"(expected 'auto', 'always' or 'never')")
+                             f"(expected 'auto', 'always', 'never' or "
+                             f"'ref')")
+        if self.tau_impl not in ("scan", "hist"):
+            raise ValueError(f"unknown tau_impl {self.tau_impl!r} "
+                             f"(expected 'scan' or 'hist')")
+        if self.tau_impl == "hist" and self.hist_rounds not in (1, 2):
+            raise ValueError(
+                "tau_impl='hist' folds the whole τ search into one "
+                f"histogram pass; hist_rounds must be 1 or 2, got "
+                f"{self.hist_rounds}")
+        if self.err_sq_mode not in ("jnp", "kernel"):
+            raise ValueError(f"unknown err_sq_mode {self.err_sq_mode!r} "
+                             f"(expected 'jnp' or 'kernel')")
         if self.kind not in (AggKind.DENSE_IA, AggKind.ROUTING):
             if self.q < 0:
                 raise ValueError("q must be non-negative for sparsified "
@@ -109,7 +137,8 @@ class AggConfig:
             return sp.topq
         if self.topq_impl == "threshold":
             return lambda x, q: sp.topq_by_threshold(
-                x, q, branch=self.hist_branch, rounds=self.hist_rounds)
+                x, q, branch=self.hist_branch, rounds=self.hist_rounds,
+                tau_impl=self.tau_impl)
         raise ValueError(f"unknown topq_impl {self.topq_impl!r}")
 
     def topq_mask_fn(self) -> Callable[[Array, int], Array]:
@@ -118,7 +147,8 @@ class AggConfig:
         if self.topq_impl == "threshold":
             def mask(x, q):
                 tau = sp.threshold_for_topq(
-                    x, q, branch=self.hist_branch, rounds=self.hist_rounds)
+                    x, q, branch=self.hist_branch, rounds=self.hist_rounds,
+                    tau_impl=self.tau_impl)
                 return (jnp.abs(x) >= tau).astype(x.dtype)
             return mask
         raise ValueError(f"unknown topq_impl {self.topq_impl!r}")
@@ -201,32 +231,38 @@ def _topq_mask_local(cfg: AggConfig, ctx: NodeCtx, x: Array, q: int) -> Array:
 #
 # All five sparsified algorithms are covered. Per-lane sparsifier state
 # (exact Top-Q masks, dynamic-budget sort masks, threshold-bisection τ) is
-# computed jnp-side on a single materialized g̃ — the exact/dynamic paths
-# need the full sort anyway, and the threshold path replaces it with
-# `hist_rounds` streaming count passes through `count_ge_level`.
+# computed through a TauOperand built from the raw node inputs
+# (`_tau_operand`): the exact/dynamic paths materialize the operand (they
+# need the full sort anyway), while the threshold path never does — its
+# candidate counts stream through the fused-operand kernels
+# (`count_ge_fused_level`, or one `hist_topq_level` pass under
+# tau_impl="hist"), reconstructing |…·(w·g + e) + …| tile-by-tile in VMEM.
 # ---------------------------------------------------------------------------
 
 #: Bit counts, error-feedback rows, aggregates and nnz/bits stats of the
-#: fused paths are bit-exact to the unfused bodies; err_sq is computed with
-#: the same vmapped jnp reduction on both paths (not in-kernel) to keep the
-#: full HopStats comparable bitwise.
+#: fused paths are bit-exact to the unfused bodies; err_sq defaults to the
+#: same vmapped jnp reduction on both paths (err_sq_mode="jnp") to keep the
+#: full HopStats comparable bitwise — err_sq_mode="kernel" swaps in the
+#: in-kernel pinned pairwise-tree reduction (no extra pass over e', a
+#: documented *different* summation order).
 
 _FUSED_KINDS = (AggKind.SIA, AggKind.RE_SIA, AggKind.CL_SIA, AggKind.TC_SIA,
                 AggKind.CL_TC_SIA)
 
 
 def fused_node_steps(cfg: AggConfig, *operands) -> bool:
-    """True when ``cfg`` dispatches node steps through the Pallas kernels.
+    """True when ``cfg`` dispatches node steps through the fused level path.
 
     Trace-time decision: the algorithm has a fused form, the resolved
-    backend uses Pallas (see :func:`repro.kernels.ops.resolve`), and the
-    promoted compute dtype is float32 (the kernels compute in f32; an
-    all-bf16 operand set would change rounding, so it falls back to the
-    unfused jnp path).
+    backend uses Pallas (see :func:`repro.kernels.ops.resolve`) — or
+    ``kernel_mode="ref"``, which keeps the fused *structure* with the jnp
+    reference kernel bodies — and the promoted compute dtype is float32
+    (the kernels compute in f32; an all-bf16 operand set would change
+    rounding, so it falls back to the unfused jnp path).
     """
     if cfg.kind not in _FUSED_KINDS:
         return False
-    if not kops.resolve(cfg.kernel_mode)[0]:
+    if cfg.kernel_mode != "ref" and not kops.resolve(cfg.kernel_mode)[0]:
         return False
     return (not operands
             or jnp.result_type(*operands) == jnp.float32)
@@ -240,9 +276,52 @@ def _lane_inf(w: int) -> Array:
     return jnp.full((w,), jnp.inf, jnp.float32)
 
 
-def _local_mask_tau(cfg: AggConfig, x: Array, q: int, p: Array,
-                    qb: Optional[Array]):
-    """Per-lane sparsifier state for batched x [W, d].
+def _tau_operand(cfg: AggConfig, g, e, gam, w, p, gm=None, cohorts=0, *,
+                 include_gamma: bool = False) -> sp.TauOperand:
+    """Build the level's bisection operand from the raw node inputs.
+
+    The returned :class:`repro.core.sparsify.TauOperand` streams candidate
+    counts (and the tau_impl="hist" digit histogram) through the
+    fused-operand kernels — ``|…·(w·g + e) + …|`` is reconstructed
+    tile-by-tile in VMEM, never materialized to HBM for the τ search.
+    ``materialize()`` (the exact/dynamic sparsifier paths, which need the
+    full sort anyway) and ``max_abs()`` use the identical float expression
+    (:func:`repro.kernels.ref.fused_operand`), so every path stays bitwise
+    interchangeable with the historic materialized-x search.
+    """
+    mode = cfg.kernel_mode
+
+    def materialize():
+        return kref.fused_operand(g, e, gam, w, p, gm,
+                                  include_gamma=include_gamma,
+                                  gmask_cohorts=cohorts)
+
+    def count(taus):
+        return kops.count_ge_fused_level(
+            g, e, gam, w, p, taus, gm, include_gamma=include_gamma,
+            gmask_cohorts=cohorts, mode=mode)
+
+    def max_abs():
+        # XLA fuses the elementwise operand into the reduce — one streaming
+        # pass, no [W, d] landing in HBM; bitwise equal to a materialized
+        # jnp.max(jnp.abs(x)) (same expression, same reduction)
+        mag = jnp.abs(materialize())
+        if not mag.size:
+            return jnp.zeros(mag.shape[:-1], jnp.float32)
+        return jnp.max(mag, axis=-1)
+
+    def hist(tables):
+        return kops.hist_topq_level(
+            g, e, gam, w, p, tables, gm, include_gamma=include_gamma,
+            gmask_cohorts=cohorts, mode=mode)
+
+    return sp.TauOperand(count=count, max_abs=max_abs, batched=True,
+                         hist=hist, materialize=materialize)
+
+
+def _lane_sparsifier_state(cfg: AggConfig, operand: sp.TauOperand, q: int,
+                           p: Array, qb: Optional[Array]):
+    """Per-lane sparsifier state for a batched [W, d] bisection operand.
 
     Returns ``(mask_in, tau)`` such that ``keep = (|x| >= tau) | mask_in``
     reproduces the unfused ``_topq_local`` keep set lane by lane:
@@ -250,23 +329,24 @@ def _local_mask_tau(cfg: AggConfig, x: Array, q: int, p: Array,
     * dynamic budgets → the sort-threshold keep mask, τ = +inf;
     * exact Top-Q     → the ``lax.top_k`` support mask, τ = +inf;
     * threshold Top-Q → mask None, τ from the batched branch-and-bisect
-      (counts through the ``count_ge_level`` kernel when fused).
+      over the *unmaterialized* operand (fused-operand count kernels; one
+      histogram pass under ``cfg.tau_impl="hist"``).
 
     Non-participating lanes (p = 0) are zeroed out of mask/τ — the
     sparsify_ef stage then banks the whole g̃ into error feedback, exactly
     the unfused straggler algebra. (The CL kernels override stragglers
     internally, where this zeroing is a harmless no-op.)
     """
-    w = x.shape[0]
+    w = p.shape[0]
     if qb is not None:
-        mask = jax.vmap(sp.topq_mask_dynamic)(x, qb)
+        mask = jax.vmap(sp.topq_mask_dynamic)(operand.materialize(), qb)
         return mask * p[:, None], _lane_inf(w)
     if cfg.topq_impl == "threshold":
         tau = sp.threshold_for_topq(
-            x, q, branch=cfg.hist_branch, rounds=cfg.hist_rounds,
-            count_fn=lambda m, t: kops.count_ge_level(
-                m, t, mode=cfg.kernel_mode))
+            None, q, branch=cfg.hist_branch, rounds=cfg.hist_rounds,
+            operand_fn=operand, tau_impl=cfg.tau_impl)
         return None, jnp.where(p > 0, tau, jnp.inf)
+    x = operand.materialize()
     mask = jax.vmap(lambda row: sp.topq_mask(row, q))(x)
     return mask * p[:, None], _lane_inf(w)
 
@@ -275,16 +355,17 @@ def _lane_err_sq(e_new: Array) -> Array:
     return jax.vmap(lambda v: jnp.sum(v.astype(jnp.float32) ** 2))(e_new)
 
 
-def _stats_no_gmask(cfg: AggConfig, d: int, nnz: Array,
-                    e_new: Array) -> HopStats:
+def _stats_no_gmask(cfg: AggConfig, d: int, nnz: Array, e_new: Array,
+                    err: Optional[Array] = None) -> HopStats:
     zeros = jnp.zeros_like(nnz)
     return HopStats(nnz_out=nnz, nnz_global=zeros, nnz_local=nnz,
                     bits=_bits(cfg, d, zeros, nnz),
-                    err_sq=_lane_err_sq(e_new))
+                    err_sq=_lane_err_sq(e_new) if err is None else err)
 
 
 def _stats_gmask(cfg: AggConfig, d: int, gm: Array, nnz: Array,
-                 nnz_off: Array, e_new: Array, cohorts: int = 0) -> HopStats:
+                 nnz_off: Array, e_new: Array, cohorts: int = 0,
+                 err: Optional[Array] = None) -> HopStats:
     if gm.ndim == 1:       # lane-shared mask: one count, broadcast
         nz_g = jnp.broadcast_to(jnp.sum(gm > 0).astype(jnp.int32),
                                 nnz.shape)
@@ -299,7 +380,7 @@ def _stats_gmask(cfg: AggConfig, d: int, gm: Array, nnz: Array,
             lambda m: jnp.sum(m > 0).astype(jnp.int32))(gm)
     return HopStats(nnz_out=nnz, nnz_global=nz_g, nnz_local=nnz_off,
                     bits=_bits(cfg, d, nz_g, nnz_off),
-                    err_sq=_lane_err_sq(e_new))
+                    err_sq=_lane_err_sq(e_new) if err is None else err)
 
 
 def _gm_rows(gm: Array, lanes: int, cohorts: int) -> Array:
@@ -317,79 +398,91 @@ def _gm_rows(gm: Array, lanes: int, cohorts: int) -> Array:
 
 def _fused_level_sia(cfg, g, gam, e, w, p, gm, qb, valid, cohorts=0):
     d = g.shape[-1]
-    gt = w[:, None] * g + e
-    mask, tau = _local_mask_tau(cfg, gt, cfg.q, p, qb)
-    gbar, e_new, _ = kops.sparsify_ef_level(g, e, mask, w, tau, valid,
-                                            mode=cfg.kernel_mode)
+    op = _tau_operand(cfg, g, e, None, w, p)
+    mask, tau = _lane_sparsifier_state(cfg, op, cfg.q, p, qb)
+    we = cfg.err_sq_mode == "kernel"
+    out = kops.sparsify_ef_level(g, e, mask, w, tau, valid, with_err=we,
+                                 mode=cfg.kernel_mode)
+    gbar, e_new = out[0], out[1]
     gout, nnz, _ = kops.chain_accum_level(gam, gbar, valid,
                                           mode=cfg.kernel_mode)
-    return gout, e_new, _stats_no_gmask(cfg, d, nnz, e_new)
+    return gout, e_new, _stats_no_gmask(cfg, d, nnz, e_new,
+                                        out[3] if we else None)
 
 
 def _fused_level_re_sia(cfg, g, gam, e, w, p, gm, qb, valid, cohorts=0):
     d = g.shape[-1]
-    gt = w[:, None] * g + e
+    op = _tau_operand(cfg, g, e, None, w, p)
     m_in = sp.support(gam)
     if qb is None and cfg.topq_impl == "threshold":
-        _, tau = _local_mask_tau(cfg, gt, cfg.q, p, qb)
+        _, tau = _lane_sparsifier_state(cfg, op, cfg.q, p, qb)
         mask = m_in * p[:, None]
     else:
-        m_l, tau = _local_mask_tau(cfg, gt, cfg.q, jnp.ones_like(p), qb)
+        m_l, tau = _lane_sparsifier_state(cfg, op, cfg.q,
+                                          jnp.ones_like(p), qb)
         mask = sp.mask_union(m_l, m_in) * p[:, None]
-    gbar, e_new, _ = kops.sparsify_ef_level(g, e, mask, w, tau, valid,
-                                            mode=cfg.kernel_mode)
+    we = cfg.err_sq_mode == "kernel"
+    out = kops.sparsify_ef_level(g, e, mask, w, tau, valid, with_err=we,
+                                 mode=cfg.kernel_mode)
+    gbar, e_new = out[0], out[1]
     gout, nnz, _ = kops.chain_accum_level(gam, gbar, valid,
                                           mode=cfg.kernel_mode)
-    return gout, e_new, _stats_no_gmask(cfg, d, nnz, e_new)
+    return gout, e_new, _stats_no_gmask(cfg, d, nnz, e_new,
+                                        out[3] if we else None)
 
 
 def _fused_level_tc_sia(cfg, g, gam, e, w, p, gm, qb, valid, cohorts=0):
     d = g.shape[-1]
     gme = _gm_rows(gm, g.shape[0], cohorts)
-    gt = w[:, None] * g + e
-    m_k, tau = _local_mask_tau(cfg, (1 - gme) * gt, cfg.q_local,
-                               jnp.ones_like(p), qb)
+    op = _tau_operand(cfg, g, e, None, w, p, gm, cohorts)
+    m_k, tau = _lane_sparsifier_state(cfg, op, cfg.q_local,
+                                      jnp.ones_like(p), qb)
     m_in = jnp.clip(sp.support(gam) - gme, 0, 1)
     if m_k is None:
         # threshold impl: materialize the local mask to union it with the
         # global/incoming masks (matches the unfused topq_mask_fn exactly)
-        x = (1 - gme) * gt
+        x = op.materialize()
         m_k = (jnp.abs(x) >= tau[:, None]).astype(x.dtype)
         tau = _lane_inf(g.shape[0])
     mm = sp.mask_union(gme, m_k, m_in)
     mask = mm * p[:, None]
-    gbar, e_new, _ = kops.sparsify_ef_level(g, e, mask, w, tau, valid,
-                                            mode=cfg.kernel_mode)
+    we = cfg.err_sq_mode == "kernel"
+    out = kops.sparsify_ef_level(g, e, mask, w, tau, valid, with_err=we,
+                                 mode=cfg.kernel_mode)
+    gbar, e_new = out[0], out[1]
     gout, nnz, nnz_off = kops.chain_accum_level(gam, gbar, valid, gm,
                                                 gmask_cohorts=cohorts,
                                                 mode=cfg.kernel_mode)
     return gout, e_new, _stats_gmask(cfg, d, gm, nnz, nnz_off, e_new,
-                                     cohorts)
+                                     cohorts, out[3] if we else None)
 
 
 def _fused_level_cl_sia(cfg, g, gam, e, w, p, gm, qb, valid, cohorts=0):
     d = g.shape[-1]
-    gt = w[:, None] * g + e
-    gamma_t = p[:, None] * gt + gam
-    mask, tau = _local_mask_tau(cfg, gamma_t, cfg.q, jnp.ones_like(p), qb)
-    gout, e_new, nnz, _ = kops.cl_fuse_level(g, e, gam, w, tau, p, valid,
-                                             mask_in=mask,
-                                             mode=cfg.kernel_mode)
-    return gout, e_new, _stats_no_gmask(cfg, d, nnz, e_new)
+    op = _tau_operand(cfg, g, e, gam, w, p, include_gamma=True)
+    mask, tau = _lane_sparsifier_state(cfg, op, cfg.q, jnp.ones_like(p),
+                                       qb)
+    we = cfg.err_sq_mode == "kernel"
+    out = kops.cl_fuse_level(g, e, gam, w, tau, p, valid, mask_in=mask,
+                             with_err=we, mode=cfg.kernel_mode)
+    gout, e_new, nnz = out[0], out[1], out[2]
+    return gout, e_new, _stats_no_gmask(cfg, d, nnz, e_new,
+                                        out[4] if we else None)
 
 
 def _fused_level_cl_tc_sia(cfg, g, gam, e, w, p, gm, qb, valid, cohorts=0):
     d = g.shape[-1]
-    gme = _gm_rows(gm, g.shape[0], cohorts)
-    gt = w[:, None] * g + e
-    lam_t = (1 - gme) * (p[:, None] * gt + gam)
-    mask, tau = _local_mask_tau(cfg, lam_t, cfg.q_local, jnp.ones_like(p),
-                                qb)
-    gout, e_new, nnz, nnz_off = kops.cl_fuse_level(
+    op = _tau_operand(cfg, g, e, gam, w, p, gm, cohorts,
+                      include_gamma=True)
+    mask, tau = _lane_sparsifier_state(cfg, op, cfg.q_local,
+                                       jnp.ones_like(p), qb)
+    we = cfg.err_sq_mode == "kernel"
+    out = kops.cl_fuse_level(
         g, e, gam, w, tau, p, valid, gmask=gm, mask_in=mask,
-        gmask_cohorts=cohorts, mode=cfg.kernel_mode)
+        gmask_cohorts=cohorts, with_err=we, mode=cfg.kernel_mode)
+    gout, e_new, nnz, nnz_off = out[0], out[1], out[2], out[3]
     return gout, e_new, _stats_gmask(cfg, d, gm, nnz, nnz_off, e_new,
-                                     cohorts)
+                                     cohorts, out[4] if we else None)
 
 
 _FUSED_LEVEL = {
@@ -446,11 +539,14 @@ def _fused_scalar(cfg: AggConfig, g, gamma_in, e, weight, ctx: NodeCtx):
         jnp.asarray(ctx.participate, jnp.float32).reshape(1),
         _f32(ctx.global_mask), qb, None)
     stats = jax.tree.map(lambda s: s[0], stats)
-    # scalar-form err reduction: a vmapped row-sum accumulates in a
-    # different order than the unfused scalar `_finalize` sum (1 ulp) —
-    # recompute it the scalar way so HopStats stay fully bit-comparable
-    stats = stats._replace(
-        err_sq=jnp.sum(e_new[0].astype(jnp.float32) ** 2))
+    if cfg.err_sq_mode == "jnp":
+        # scalar-form err reduction: a vmapped row-sum accumulates in a
+        # different order than the unfused scalar `_finalize` sum (1 ulp) —
+        # recompute it the scalar way so HopStats stay fully bit-comparable
+        # (err_sq_mode="kernel" keeps the pinned in-kernel value instead:
+        # its tile-tree order is already lane-layout invariant)
+        stats = stats._replace(
+            err_sq=jnp.sum(e_new[0].astype(jnp.float32) ** 2))
     return gout[0], e_new[0], stats
 
 

@@ -18,7 +18,8 @@ Two implementations are provided:
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+import math
+from typing import Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -135,14 +136,223 @@ def count_ge_batch(mag: Array, taus: Array) -> Array:
                    axis=1).astype(jnp.int32)
 
 
+def count_ge_presorted(smag: Array, taus: Array) -> Array:
+    """Candidate counts against an already-sorted magnitude vector.
+
+    ``counts[j] = #{i : smag_i >= taus_j} = d − #{i : smag_i < taus_j}``,
+    resolved by B binary searches — exact float comparisons, so the
+    returned integers are bit-identical to the O(d·B) broadcast of
+    :func:`count_ge`. O(B·log d) per call: the whole multi-round bisection
+    costs one O(d·log d) sort (hoisted out of the round scan by
+    :func:`tau_operand`) plus rounds·B searches. This is the default host
+    count for :func:`threshold_for_topq` — it replaces the per-round
+    O(d·B) sweep (and the scatter-add rank histogram that XLA:CPU
+    serializes) that dominated the threshold sparsifier's CPU round time.
+    """
+    d = smag.shape[-1]
+    return (d - jnp.searchsorted(smag, taus, side="left")
+            ).astype(jnp.int32)
+
+
+def count_ge_sorted(mag: Array, taus: Array) -> Array:
+    """:func:`count_ge` via sort + binary search (any ``taus`` order)."""
+    return count_ge_presorted(jnp.sort(mag), taus)
+
+
+def count_ge_sorted_batch(mag: Array, taus: Array) -> Array:
+    """Batched :func:`count_ge_sorted`: [W, d] × [W, B] → int32 [W, B]."""
+    return jax.vmap(count_ge_sorted)(mag, taus)
+
+
+class TauOperand(NamedTuple):
+    """The bisection operand of :func:`threshold_for_topq`, as callbacks.
+
+    Decouples the τ search from a *materialized* magnitude vector: the
+    fused node-step path (``repro.core.algorithms``) builds one of these
+    from the raw node inputs ``(g, e, γ_in, w, participate[, m])`` so the
+    count kernels reconstruct ``|…·(w·g + e) + …|`` tile-by-tile in VMEM —
+    no HBM round-trip of the operand before (or during) the search.
+
+    * ``count(taus)``  → int32 candidate counts ([B] or [W, B]); ``taus``
+      are always nondecreasing per lane.
+    * ``max_abs()``    → max |operand| (f32 scalar or [W]) — the initial
+      bracket top. Implementations must use the same float expression as a
+      materialized ``jnp.max(jnp.abs(x))`` so the two paths stay bitwise
+      identical.
+    * ``batched``      → whether the operand carries a [W] lane axis.
+    * ``hist(tables)`` → one-pass joint digit histogram ``(D2, F)`` for
+      ``tau_impl="hist"`` (see :func:`_hist_digits` for the contract);
+      None disables the hist implementation for this operand.
+    * ``materialize()`` → the dense operand itself (the exact/dynamic
+      sparsifier paths need the full sort anyway).
+    """
+
+    count: Callable[[Array], Array]
+    max_abs: Callable[[], Array]
+    batched: bool
+    hist: Optional[Callable] = None
+    materialize: Optional[Callable[[], Array]] = None
+
+
+def tau_operand(x: Array, count_fn=None) -> TauOperand:
+    """Wrap a materialized ``x`` ([d] or [W, d]) as a :class:`TauOperand`."""
+    batched = x.ndim == 2
+    mag = jnp.abs(x.astype(jnp.float32))
+    if count_fn is None:
+        # sort ONCE at operand construction — a loop constant of the
+        # bisection scan, so every round's counts are B binary searches
+        smag = jnp.sort(mag, axis=-1)
+        count_fn = (jax.vmap(count_ge_presorted) if batched
+                    else count_ge_presorted)
+        count = lambda taus: count_fn(smag, taus)           # noqa: E731
+    else:
+        count = lambda taus: count_fn(mag, taus)            # noqa: E731
+
+    def max_abs():
+        if not mag.size:
+            return (jnp.zeros(mag.shape[:-1], jnp.float32) if batched
+                    else jnp.float32(0))
+        return jnp.max(mag, axis=-1) if batched else jnp.max(mag)
+
+    def hist(tables):
+        fn = jax.vmap(_hist_digits) if batched else _hist_digits
+        return fn(mag, *tables)
+
+    return TauOperand(count=count, max_abs=max_abs, batched=batched,
+                      hist=hist, materialize=lambda: x)
+
+
+# -- one-pass histogram bisection (tau_impl="hist") -------------------------
+#
+# The scan evaluates `rounds` sequential streaming passes. For rounds ≤ 2
+# one pass suffices: bin every element by its round-1 digit d1 (which of
+# the branch+1 round-1 brackets it falls in) and its round-2 digit d2
+# (candidate count *within its own bracket*), accumulate the joint
+# histogram D2[d1, d2], and reconstruct both rounds' candidate-count
+# integers exactly:
+#
+#   counts1[j] = #{d1 >= j}                                (j = 1..branch)
+#   counts2[j] = #{d1 = B, d2 >= j} + #{d1 >= B+2}
+#              + (j < branch ? #{d1 = B+1} : F[B+1])       (B = jstar1)
+#
+# The cross-bracket terms are exact theorems about the f32 bracket
+# arithmetic, not approximations: an element one bracket above B clears
+# every round-2 candidate except possibly the top one (margin ≈ w2 =
+# (hi-lo)/branch² versus rounding noise ≈ 2⁻²⁴·hi — safe for
+# branch ≤ 1024), and that top comparison is resolved exactly by the
+# per-element flag F (|x| >= tau_top of its own bracket). Elements below
+# bracket B clear nothing (their magnitude is < new_lo(B), the smallest
+# candidate). Zero padding lands in the never-read bin D2[0, 0].
+
+_F32_MAX = float(jnp.finfo(jnp.float32).max)
+
+
+def _hist_tables(lo: Array, hi: Array, branch: int):
+    """Per-bracket round-2 tables, mirroring the scan's float ops exactly.
+
+    Returns ``(tau1 [.., b], new_lo [.., b+1], w2 [.., b+1],
+    top_shift [.., b+1])`` where entry ``b'`` of the per-bracket tables is
+    what the scan would compute had round 1 selected ``jstar1 = b'``;
+    ``top_shift[d] = tau_top[d-1]`` (the top round-2 candidate of the
+    bracket *below* digit d; f32 max for d = 0, which no magnitude
+    reaches) feeds the per-element flag F.
+    """
+    steps = jnp.arange(1, branch + 1, dtype=jnp.float32)
+    bf = jnp.arange(0, branch + 1, dtype=jnp.float32)
+    lo_e = jnp.expand_dims(lo, -1)
+    w1 = (hi - lo) / branch
+    w1_e = jnp.expand_dims(w1, -1)
+    tau1 = lo_e + w1_e * steps                     # [.., b]
+    new_lo = lo_e + bf * w1_e                      # [.., b+1]
+    new_hi = new_lo + w1_e
+    w2 = (new_hi - new_lo) / branch                # [.., b+1]
+    tau_top = new_lo + w2 * jnp.float32(branch)    # [.., b+1]
+    top_shift = jnp.concatenate(
+        [jnp.full_like(tau_top[..., :1], _F32_MAX), tau_top[..., :branch]],
+        axis=-1)
+    return tau1, new_lo, w2, top_shift
+
+
+def _hist_digits(mag: Array, tau1: Array, new_lo: Array, w2: Array,
+                 top_shift: Array):
+    """Digit histogram of a materialized 1-D ``mag`` (jnp reference).
+
+    Returns ``(D2 [b+1, b+1] i32, F [b+1] i32)``: ``D2[r, c] = #{d1 = r,
+    d2 = c}`` and ``F[r] = #{d1 = r, mag >= top_shift[r]}``. d1 is the
+    round-1 candidate count per element (searchsorted — exact, taus
+    nondecreasing); d2 the round-2 candidate count *within the element's
+    own bracket* (binary search over the candidate index, valid because
+    ``new_lo + w2·j`` is nondecreasing in j).
+    """
+    branch = tau1.shape[-1]
+    d1 = jnp.searchsorted(tau1, mag, side="right").astype(jnp.int32)
+    nl = new_lo[d1]
+    w2e = w2[d1]
+    te = top_shift[d1]
+    # d2 = largest j in 0..b with mag >= nl + w2e·j (j = 0 vacuously true)
+    lo_i = jnp.zeros_like(d1)
+    hi_i = jnp.full_like(d1, branch + 1)
+    for _ in range(max(1, math.ceil(math.log2(branch + 1)))):
+        mid = (lo_i + hi_i) // 2
+        pred = mag >= nl + w2e * mid.astype(jnp.float32)
+        take = hi_i - lo_i > 1
+        lo_i = jnp.where(take & pred, mid, lo_i)
+        hi_i = jnp.where(take & ~pred, mid, hi_i)
+    d2 = lo_i
+    flag = (mag >= te).astype(jnp.int32)
+    D2 = jnp.zeros((branch + 1, branch + 1), jnp.int32).at[d1, d2].add(1)
+    F = jnp.zeros((branch + 1,), jnp.int32).at[d1].add(flag)
+    return D2, F
+
+
+def _hist_bisect(new_lo: Array, w2: Array, D2: Array, F: Array, q: int,
+                 branch: int, rounds: int):
+    """Reconstruct the scan's per-round counts and τ from ``(D2, F)``.
+
+    Returns ``(tau, [counts_round1, ...])`` with the same integers and the
+    same final float ops as the streaming scan (``new_lo``/``w2`` are the
+    bracket tables of :func:`_hist_tables`).
+    """
+    A = jnp.sum(D2, axis=-1)                                 # #{d1 = r}
+    zeros2 = jnp.zeros(A.shape[:-1] + (2,), A.dtype)
+    suffA = jnp.cumsum(
+        jnp.concatenate([A, zeros2], -1)[..., ::-1], axis=-1)[..., ::-1]
+    c1 = suffA[..., 1:branch + 1]                            # [.., b]
+    jstar1 = jnp.sum((c1 >= q).astype(jnp.int32), axis=-1)   # [..] 0..b
+    counts = [c1]
+    B = jstar1[..., None]
+    nl_B = jnp.take_along_axis(new_lo, B, axis=-1)[..., 0]
+    w2_B = jnp.take_along_axis(w2, B, axis=-1)[..., 0]
+    if rounds == 1:
+        return jnp.maximum(nl_B, 1e-30), counts
+    S2 = jnp.cumsum(D2[..., ::-1], axis=-1)[..., ::-1]       # #{d1=r, d2>=c}
+    rowS2 = jnp.take_along_axis(S2, B[..., None], axis=-2)[..., 0, :]
+    zeros1 = jnp.zeros(A.shape[:-1] + (1,), A.dtype)
+    a_next = jnp.take_along_axis(
+        jnp.concatenate([A, zeros1], -1), B + 1, axis=-1)[..., 0]
+    f_next = jnp.take_along_axis(
+        jnp.concatenate([F, zeros1], -1), B + 1, axis=-1)[..., 0]
+    s_next2 = jnp.take_along_axis(suffA, B + 2, axis=-1)[..., 0]
+    is_top = jnp.arange(1, branch + 1) == branch
+    c2 = (rowS2[..., 1:branch + 1] + s_next2[..., None]
+          + jnp.where(is_top, f_next[..., None], a_next[..., None]))
+    counts.append(c2)
+    jstar2 = jnp.sum((c2 >= q).astype(jnp.int32), axis=-1)
+    tau = nl_B + jstar2.astype(jnp.float32) * w2_B
+    return jnp.maximum(tau, 1e-30), counts
+
+
 def threshold_for_topq(
-    x: Array,
+    x: Optional[Array],
     q: int,
     *,
     branch: int = 64,
     rounds: int = 3,
     axis_name: str | None = None,
     count_fn=None,
+    operand_fn: Optional[TauOperand] = None,
+    tau_impl: str = "scan",
+    with_counts: bool = False,
 ) -> Array:
     """Magnitude threshold ``τ`` with ``count(|x| >= τ) ≈ q`` (always ≥ q).
 
@@ -162,25 +372,88 @@ def threshold_for_topq(
 
     ``x`` may also be batched ``[W, d]`` (the fused whole-level node-step
     path): every lane runs its own bracket, ``count_fn`` then takes
-    ``(mag [W, d], taus [W, B]) → [W, B]`` (default
-    :func:`count_ge_batch`), and a ``[W]`` vector of thresholds is
-    returned — bitwise identical per lane to the 1-D path (same bracket
-    arithmetic, integer candidate counts).
+    ``(mag [W, d], taus [W, B]) → [W, B]``, and a ``[W]`` vector of
+    thresholds is returned — bitwise identical per lane to the 1-D path
+    (same bracket arithmetic, integer candidate counts).
+
+    ``operand_fn`` (a :class:`TauOperand`) replaces the materialized ``x``
+    entirely — counts, bracket top and histogram all stream through its
+    callbacks (the fused-operand kernel path); ``x`` may then be None.
+
+    ``tau_impl``: "scan" (the streaming multi-pass oracle) or "hist"
+    (rounds ≤ 2 only — one joint digit histogram replaces the sequential
+    passes; per-round candidate counts and the returned τ are bit-identical
+    to the scan, see :func:`_hist_bisect`).
+
+    ``with_counts=True`` additionally returns the per-round candidate
+    counts (post-``psum``), stacked [rounds, .., branch] — the hist-vs-scan
+    parity tests key on these integers.
+
+    On a single host (no ``axis_name``/``count_fn``/``operand_fn``/
+    ``with_counts``) the scan runs count-free: one ``top_k(q)`` resolves
+    the ``count >= q`` predicate for every candidate of every round, with
+    bitwise-identical τ (see the inline comment).
     """
-    batched = x.ndim == 2
-    if count_fn is None:
-        count_fn = count_ge_batch if batched else count_ge
-    mag = jnp.abs(x.astype(jnp.float32))
-    if mag.size:
-        hi = jnp.max(mag, axis=-1) if batched else jnp.max(mag)
+    if tau_impl not in ("scan", "hist"):
+        raise ValueError(f"unknown tau_impl {tau_impl!r}")
+    # Single-host shortcut: the bisection consumes counts ONLY through the
+    # predicate count(τ_j) >= q, and #{|x| >= t} >= q  ⟺  t <= the q-th
+    # largest |x| (exact float comparisons, ties included) — so one
+    # ``lax.top_k(q)`` replaces every per-round count sweep (and the
+    # operand construction entirely). The jstar integers, and therefore τ,
+    # are bitwise identical to the counting scan. Invalid whenever counts
+    # are observable (``with_counts``), mesh-reduced (per-shard q-th
+    # values do not compose into the global predicate), or routed through
+    # a caller-specified count path.
+    kth = None
+    if (tau_impl == "scan" and axis_name is None and operand_fn is None
+            and count_fn is None and not with_counts):
+        operand = None
+        mag = jnp.abs(x.astype(jnp.float32))
+        batched = x.ndim == 2
+        d = mag.shape[-1]
+        if not mag.size:
+            hi = jnp.zeros(mag.shape[:-1], jnp.float32)
+        else:
+            hi = jnp.max(mag, axis=-1) if batched else jnp.max(mag)
+        if q <= 0:
+            kth = jnp.full(hi.shape, jnp.inf)        # count >= q always
+        elif q > d:
+            kth = jnp.full(hi.shape, -jnp.inf)       # count < q always
+        else:
+            # min over the top-q block == the q-th largest; NOT
+            # ``[..., -1]`` — XLA:CPU rewrites topk+slice into a full
+            # stable sort (30× slower than its TopK custom call)
+            kth = jnp.min(jax.lax.top_k(mag, q)[0], axis=-1)
     else:
-        hi = (jnp.zeros(mag.shape[:-1], jnp.float32) if batched
-              else jnp.float32(0))
+        operand = (tau_operand(x, count_fn) if operand_fn is None
+                   else operand_fn)
+        batched = operand.batched
+        hi = operand.max_abs()
     if axis_name is not None:
         hi = jax.lax.pmax(hi, axis_name)
     # strictly above max ⇒ count(hi) = 0 < q; tiny floor handles all-zero x
     hi = jnp.maximum(hi, 1e-30) * jnp.float32(1 + 1e-6)
     lo = jnp.zeros_like(hi)
+
+    if tau_impl == "hist":
+        if rounds not in (1, 2):
+            raise ValueError("tau_impl='hist' folds the whole search into "
+                             "one histogram pass; rounds must be 1 or 2, "
+                             f"got {rounds}")
+        if branch > 1024:
+            raise ValueError("tau_impl='hist' cross-bracket count exactness "
+                             f"needs branch <= 1024, got {branch}")
+        if operand.hist is None:
+            raise ValueError("operand_fn has no hist implementation")
+        tables = _hist_tables(lo, hi, branch)
+        D2, F = operand.hist(tables)
+        if axis_name is not None:
+            D2 = jax.lax.psum(D2, axis_name)
+            F = jax.lax.psum(F, axis_name)
+        tau, counts = _hist_bisect(tables[1], tables[2], D2, F, q, branch,
+                                   rounds)
+        return (tau, jnp.stack(counts)) if with_counts else tau
 
     def round_body(carry, _):
         lo, hi = carry
@@ -188,28 +461,34 @@ def threshold_for_topq(
         steps = jnp.arange(1, branch + 1, dtype=jnp.float32)
         taus = (lo[:, None] + w[:, None] * steps if batched
                 else lo + w * steps)
-        counts = count_fn(mag, taus)
-        if axis_name is not None:
-            counts = jax.lax.psum(counts, axis_name)
+        if kth is not None:
+            keeps_q = (kth[..., None] if batched else kth) >= taus
+            counts = None
+        else:
+            counts = operand.count(taus)
+            if axis_name is not None:
+                counts = jax.lax.psum(counts, axis_name)
+            keeps_q = counts >= q
         # counts is non-increasing in tau; jstar = #{j : counts_j >= q} is
         # the largest candidate index (1-based) still keeping >= q.
-        jstar = jnp.sum((counts >= q).astype(jnp.int32), axis=-1)
+        jstar = jnp.sum(keeps_q.astype(jnp.int32), axis=-1)
         new_lo = lo + jstar.astype(jnp.float32) * w
         new_hi = new_lo + w
-        return (new_lo, new_hi), None
+        return (new_lo, new_hi), counts if with_counts else None
 
-    (lo, hi), _ = jax.lax.scan(round_body, (lo, hi), None, length=rounds)
-    return jnp.maximum(lo, 1e-30)
+    (lo, hi), ys = jax.lax.scan(round_body, (lo, hi), None, length=rounds)
+    tau = jnp.maximum(lo, 1e-30)
+    return (tau, ys) if with_counts else tau
 
 
 def topq_by_threshold(
     x: Array, q: int, *, branch: int = 64, rounds: int = 3,
-    axis_name: str | None = None, count_fn=None,
+    axis_name: str | None = None, count_fn=None, tau_impl: str = "scan",
 ) -> Array:
     """Approximate ``S(x, Q)`` via the bisection threshold (≥ q survivors)."""
     tau = threshold_for_topq(
         x, q, branch=branch, rounds=rounds, axis_name=axis_name,
-        count_fn=count_fn)
+        count_fn=count_fn, tau_impl=tau_impl)
     return jnp.where(jnp.abs(x) >= tau, x, 0)
 
 

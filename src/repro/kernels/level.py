@@ -117,21 +117,56 @@ def _gmask_operand(gmask, w_lanes: int, gmask_cohorts: int, n_blocks: int,
     return _pad_lanes(gmask.astype(jnp.float32), n_blocks, pad), _blk()
 
 
+def _drop_pad_level(counts, taus, pad: int):
+    """Subtract the zero-padding contribution from per-lane counts.
+
+    Pad elements reconstruct to exactly 0.0 under every operand form
+    (g = e = γ_in = m = 0 ⇒ w·0+0 = 0, p·0+0 = 0, (1−0)·0 = 0), so they
+    inflate ``counts[w, b]`` by ``pad`` iff ``taus[w, b] <= 0``. The
+    bisection brackets are strictly positive (no-op there), but the
+    exclusion is enforced here, not just asserted in tests."""
+    if pad == 0:
+        return counts
+    return counts - jnp.where(taus <= 0, jnp.int32(pad), jnp.int32(0))
+
+
+def _pinned_tile_err(sq):
+    """Pairwise-fold an (SUBLANES, LANES) tile of squares to a scalar.
+
+    The documented ``err_sq_mode="kernel"`` summation order: lanes fold
+    pairwise 1024 → 512 → … → 1 (``x[:, :n] + x[:, n:2n]``), then sublanes
+    8 → 4 → 2 → 1; block scalars accumulate left-to-right in grid order.
+    """
+    sq = sq.reshape(SUBLANES, LANES)
+    n = LANES
+    while n > 1:
+        n //= 2
+        sq = sq[:, :n] + sq[:, n:2 * n]
+    m = SUBLANES
+    while m > 1:
+        m //= 2
+        sq = sq[:m, :] + sq[m:2 * m, :]
+    return sq[0, 0]
+
+
 # ---------------------------------------------------------------------------
 # sparsify_ef_level — Algs 1/2/4 EF + sparsify stage, one pass per level
 # ---------------------------------------------------------------------------
 
 def _sparsify_ef_level_kernel(g_ref, e_ref, w_ref, tau_ref, v_ref, *rest,
-                              has_mask: bool):
+                              has_mask: bool, with_err: bool):
     if has_mask:
-        m_ref, gbar_ref, enew_ref, nnz_ref = rest
-    else:
-        gbar_ref, enew_ref, nnz_ref = rest
+        m_ref, *rest = rest
+    if with_err:
+        *rest, err_ref = rest
+    gbar_ref, enew_ref, nnz_ref = rest
     j = pl.program_id(1)
 
     @pl.when(j == 0)
     def _init():
         nnz_ref[0] = jnp.int32(0)
+        if with_err:
+            err_ref[0] = jnp.float32(0)
 
     ok = v_ref[0] > 0
 
@@ -145,9 +180,12 @@ def _sparsify_ef_level_kernel(g_ref, e_ref, w_ref, tau_ref, v_ref, *rest,
         if has_mask:
             keep = keep | (m_ref[...] > 0)
         gbar = jnp.where(keep, gt, 0.0)
+        e_new = gt - gbar
         gbar_ref[...] = gbar.astype(gbar_ref.dtype)
-        enew_ref[...] = (gt - gbar).astype(enew_ref.dtype)
+        enew_ref[...] = e_new.astype(enew_ref.dtype)
         nnz_ref[0] += jnp.sum(gbar != 0).astype(jnp.int32)
+        if with_err:
+            err_ref[0] += _pinned_tile_err(e_new * e_new)
 
     @pl.when(jnp.logical_not(ok))
     def _skip():
@@ -155,14 +193,17 @@ def _sparsify_ef_level_kernel(g_ref, e_ref, w_ref, tau_ref, v_ref, *rest,
         enew_ref[...] = jnp.zeros_like(enew_ref)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("with_err", "interpret"))
 def sparsify_ef_level_pallas(g, e, mask_in, weight, tau, valid, *,
+                             with_err: bool = False,
                              interpret: bool = False):
     """Batched fused EF+sparsify. g,e: [W,d]; weight,tau,valid: [W];
     mask_in (optional [W,d]): keep mask OR-ed with the τ test (None skips
     the mask stream entirely — the pure-threshold sparsifier path).
 
-    Returns (ḡ [W,d] g.dtype, e' [W,d] e.dtype, nnz [W] int32).
+    Returns (ḡ [W,d] g.dtype, e' [W,d] e.dtype, nnz [W] int32); with
+    ``with_err``, appends the in-kernel pinned-order ‖e'‖² ([W] f32, see
+    :func:`_pinned_tile_err`) — no separate jnp pass over e'.
     """
     w_lanes, d = g.shape
     n_blocks, pad = _geometry(d)
@@ -176,21 +217,29 @@ def sparsify_ef_level_pallas(g, e, mask_in, weight, tau, valid, *,
         operands.append(_pad_lanes(mask_in.astype(jnp.float32), n_blocks,
                                    pad))
         in_specs.append(_blk())
+    out_specs = [_blk(), _blk(), _lane()]
+    out_shape = [
+        jax.ShapeDtypeStruct(gp.shape, g.dtype),
+        jax.ShapeDtypeStruct(ep.shape, e.dtype),
+        jax.ShapeDtypeStruct((w_lanes,), jnp.int32),
+    ]
+    if with_err:
+        out_specs.append(_lane())
+        out_shape.append(jax.ShapeDtypeStruct((w_lanes,), jnp.float32))
 
-    gbar, e_new, nnz = pl.pallas_call(
-        functools.partial(_sparsify_ef_level_kernel, has_mask=has_mask),
+    out = pl.pallas_call(
+        functools.partial(_sparsify_ef_level_kernel, has_mask=has_mask,
+                          with_err=with_err),
         grid=(w_lanes, n_blocks),
         in_specs=in_specs,
-        out_specs=[_blk(), _blk(), _lane()],
-        out_shape=[
-            jax.ShapeDtypeStruct(gp.shape, g.dtype),
-            jax.ShapeDtypeStruct(ep.shape, e.dtype),
-            jax.ShapeDtypeStruct((w_lanes,), jnp.int32),
-        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
     )(*operands)
-    return (gbar.reshape(w_lanes, -1)[:, :d],
-            e_new.reshape(w_lanes, -1)[:, :d], nnz)
+    gbar, e_new, nnz = out[:3]
+    res = (gbar.reshape(w_lanes, -1)[:, :d],
+           e_new.reshape(w_lanes, -1)[:, :d], nnz)
+    return res + (out[3],) if with_err else res
 
 
 # ---------------------------------------------------------------------------
@@ -276,22 +325,28 @@ def chain_accum_level_pallas(gamma_in, gbar, valid, gmask=None, *,
 # ---------------------------------------------------------------------------
 
 def _cl_fuse_level_kernel(g_ref, e_ref, gin_ref, w_ref, tau_ref, p_ref,
-                          v_ref, *rest, has_gmask: bool, has_mask: bool):
+                          v_ref, *rest, has_gmask: bool, has_mask: bool,
+                          with_err: bool):
     idx = 0
-    gm_ref = mask_ref = None
+    gm_ref = mask_ref = err_ref = None
     if has_gmask:
         gm_ref = rest[idx]
         idx += 1
     if has_mask:
         mask_ref = rest[idx]
         idx += 1
-    gout_ref, enew_ref, nnz_ref, off_ref = rest[idx:]
+    if with_err:
+        gout_ref, enew_ref, nnz_ref, off_ref, err_ref = rest[idx:]
+    else:
+        gout_ref, enew_ref, nnz_ref, off_ref = rest[idx:]
     j = pl.program_id(1)
 
     @pl.when(j == 0)
     def _init():
         nnz_ref[0] = jnp.int32(0)
         off_ref[0] = jnp.int32(0)
+        if with_err:
+            err_ref[0] = jnp.float32(0)
 
     ok = v_ref[0] > 0
 
@@ -326,6 +381,8 @@ def _cl_fuse_level_kernel(g_ref, e_ref, gin_ref, w_ref, tau_ref, p_ref,
             off_ref[0] += jnp.sum(nz & (gm_ref[...] <= 0)).astype(jnp.int32)
         else:
             off_ref[0] += jnp.sum(nz).astype(jnp.int32)
+        if with_err:
+            err_ref[0] += _pinned_tile_err(e_new * e_new)
 
     @pl.when(jnp.logical_not(ok))
     def _skip():
@@ -333,10 +390,11 @@ def _cl_fuse_level_kernel(g_ref, e_ref, gin_ref, w_ref, tau_ref, p_ref,
         enew_ref[...] = jnp.zeros_like(enew_ref)
 
 
-@functools.partial(jax.jit, static_argnames=("gmask_cohorts", "interpret"))
+@functools.partial(jax.jit, static_argnames=("gmask_cohorts", "with_err",
+                                             "interpret"))
 def cl_fuse_level_pallas(g, e, gamma_in, weight, tau, participate, valid,
                          gmask=None, mask_in=None, *,
-                         gmask_cohorts: int = 0,
+                         gmask_cohorts: int = 0, with_err: bool = False,
                          interpret: bool = False):
     """Batched complete CL node step (Algs 3/5, stragglers included).
 
@@ -348,7 +406,9 @@ def cl_fuse_level_pallas(g, e, gamma_in, weight, tau, participate, valid,
     (pass τ=+inf for a pure-mask exact sparsifier).
 
     Returns (γ_out [W,d], e' [W,d], nnz [W] i32, nnz_off [W] i32) where
-    ``nnz_off`` is the off-global-mask support (= nnz when gmask is None).
+    ``nnz_off`` is the off-global-mask support (= nnz when gmask is None);
+    with ``with_err``, appends the in-kernel pinned-order ‖e'‖² ([W] f32,
+    see :func:`_pinned_tile_err`).
     """
     w_lanes, d = g.shape
     n_blocks, pad = _geometry(d)
@@ -370,23 +430,30 @@ def cl_fuse_level_pallas(g, e, gamma_in, weight, tau, participate, valid,
         operands.append(_pad_lanes(mask_in.astype(jnp.float32), n_blocks,
                                    pad))
         in_specs.append(_blk())
+    out_specs = [_blk(), _blk(), _lane(), _lane()]
+    out_shape = [
+        jax.ShapeDtypeStruct(gi.shape, gamma_in.dtype),
+        jax.ShapeDtypeStruct(ep.shape, e.dtype),
+        jax.ShapeDtypeStruct((w_lanes,), jnp.int32),
+        jax.ShapeDtypeStruct((w_lanes,), jnp.int32),
+    ]
+    if with_err:
+        out_specs.append(_lane())
+        out_shape.append(jax.ShapeDtypeStruct((w_lanes,), jnp.float32))
 
-    gout, e_new, nnz, nnz_off = pl.pallas_call(
+    out = pl.pallas_call(
         functools.partial(_cl_fuse_level_kernel, has_gmask=has_gmask,
-                          has_mask=has_mask),
+                          has_mask=has_mask, with_err=with_err),
         grid=(w_lanes, n_blocks),
         in_specs=in_specs,
-        out_specs=[_blk(), _blk(), _lane(), _lane()],
-        out_shape=[
-            jax.ShapeDtypeStruct(gi.shape, gamma_in.dtype),
-            jax.ShapeDtypeStruct(ep.shape, e.dtype),
-            jax.ShapeDtypeStruct((w_lanes,), jnp.int32),
-            jax.ShapeDtypeStruct((w_lanes,), jnp.int32),
-        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
     )(*operands)
-    return (gout.reshape(w_lanes, -1)[:, :d],
-            e_new.reshape(w_lanes, -1)[:, :d], nnz, nnz_off)
+    gout, e_new, nnz, nnz_off = out[:4]
+    res = (gout.reshape(w_lanes, -1)[:, :d],
+           e_new.reshape(w_lanes, -1)[:, :d], nnz, nnz_off)
+    return res + (out[4],) if with_err else res
 
 
 # ---------------------------------------------------------------------------
@@ -416,13 +483,15 @@ def count_ge_level_pallas(x: jax.Array, taus: jax.Array, *,
     """counts[w, b] = #{i : |x_{w,i}| >= taus_{w,b}}; x [W,d], taus [W,B].
 
     Per-lane brackets of the batched branch-and-bisect Top-Q threshold
-    search. Zero padding is excluded by construction when taus > 0 (the
-    bisection brackets always are).
+    search. The zero padding's contribution is subtracted in the wrapper
+    (:func:`_drop_pad_level`) — exact for any taus, including
+    non-positive ones.
     """
     w_lanes, d = x.shape
     branch = taus.shape[-1]
     n_blocks, pad = _geometry(d)
     xp = _pad_lanes(x.astype(jnp.float32), n_blocks, pad)
+    taus = taus.astype(jnp.float32)
 
     out = pl.pallas_call(
         functools.partial(_count_ge_level_kernel, branch=branch),
@@ -432,5 +501,246 @@ def count_ge_level_pallas(x: jax.Array, taus: jax.Array, *,
         out_specs=pl.BlockSpec((1, branch), lambda w, j: (w, 0)),
         out_shape=jax.ShapeDtypeStruct((w_lanes, branch), jnp.int32),
         interpret=interpret,
-    )(xp, taus.astype(jnp.float32))
-    return out
+    )(xp, taus)
+    return _drop_pad_level(out, taus, pad)
+
+
+# ---------------------------------------------------------------------------
+# count_ge_fused_level — operand-on-the-fly candidate counting per lane
+# ---------------------------------------------------------------------------
+
+def _fused_operand_tile(g_ref, e_ref, gin_ref, gm_ref, w_ref, p_ref, *,
+                        include_gamma: bool, has_gmask: bool):
+    """Reconstruct one (8, LANES) tile of the bisection operand in VMEM.
+
+    Same float expression per element as the cl_fuse/sparsify_ef kernels
+    (and the materialized jnp path): ``(1−m)·(p·(w·g + e) + γ_in)`` with
+    the γ/mask factors dropped per the static flags.
+    """
+    op = (w_ref[0] * g_ref[...].astype(jnp.float32)
+          + e_ref[...].astype(jnp.float32))
+    if include_gamma:
+        op = p_ref[0] * op + gin_ref[...].astype(jnp.float32)
+    if has_gmask:
+        op = (1.0 - gm_ref[...]) * op
+    return op
+
+
+def _count_ge_fused_level_kernel(g_ref, e_ref, *rest, branch: int,
+                                 include_gamma: bool, has_gmask: bool):
+    idx = 0
+    gin_ref = gm_ref = None
+    if include_gamma:
+        gin_ref = rest[idx]
+        idx += 1
+    w_ref, p_ref = rest[idx:idx + 2]
+    idx += 2
+    if has_gmask:
+        gm_ref = rest[idx]
+        idx += 1
+    taus_ref, out_ref = rest[idx:]
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    mag = jnp.abs(_fused_operand_tile(
+        g_ref, e_ref, gin_ref, gm_ref, w_ref, p_ref,
+        include_gamma=include_gamma, has_gmask=has_gmask))
+
+    def body(b, _):
+        out_ref[0, b] += jnp.sum(mag >= taus_ref[0, b]).astype(jnp.int32)
+        return ()
+
+    jax.lax.fori_loop(0, branch, body, ())
+
+
+@functools.partial(jax.jit, static_argnames=("include_gamma",
+                                             "gmask_cohorts", "interpret"))
+def count_ge_fused_level_pallas(g, e, gamma_in, weight, participate, taus,
+                                gmask=None, *, include_gamma: bool = False,
+                                gmask_cohorts: int = 0,
+                                interpret: bool = False) -> jax.Array:
+    """Per-lane candidate counts of the fused bisection operand.
+
+    The τ-search operand (see :func:`_fused_operand_tile`) is rebuilt
+    tile-by-tile from the raw node inputs — the materialized-g̃ HBM
+    round-trip before ``threshold_for_topq`` disappears. g, e[, γ_in]:
+    [W, d]; weight, participate: [W]; taus: [W, B]; gmask per
+    :func:`_gmask_operand`. Returns counts [W, B] i32; zero padding
+    reconstructs to exactly 0.0 and is subtracted in the wrapper.
+    """
+    w_lanes, d = g.shape
+    branch = taus.shape[-1]
+    n_blocks, pad = _geometry(d)
+    has_gmask = gmask is not None
+    taus = taus.astype(jnp.float32)
+    operands = [_pad_lanes(g.astype(jnp.float32), n_blocks, pad),
+                _pad_lanes(e.astype(jnp.float32), n_blocks, pad)]
+    in_specs = [_blk(), _blk()]
+    if include_gamma:
+        operands.append(_pad_lanes(gamma_in.astype(jnp.float32), n_blocks,
+                                   pad))
+        in_specs.append(_blk())
+    operands += [weight.astype(jnp.float32),
+                 participate.astype(jnp.float32)]
+    in_specs += [_lane(), _lane()]
+    if has_gmask:
+        op, spec = _gmask_operand(gmask, w_lanes, gmask_cohorts, n_blocks,
+                                  pad)
+        operands.append(op)
+        in_specs.append(spec)
+    operands.append(taus)
+    in_specs.append(pl.BlockSpec((1, branch), lambda w, j: (w, 0)))
+
+    out = pl.pallas_call(
+        functools.partial(_count_ge_fused_level_kernel, branch=branch,
+                          include_gamma=include_gamma, has_gmask=has_gmask),
+        grid=(w_lanes, n_blocks),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, branch), lambda w, j: (w, 0)),
+        out_shape=jax.ShapeDtypeStruct((w_lanes, branch), jnp.int32),
+        interpret=interpret,
+    )(*operands)
+    return _drop_pad_level(out, taus, pad)
+
+
+# ---------------------------------------------------------------------------
+# hist_topq_level — one-pass joint digit histogram (tau_impl="hist")
+# ---------------------------------------------------------------------------
+
+def _hist_topq_level_kernel(g_ref, e_ref, *rest, branch: int,
+                            include_gamma: bool, has_gmask: bool):
+    idx = 0
+    gin_ref = gm_ref = None
+    if include_gamma:
+        gin_ref = rest[idx]
+        idx += 1
+    w_ref, p_ref = rest[idx:idx + 2]
+    idx += 2
+    if has_gmask:
+        gm_ref = rest[idx]
+        idx += 1
+    tau1_ref, nl_ref, w2_ref, ts_ref, d2_ref, f_ref = rest[idx:]
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        d2_ref[...] = jnp.zeros_like(d2_ref)
+        f_ref[...] = jnp.zeros_like(f_ref)
+
+    mag = jnp.abs(_fused_operand_tile(
+        g_ref, e_ref, gin_ref, gm_ref, w_ref, p_ref,
+        include_gamma=include_gamma, has_gmask=has_gmask))
+
+    # round-1 digit: #{candidates <= |x|} — one vectorized compare per
+    # candidate (the whole search's streaming passes collapse to this one)
+    def cnt1(b, acc):
+        return acc + (mag >= tau1_ref[0, b]).astype(jnp.int32)
+
+    d1 = jax.lax.fori_loop(0, branch, cnt1, jnp.zeros_like(mag, jnp.int32))
+
+    # per-element bracket tables via one-hot select-sums (gathers are
+    # hostile to the VPU; d1 is exact so exactly one term fires)
+    def gather(bb, carry):
+        nl, w2e, te = carry
+        sel = d1 == bb
+        nl = nl + jnp.where(sel, nl_ref[0, bb], 0.0)
+        w2e = w2e + jnp.where(sel, w2_ref[0, bb], 0.0)
+        te = te + jnp.where(sel, ts_ref[0, bb], 0.0)
+        return nl, w2e, te
+
+    zeros = jnp.zeros_like(mag)
+    nl, w2e, te = jax.lax.fori_loop(0, branch + 1, gather,
+                                    (zeros, zeros, zeros))
+
+    # round-2 digit within the element's own bracket — same candidate
+    # expression fl(nl + fl(w2·j)) as the scan's second round
+    def cnt2(b, acc):
+        cand = nl + w2e * (b + 1).astype(jnp.float32)
+        return acc + (mag >= cand).astype(jnp.int32)
+
+    d2 = jax.lax.fori_loop(0, branch, cnt2, jnp.zeros_like(mag, jnp.int32))
+    flag = (mag >= te).astype(jnp.float32)
+
+    # joint histogram via one-hot contraction: D2[r, c] = Σ 1[d1=r]·1[d2=c]
+    # — one dot_general on the MXU, exact in f32 (counts < 2²⁴)
+    iota = jax.lax.broadcasted_iota(jnp.int32,
+                                    (SUBLANES, LANES, branch + 1), 2)
+    oh1 = (d1[0, 0][..., None] == iota).astype(jnp.float32)
+    oh2 = (d2[0, 0][..., None] == iota).astype(jnp.float32)
+    dnums = (((0, 1), (0, 1)), ((), ()))
+    d2_ref[0] += jax.lax.dot_general(
+        oh1, oh2, dnums, preferred_element_type=jnp.float32
+    ).astype(jnp.int32)
+    f_ref[0] += jax.lax.dot_general(
+        oh1, flag[0, 0], dnums, preferred_element_type=jnp.float32
+    ).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("include_gamma",
+                                             "gmask_cohorts", "interpret"))
+def hist_topq_level_pallas(g, e, gamma_in, weight, participate, tables,
+                           gmask=None, *, include_gamma: bool = False,
+                           gmask_cohorts: int = 0,
+                           interpret: bool = False):
+    """One-pass joint digit histogram of the fused bisection operand.
+
+    Collapses the `hist_rounds` sequential streaming passes of the
+    branch-and-bisect scan into a single sweep: each element is binned by
+    its round-1 digit d1 (which of the branch+1 round-1 brackets it falls
+    in) and its round-2 digit d2 (candidate count within its *own*
+    bracket), plus an exact flag for the bracket-top candidate. The bin
+    edges are the scan's own bracket arithmetic
+    (``repro.core.sparsify._hist_tables``), so the reconstructed per-round
+    candidate counts are bit-identical integers to the scan
+    (``_hist_bisect`` — branch=64, rounds=2 ⇒ 64² final resolution).
+
+    ``tables = (tau1 [W,b], new_lo [W,b+1], w2 [W,b+1], top_shift [W,b+1])``;
+    returns ``(D2 [W, b+1, b+1] i32, F [W, b+1] i32)``. Zero padding
+    reconstructs to operand 0.0 → bin D2[·, 0, 0], which the
+    reconstruction never reads (all candidates are strictly positive).
+    """
+    w_lanes, d = g.shape
+    tau1, new_lo, w2, top_shift = tables
+    branch = tau1.shape[-1]
+    n_blocks, pad = _geometry(d)
+    has_gmask = gmask is not None
+    operands = [_pad_lanes(g.astype(jnp.float32), n_blocks, pad),
+                _pad_lanes(e.astype(jnp.float32), n_blocks, pad)]
+    in_specs = [_blk(), _blk()]
+    if include_gamma:
+        operands.append(_pad_lanes(gamma_in.astype(jnp.float32), n_blocks,
+                                   pad))
+        in_specs.append(_blk())
+    operands += [weight.astype(jnp.float32),
+                 participate.astype(jnp.float32)]
+    in_specs += [_lane(), _lane()]
+    if has_gmask:
+        op, spec = _gmask_operand(gmask, w_lanes, gmask_cohorts, n_blocks,
+                                  pad)
+        operands.append(op)
+        in_specs.append(spec)
+    row = lambda n: pl.BlockSpec((1, n), lambda w, j: (w, 0))
+    operands += [tau1.astype(jnp.float32), new_lo.astype(jnp.float32),
+                 w2.astype(jnp.float32), top_shift.astype(jnp.float32)]
+    in_specs += [row(branch), row(branch + 1), row(branch + 1),
+                 row(branch + 1)]
+
+    D2, F = pl.pallas_call(
+        functools.partial(_hist_topq_level_kernel, branch=branch,
+                          include_gamma=include_gamma, has_gmask=has_gmask),
+        grid=(w_lanes, n_blocks),
+        in_specs=in_specs,
+        out_specs=[pl.BlockSpec((1, branch + 1, branch + 1),
+                                lambda w, j: (w, 0, 0)),
+                   row(branch + 1)],
+        out_shape=[
+            jax.ShapeDtypeStruct((w_lanes, branch + 1, branch + 1),
+                                 jnp.int32),
+            jax.ShapeDtypeStruct((w_lanes, branch + 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(*operands)
+    return D2, F

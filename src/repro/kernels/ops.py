@@ -3,7 +3,10 @@
 ``use_pallas``: "auto" (Pallas compiled on TPU, Pallas-interpret off-TPU
 when ``REPRO_PALLAS_INTERPRET=1``, else jnp ref), "always" (interpret mode
 off-TPU — used by kernel tests), "never" (pure-jnp ref — used by the
-dry-run/roofline path so ``cost_analysis`` sees native HLO).
+dry-run/roofline path so ``cost_analysis`` sees native HLO), "ref" (jnp
+ref kernels like "never", but the fused *structure* — operand-on-the-fly
+τ search, fused node steps — stays on; the honest host benchmark of the
+fused data flow without Pallas interpret overhead).
 """
 
 from __future__ import annotations
@@ -18,12 +21,15 @@ from repro.kernels import ref
 from repro.kernels.chain_accum import chain_accum_pallas, cl_fuse_pallas
 from repro.kernels.level import (chain_accum_level_pallas,
                                  cl_fuse_level_pallas,
+                                 count_ge_fused_level_pallas,
                                  count_ge_level_pallas,
+                                 hist_topq_level_pallas,
                                  sparsify_ef_level_pallas)
 from repro.kernels.sparsify_ef import sparsify_ef_pallas
-from repro.kernels.topq_threshold import count_ge_pallas
+from repro.kernels.topq_threshold import (count_ge_fused_pallas,
+                                          count_ge_pallas)
 
-Mode = Literal["auto", "always", "never"]
+Mode = Literal["auto", "always", "never", "ref"]
 
 
 def resolve(mode: Mode) -> tuple[bool, bool]:
@@ -34,8 +40,13 @@ def resolve(mode: Mode) -> tuple[bool, bool]:
     ``REPRO_PALLAS_INTERPRET=1``), pure-jnp reference otherwise — the
     fused node-step paths in :mod:`repro.core.algorithms` key off this, so
     the host executors stay the bit-exact jnp oracle off-TPU by default.
+
+    ``"ref"`` resolves to the jnp reference kernels too; what distinguishes
+    it from ``"never"`` is *structural*: ``fused_node_steps`` treats it as
+    fused, so the whole-level fused paths (and the fused-operand τ search)
+    run with jnp kernel bodies.
     """
-    if mode == "never":
+    if mode in ("never", "ref"):
         return False, False
     on_tpu = jax.default_backend() == "tpu"
     if mode == "always":
@@ -88,16 +99,23 @@ def cl_fuse(g, e, gamma_in, weight, tau, *, mode: Mode = "auto"):
 # ---------------------------------------------------------------------------
 
 def sparsify_ef_level(g, e, mask_in, weight, tau, valid, *,
-                      mode: Mode = "auto"):
-    """Batched fused EF+sparsify over a level's W lanes ([W, d] inputs)."""
+                      with_err: bool = False, mode: Mode = "auto"):
+    """Batched fused EF+sparsify over a level's W lanes ([W, d] inputs).
+
+    ``with_err=True`` appends the in-kernel pinned-order ‖e'‖² ([W] f32) —
+    the ``err_sq_mode="kernel"`` path; both backends use the identical
+    pairwise-tree fold.
+    """
     use, interp = _resolve(mode)
     if use:
         return sparsify_ef_level_pallas(g, e, mask_in, jnp.asarray(weight),
                                         jnp.asarray(tau),
                                         jnp.asarray(valid),
+                                        with_err=with_err,
                                         interpret=interp)
     return ref.ref_sparsify_ef_level(g, e, mask_in, jnp.asarray(weight),
-                                     jnp.asarray(tau), jnp.asarray(valid))
+                                     jnp.asarray(tau), jnp.asarray(valid),
+                                     with_err=with_err)
 
 
 def chain_accum_level(gamma_in, gbar, valid, gmask=None, *,
@@ -118,8 +136,11 @@ def chain_accum_level(gamma_in, gbar, valid, gmask=None, *,
 
 def cl_fuse_level(g, e, gamma_in, weight, tau, participate, valid,
                   gmask=None, mask_in=None, *, gmask_cohorts: int = 0,
-                  mode: Mode = "auto"):
-    """Batched complete CL node step (Algs 3/5, stragglers included)."""
+                  with_err: bool = False, mode: Mode = "auto"):
+    """Batched complete CL node step (Algs 3/5, stragglers included).
+
+    ``with_err=True`` appends the in-kernel pinned-order ‖e'‖² ([W] f32).
+    """
     use, interp = _resolve(mode)
     if use:
         return cl_fuse_level_pallas(g, e, gamma_in, jnp.asarray(weight),
@@ -127,11 +148,12 @@ def cl_fuse_level(g, e, gamma_in, weight, tau, participate, valid,
                                     jnp.asarray(participate),
                                     jnp.asarray(valid), gmask, mask_in,
                                     gmask_cohorts=gmask_cohorts,
-                                    interpret=interp)
+                                    with_err=with_err, interpret=interp)
     return ref.ref_cl_fuse_level(g, e, gamma_in, jnp.asarray(weight),
                                  jnp.asarray(tau), jnp.asarray(participate),
                                  jnp.asarray(valid), gmask, mask_in,
-                                 gmask_cohorts=gmask_cohorts)
+                                 gmask_cohorts=gmask_cohorts,
+                                 with_err=with_err)
 
 
 def count_ge_level(x: jax.Array, taus: jax.Array, *, mode: Mode = "auto"):
@@ -140,3 +162,66 @@ def count_ge_level(x: jax.Array, taus: jax.Array, *, mode: Mode = "auto"):
     if use:
         return count_ge_level_pallas(x, taus, interpret=interp)
     return ref.ref_count_ge_level(x, taus)
+
+
+# ---------------------------------------------------------------------------
+# Fused-operand τ search (no materialized bisection operand)
+# ---------------------------------------------------------------------------
+
+def count_ge_fused(g, e, gamma_in, weight, participate, taus, *,
+                   include_gamma: bool = False, mode: Mode = "auto"):
+    """Candidate counts of the 1-D bisection operand rebuilt on the fly.
+
+    Operand ``w·g + e`` (``p·(w·g + e) + γ_in`` when ``include_gamma``)
+    is reconstructed tile-by-tile from the raw node inputs — no HBM
+    materialization before the τ search. taus [B] nondecreasing → [B] i32.
+    """
+    use, interp = _resolve(mode)
+    if use:
+        return count_ge_fused_pallas(g, e, gamma_in, jnp.asarray(weight),
+                                     jnp.asarray(participate), taus,
+                                     include_gamma=include_gamma,
+                                     interpret=interp)
+    return ref.ref_count_ge_fused(g, e, gamma_in, jnp.asarray(weight),
+                                  jnp.asarray(participate), taus,
+                                  include_gamma=include_gamma)
+
+
+def count_ge_fused_level(g, e, gamma_in, weight, participate, taus,
+                         gmask=None, *, include_gamma: bool = False,
+                         gmask_cohorts: int = 0, mode: Mode = "auto"):
+    """Per-lane candidate counts of the fused bisection operand.
+
+    Full operand family ``(1−m)·(p·(w·g + e) + γ_in)`` with the γ/mask
+    factors dropped per flags; [W, d] inputs, taus [W, B] → [W, B] i32.
+    """
+    use, interp = _resolve(mode)
+    if use:
+        return count_ge_fused_level_pallas(
+            g, e, gamma_in, jnp.asarray(weight), jnp.asarray(participate),
+            taus, gmask, include_gamma=include_gamma,
+            gmask_cohorts=gmask_cohorts, interpret=interp)
+    return ref.ref_count_ge_fused_level(
+        g, e, gamma_in, jnp.asarray(weight), jnp.asarray(participate),
+        taus, gmask, include_gamma=include_gamma,
+        gmask_cohorts=gmask_cohorts)
+
+
+def hist_topq_level(g, e, gamma_in, weight, participate, tables, gmask=None,
+                    *, include_gamma: bool = False, gmask_cohorts: int = 0,
+                    mode: Mode = "auto"):
+    """One-pass joint digit histogram of the fused operand (tau_impl="hist").
+
+    ``tables`` per ``repro.core.sparsify._hist_tables``; returns
+    ``(D2 [W, b+1, b+1] i32, F [W, b+1] i32)``.
+    """
+    use, interp = _resolve(mode)
+    if use:
+        return hist_topq_level_pallas(
+            g, e, gamma_in, jnp.asarray(weight), jnp.asarray(participate),
+            tables, gmask, include_gamma=include_gamma,
+            gmask_cohorts=gmask_cohorts, interpret=interp)
+    return ref.ref_hist_topq_level(
+        g, e, gamma_in, jnp.asarray(weight), jnp.asarray(participate),
+        tables, gmask, include_gamma=include_gamma,
+        gmask_cohorts=gmask_cohorts)

@@ -12,7 +12,13 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import sparsify as sp
+
 Array = jax.Array
+
+SUBLANES = 8
+LANES = 1024
+BLOCK = SUBLANES * LANES
 
 
 def ref_count_ge(x: Array, taus: Array) -> Array:
@@ -76,10 +82,46 @@ def _apply_valid(valid: Array, *arrays):
     return out if len(out) > 1 else out[0]
 
 
-def ref_sparsify_ef_level(g, e, mask_in, weight, tau, valid):
+def ref_err_sq_level(e_new: Array) -> Array:
+    """Pinned-order ‖e'‖² per lane — the ``err_sq_mode="kernel"`` contract.
+
+    Summation order (documented, bit-reproducible across backends): each
+    zero-padded (SUBLANES, LANES) f32 tile is squared elementwise, folded
+    pairwise over lanes (1024 → 512 → … → 1: ``x[:, :n] + x[:, n:2n]``),
+    then pairwise over sublanes (8 → 4 → 2 → 1); tile scalars accumulate
+    left-to-right in block order. The zero padding is exact (+0 adds are
+    identities), but the pairing of real elements depends on the tile
+    geometry — this is a *different* (better-conditioned) order than the
+    jnp row-sum, hence the opt-in config flag.
+    """
+    w_lanes, d = e_new.shape
+    n_blocks = max(1, -(-d // BLOCK))
+    pad = n_blocks * BLOCK - d
+    tiles = jnp.pad(e_new.astype(jnp.float32), ((0, 0), (0, pad))).reshape(
+        w_lanes, n_blocks, SUBLANES, LANES)
+    sq = tiles * tiles
+    n = LANES
+    while n > 1:
+        n //= 2
+        sq = sq[..., :n] + sq[..., n:2 * n]
+    m = SUBLANES
+    while m > 1:
+        m //= 2
+        sq = sq[..., :m, :] + sq[..., m:2 * m, :]
+    per_block = sq[..., 0, 0]                       # [W, n_blocks]
+    acc = per_block[:, 0]
+    for j in range(1, n_blocks):
+        acc = acc + per_block[:, j]
+    return acc
+
+
+def ref_sparsify_ef_level(g, e, mask_in, weight, tau, valid, *,
+                          with_err: bool = False):
     """Batched :func:`ref_sparsify_ef`; lanes with ``valid == 0`` output
     zeros (the level schedule's padding slots). ``mask_in`` may be None
-    (pure-threshold keep). All counts are int32 [W]."""
+    (pure-threshold keep). All counts are int32 [W]. ``with_err`` appends
+    the pinned-order ‖e'‖² (:func:`ref_err_sq_level`) as a final [W] f32
+    output — the in-kernel ``err_sq_mode="kernel"`` reduction."""
     gt = (weight[:, None].astype(jnp.float32) * g.astype(jnp.float32)
           + e.astype(jnp.float32))
     keep = jnp.abs(gt) >= tau[:, None].astype(jnp.float32)
@@ -89,7 +131,8 @@ def ref_sparsify_ef_level(g, e, mask_in, weight, tau, valid):
     e_new = gt - gbar
     gbar, e_new = _apply_valid(valid, gbar, e_new)
     nnz = jnp.sum(gbar != 0, axis=-1).astype(jnp.int32)
-    return gbar.astype(g.dtype), e_new.astype(e.dtype), nnz
+    out = (gbar.astype(g.dtype), e_new.astype(e.dtype), nnz)
+    return out + (ref_err_sq_level(e_new),) if with_err else out
 
 
 def _expand_gmask(gmask, lanes: int, gmask_cohorts: int):
@@ -121,11 +164,13 @@ def ref_chain_accum_level(gamma_in, gbar, valid, gmask=None, *,
 
 
 def ref_cl_fuse_level(g, e, gamma_in, weight, tau, participate, valid,
-                      gmask=None, mask_in=None, *, gmask_cohorts: int = 0):
+                      gmask=None, mask_in=None, *, gmask_cohorts: int = 0,
+                      with_err: bool = False):
     """Batched complete CL node step (Algorithms 3/5 with stragglers).
 
     See :func:`repro.kernels.level.cl_fuse_level_pallas` for the math.
-    Returns (γ_out [W,d], e' [W,d], nnz [W] i32, nnz_off [W] i32).
+    Returns (γ_out [W,d], e' [W,d], nnz [W] i32, nnz_off [W] i32)
+    (+ pinned-order ‖e'‖² [W] f32 when ``with_err``).
     """
     gmask = _expand_gmask(gmask, g.shape[0], gmask_cohorts)
     w = weight[:, None].astype(jnp.float32)
@@ -150,8 +195,9 @@ def ref_cl_fuse_level(g, e, gamma_in, weight, tau, participate, valid,
         nnz_off = nnz
     else:
         nnz_off = jnp.sum(nz & (gmask <= 0), axis=-1).astype(jnp.int32)
-    return (gamma.astype(gamma_in.dtype), e_new.astype(e.dtype), nnz,
-            nnz_off)
+    out = (gamma.astype(gamma_in.dtype), e_new.astype(e.dtype), nnz,
+           nnz_off)
+    return out + (ref_err_sq_level(e_new),) if with_err else out
 
 
 def ref_count_ge_level(x: Array, taus: Array) -> Array:
@@ -159,3 +205,76 @@ def ref_count_ge_level(x: Array, taus: Array) -> Array:
     mag = jnp.abs(x.astype(jnp.float32))
     return jnp.sum(mag[:, :, None] >= taus[:, None, :],
                    axis=1).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Fused-operand τ search (contracts for the count_ge_fused / hist kernels)
+# ---------------------------------------------------------------------------
+
+def fused_operand(g, e, gamma_in, weight, participate, gmask=None, *,
+                  include_gamma: bool = False, gmask_cohorts: int = 0):
+    """The bisection operand reconstructed from raw node inputs (f32 [W,d]).
+
+    Covers all five algorithms' sparsifier operands:
+
+    * SIA / RE-SIA:  ``w·g + e``                  (include_gamma=False)
+    * CL-SIA:        ``p·(w·g + e) + γ_in``       (include_gamma=True)
+    * TC-SIA:        ``(1−m)·(w·g + e)``          (gmask given)
+    * CL-TC-SIA:     ``(1−m)·(p·(w·g + e) + γ_in)``
+
+    Same float expressions as the materialized jnp path in
+    ``repro.core.algorithms`` — the kernels mirror these per tile.
+    """
+    w = weight[:, None].astype(jnp.float32)
+    s = w * g.astype(jnp.float32) + e.astype(jnp.float32)
+    if include_gamma:
+        s = (participate[:, None].astype(jnp.float32) * s
+             + gamma_in.astype(jnp.float32))
+    if gmask is not None:
+        gm = _expand_gmask(gmask, g.shape[0], gmask_cohorts)
+        s = (1.0 - gm) * s
+    return s
+
+
+def ref_count_ge_fused(g, e, gamma_in, weight, participate, taus, *,
+                       include_gamma: bool = False) -> Array:
+    """Scalar fused-operand counts: 1-D node inputs, taus [B] → i32 [B].
+
+    ``taus`` must be nondecreasing (the bisection brackets always are) —
+    the reference counts via :func:`repro.core.sparsify.count_ge_sorted`,
+    whose integers are bit-identical to the O(d·B) broadcast.
+    """
+    op = fused_operand(g[None], e[None],
+                       None if gamma_in is None else gamma_in[None],
+                       jnp.asarray(weight, jnp.float32).reshape(1),
+                       jnp.asarray(participate, jnp.float32).reshape(1),
+                       include_gamma=include_gamma)
+    return sp.count_ge_sorted(jnp.abs(op[0]), taus)
+
+
+def ref_count_ge_fused_level(g, e, gamma_in, weight, participate, taus,
+                             gmask=None, *, include_gamma: bool = False,
+                             gmask_cohorts: int = 0) -> Array:
+    """Batched fused-operand counts ([W,d] inputs, taus [W,B] → i32 [W,B]).
+
+    Per-lane ``taus`` must be nondecreasing (see :func:`ref_count_ge_fused`).
+    """
+    op = fused_operand(g, e, gamma_in, weight, participate, gmask,
+                       include_gamma=include_gamma,
+                       gmask_cohorts=gmask_cohorts)
+    return sp.count_ge_sorted_batch(jnp.abs(op), taus)
+
+
+def ref_hist_topq_level(g, e, gamma_in, weight, participate, tables,
+                        gmask=None, *, include_gamma: bool = False,
+                        gmask_cohorts: int = 0):
+    """Fused-operand joint digit histogram (tau_impl="hist") reference.
+
+    ``tables = (tau1, new_lo, w2, top_shift)`` per lane ([W, ·] each, from
+    ``repro.core.sparsify._hist_tables``); returns ``(D2 [W, b+1, b+1],
+    F [W, b+1])`` int32 — see :func:`repro.core.sparsify._hist_digits`.
+    """
+    op = fused_operand(g, e, gamma_in, weight, participate, gmask,
+                       include_gamma=include_gamma,
+                       gmask_cohorts=gmask_cohorts)
+    return jax.vmap(sp._hist_digits)(jnp.abs(op), *tables)

@@ -45,13 +45,28 @@ def _count_ge_kernel(x_ref, taus_ref, out_ref, *, branch: int):
     jax.lax.fori_loop(0, branch, body, ())
 
 
+def _drop_pad(counts: jax.Array, taus: jax.Array, pad: int) -> jax.Array:
+    """Remove the zero-padding contribution from streamed counts.
+
+    Every pad element compares as exactly 0.0, so it inflates ``counts[j]``
+    by ``pad`` iff ``taus_j <= 0``. The bisection brackets are strictly
+    positive, where this is a no-op — but the exclusion is enforced *here*
+    rather than merely asserted in tests, so a caller with a zero (or
+    negative) candidate can't silently over-count.
+    """
+    if pad == 0:
+        return counts
+    return counts - jnp.where(taus <= 0, jnp.int32(pad), jnp.int32(0))
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def count_ge_pallas(x: jax.Array, taus: jax.Array, *,
                     interpret: bool = False) -> jax.Array:
     """counts[j] = #{i : |x_i| >= taus_j}; x [d] float, taus [B] f32 → [B] i32.
 
-    Zero-pads x up to a BLOCK multiple; padding is excluded by construction
-    when taus > 0 (the wrapper's brackets always are) — asserted in tests.
+    Zero-pads x up to a BLOCK multiple; the padding's contribution is
+    subtracted in the wrapper (:func:`_drop_pad`), so the counts are exact
+    for any taus, including non-positive ones.
     """
     (d,) = x.shape
     (branch,) = taus.shape
@@ -59,6 +74,7 @@ def count_ge_pallas(x: jax.Array, taus: jax.Array, *,
     pad = n_blocks * BLOCK - d
     xp = jnp.pad(x.astype(jnp.float32), (0, pad)).reshape(
         n_blocks, SUBLANES, LANES)
+    taus = taus.astype(jnp.float32)
 
     out = pl.pallas_call(
         functools.partial(_count_ge_kernel, branch=branch),
@@ -70,5 +86,81 @@ def count_ge_pallas(x: jax.Array, taus: jax.Array, *,
         out_specs=pl.BlockSpec((branch,), lambda i: (0,)),
         out_shape=jax.ShapeDtypeStruct((branch,), jnp.int32),
         interpret=interpret,
-    )(xp, taus.astype(jnp.float32))
-    return out
+    )(xp, taus)
+    return _drop_pad(out, taus, pad)
+
+
+# ---------------------------------------------------------------------------
+# count_ge_fused — operand-on-the-fly candidate counting
+# ---------------------------------------------------------------------------
+
+def _count_ge_fused_kernel(g_ref, e_ref, *rest, branch: int,
+                           include_gamma: bool):
+    if include_gamma:
+        gin_ref, w_ref, p_ref, taus_ref, out_ref = rest
+    else:
+        w_ref, p_ref, taus_ref, out_ref = rest
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    w = w_ref[0]
+    op = (w * g_ref[...].astype(jnp.float32)
+          + e_ref[...].astype(jnp.float32))
+    if include_gamma:
+        op = p_ref[0] * op + gin_ref[...].astype(jnp.float32)
+    mag = jnp.abs(op)
+
+    def body(j, _):
+        out_ref[j] += jnp.sum(mag >= taus_ref[j]).astype(jnp.int32)
+        return ()
+
+    jax.lax.fori_loop(0, branch, body, ())
+
+
+@functools.partial(jax.jit, static_argnames=("include_gamma", "interpret"))
+def count_ge_fused_pallas(g, e, gamma_in, weight, participate, taus, *,
+                          include_gamma: bool = False,
+                          interpret: bool = False) -> jax.Array:
+    """Candidate counts of the bisection operand, reconstructed in VMEM.
+
+    The τ search's operand (``w·g + e``, or ``p·(w·g + e) + γ_in`` when
+    ``include_gamma`` — the CL family) is rebuilt tile-by-tile from the raw
+    node inputs instead of being materialized to HBM first: g, e[, γ_in]
+    [d]; weight, participate scalars; taus [B] f32 → counts [B] i32.
+    Zero padding reconstructs to exactly 0.0 and is subtracted in the
+    wrapper (:func:`_drop_pad`).
+    """
+    (d,) = g.shape
+    (branch,) = taus.shape
+    n_blocks = max(1, -(-d // BLOCK))
+    pad = n_blocks * BLOCK - d
+
+    def tile(v):
+        return jnp.pad(v.astype(jnp.float32), (0, pad)).reshape(
+            n_blocks, SUBLANES, LANES)
+
+    blk = pl.BlockSpec((1, SUBLANES, LANES), lambda i: (i, 0, 0))
+    one = pl.BlockSpec((1,), lambda i: (0,))
+    taus = taus.astype(jnp.float32)
+    operands = [tile(g), tile(e)]
+    in_specs = [blk, blk]
+    if include_gamma:
+        operands.append(tile(gamma_in))
+        in_specs.append(blk)
+    operands += [jnp.asarray(weight, jnp.float32).reshape(1),
+                 jnp.asarray(participate, jnp.float32).reshape(1), taus]
+    in_specs += [one, one, pl.BlockSpec((branch,), lambda i: (0,))]
+
+    out = pl.pallas_call(
+        functools.partial(_count_ge_fused_kernel, branch=branch,
+                          include_gamma=include_gamma),
+        grid=(n_blocks,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((branch,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((branch,), jnp.int32),
+        interpret=interpret,
+    )(*operands)
+    return _drop_pad(out, taus, pad)

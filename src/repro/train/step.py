@@ -425,9 +425,15 @@ def build_train_step(cfg: ModelConfig, tc: TrainConfig, mesh,
                                          m_idx, jnp.float32)
             delta = p_col - q_col
             # identical global threshold on every column: counts psum over
-            # `model` only (columns partition coordinates; dp replicates)
+            # `model` only (columns partition coordinates; dp replicates).
+            # tau_impl="hist" collapses the search to ONE psum'd histogram
+            # (D2, F) instead of hist_rounds sequential count+psum rounds —
+            # fewer collective round-trips on the device path, same τ bits.
             axis = "model" if "model" in mesh.axis_names else None
-            tau_g = sp.threshold_for_topq(delta, qg_total, axis_name=axis)
+            tau_g = sp.threshold_for_topq(
+                delta, qg_total, branch=agg_cfg.hist_branch,
+                rounds=agg_cfg.hist_rounds, axis_name=axis,
+                tau_impl=agg_cfg.tau_impl)
             mask_col = jnp.where(jnp.any(delta != 0),
                                  (jnp.abs(delta) >= tau_g).astype(agg_dt),
                                  jnp.zeros_like(delta, agg_dt))

@@ -1,0 +1,352 @@
+"""Fused τ search: operand-on-the-fly counts, hist bisection, kernel err_sq.
+
+Contracts (ISSUE acceptance criteria):
+
+* the fused-operand τ search (bisection counts consuming the operand
+  rebuilt tile-by-tile from the raw node inputs, ``kernel_mode="ref"`` /
+  ``"always"``) is **bitwise identical** to the materialized-operand
+  search (``kernel_mode="never"``) through whole rounds — every
+  algorithm, chain and padded tree plans, stragglers, dynamic per-node
+  budgets, cohort-shared global masks;
+* ``tau_impl="hist"`` (one joint digit histogram) reproduces the scan's
+  per-round candidate-count **integers** and τ bit-for-bit for
+  rounds ∈ {1, 2} (hypothesis-randomized over data, branch, q);
+* the §V over-selection contract (≥ q survivors, bits charge the
+  realized support) holds under the hist bisection;
+* the in-kernel pinned-order ‖e'‖² (``err_sq_mode="kernel"``) matches
+  the jnp reference kernels bitwise and leaves every other round output
+  (aggregate, EF rows, counts, bits) untouched.
+
+Both sides of every parity assertion run under ``jax.jit`` — XLA:CPU
+contracts ``w·g + e`` into an FMA inside jitted graphs but not in eager
+op-by-op dispatch, so jitted-vs-eager comparisons show 1-ulp noise that
+has nothing to do with the kernels (see tests/test_fused_node_step.py).
+"""
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.agg import compile_plan, execute
+from repro.core import sparsify as sp
+from repro.core.algorithms import AggConfig, AggKind, index_bits
+from repro.core.chain import run_chain
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from repro.topo.tree import AggTree, PS
+
+ALL_KINDS = [AggKind.SIA, AggKind.RE_SIA, AggKind.CL_SIA, AggKind.TC_SIA,
+             AggKind.CL_TC_SIA]
+FUSED_MODES = ["ref", "always"]          # jnp bodies / Pallas-interpret
+
+K, D = 7, 96
+TREE = AggTree(parent=(PS, 0, 1, 1, 3, 0, 5))
+
+
+def _inputs(k=K, d=D, seed=0):
+    g = jax.random.normal(jax.random.PRNGKey(seed), (k, d))
+    e = 0.1 * jax.random.normal(jax.random.PRNGKey(seed + 1), (k, d))
+    w = jnp.ones((k,), jnp.float32)
+    return g, e, w
+
+
+def _pair(kind, fused_mode, **kw):
+    base = AggConfig(kind=kind, q=11, topq_impl="threshold",
+                     kernel_mode="never", **kw)
+    return base, dataclasses.replace(base, kernel_mode=fused_mode)
+
+
+def _gmask(cfg, d):
+    if cfg.kind in (AggKind.TC_SIA, AggKind.CL_TC_SIA):
+        return jnp.zeros((d,)).at[jnp.arange(cfg.q_global)].set(1.0)
+    return None
+
+
+def _assert_same_round(a, b, msg=""):
+    np.testing.assert_array_equal(np.asarray(a.aggregate),
+                                  np.asarray(b.aggregate),
+                                  err_msg=f"{msg}/aggregate")
+    np.testing.assert_array_equal(np.asarray(a.e_new), np.asarray(b.e_new),
+                                  err_msg=f"{msg}/e_new")
+    for field in ("nnz_out", "nnz_global", "nnz_local", "bits"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a.stats, field)),
+            np.asarray(getattr(b.stats, field)),
+            err_msg=f"{msg}/stats.{field}")
+    np.testing.assert_allclose(np.asarray(a.stats.err_sq),
+                               np.asarray(b.stats.err_sq), rtol=1e-6,
+                               err_msg=f"{msg}/stats.err_sq")
+
+
+# ---------------------------------------------------------------------------
+# Fused-operand τ search ≡ materialized τ search, end to end
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fused_mode", FUSED_MODES)
+@pytest.mark.parametrize("kind", ALL_KINDS)
+def test_fused_operand_round_parity(kind, fused_mode):
+    cfg_m, cfg_f = _pair(kind, fused_mode)
+    g, e, w = _inputs(seed=2)
+    gm = _gmask(cfg_m, D)
+    part = jnp.asarray([1, 0, 1, 1, 0, 1, 1], jnp.float32)
+    for name, topo, pad in [("chain", K, None), ("tree", TREE, (K, 4))]:
+        plan = compile_plan(topo, pad_to=pad)
+        for pname, p in [("all", None), ("stragglers", part)]:
+            run_m = jax.jit(functools.partial(execute, cfg_m,
+                                              global_mask=gm,
+                                              participate=p))
+            run_f = jax.jit(functools.partial(execute, cfg_f,
+                                              global_mask=gm,
+                                              participate=p))
+            _assert_same_round(run_m(plan, g, e, w), run_f(plan, g, e, w),
+                               f"{kind.value}/{fused_mode}/{name}/{pname}")
+
+
+@pytest.mark.parametrize("kind", ALL_KINDS)
+def test_fused_operand_round_parity_q_budget(kind):
+    """Dynamic per-node budgets materialize the operand for the full sort —
+    parity must still hold through the fused structure."""
+    cfg_m, cfg_f = _pair(kind, "ref")
+    g, e, w = _inputs(seed=3)
+    gm = _gmask(cfg_m, D)
+    qb = np.asarray([5, 3, 5, 2, 5, 1, 4], np.int32)
+    plan = compile_plan(TREE, q_budget=qb, pad_to=(K, 3))
+    run_m = jax.jit(functools.partial(execute, cfg_m, global_mask=gm))
+    run_f = jax.jit(functools.partial(execute, cfg_f, global_mask=gm))
+    _assert_same_round(run_m(plan, g, e, w), run_f(plan, g, e, w),
+                       f"{kind.value}/q_budget")
+
+
+@pytest.mark.parametrize("mode", ["never", "always"])
+def test_operand_fn_tau_matches_materialized(mode):
+    """Unit-level: ``threshold_for_topq(operand_fn=...)`` over the
+    dispatched fused counts ≡ the materialized search, bitwise, for the
+    full operand family (γ and global-mask factors on)."""
+    w_l = 4
+    g, e, _ = _inputs(k=w_l, d=300, seed=4)
+    gin = jax.random.normal(jax.random.PRNGKey(9), (w_l, 300)) * 0.2
+    wv = jnp.asarray([1.0, 0.5, 2.0, 1.0], jnp.float32)
+    p = jnp.asarray([1, 1, 0, 1], jnp.float32)
+    gm = jnp.zeros((300,)).at[jnp.arange(40)].set(1.0)
+    x = kref.fused_operand(g, e, gin, wv, p, gm, include_gamma=True)
+    op = sp.TauOperand(
+        count=lambda taus: kops.count_ge_fused_level(
+            g, e, gin, wv, p, taus, gm, include_gamma=True, mode=mode),
+        max_abs=lambda: jnp.max(jnp.abs(x), axis=-1),
+        batched=True,
+        hist=lambda tables: kops.hist_topq_level(
+            g, e, gin, wv, p, tables, gm, include_gamma=True, mode=mode))
+    for q in (3, 29, 250):
+        for impl, rounds in (("scan", 3), ("scan", 2), ("hist", 2)):
+            tau_m = jax.jit(functools.partial(
+                sp.threshold_for_topq, q=q, rounds=rounds,
+                tau_impl=impl))(x)
+            tau_f = jax.jit(functools.partial(
+                sp.threshold_for_topq, None, q, rounds=rounds,
+                operand_fn=op, tau_impl=impl))()
+            np.testing.assert_array_equal(
+                np.asarray(tau_m), np.asarray(tau_f),
+                err_msg=f"q={q}/{impl}/{rounds}/{mode}")
+
+
+def test_fused_count_cohort_gmask_parity():
+    """Cohort-shared [B, d] global masks (the multi-tenant batched-round
+    lane layout) through the fused count and hist kernels ≡ the jnp
+    reference, in interpret mode."""
+    b, lanes, d = 2, 3, 1000
+    w_l = b * lanes
+    g, e, _ = _inputs(k=w_l, d=d, seed=5)
+    gin = jnp.zeros_like(g)
+    wv = jnp.ones((w_l,), jnp.float32)
+    p = jnp.ones((w_l,), jnp.float32)
+    gm = (jax.random.uniform(jax.random.PRNGKey(6), (b, d)) < 0.1
+          ).astype(jnp.float32)
+    taus = jnp.sort(jax.random.uniform(jax.random.PRNGKey(7),
+                                       (w_l, 16)), axis=-1)
+    got = jax.jit(functools.partial(
+        kops.count_ge_fused_level, gmask_cohorts=b,
+        mode="always"))(g, e, gin, wv, p, taus, gm)
+    want = jax.jit(functools.partial(
+        kref.ref_count_ge_fused_level, gmask_cohorts=b))(
+            g, e, gin, wv, p, taus, gm)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    x = kref.fused_operand(g, e, gin, wv, p, gm, gmask_cohorts=b)
+    hi = jnp.max(jnp.abs(x), axis=-1) * jnp.float32(1 + 1e-6)
+    tables = sp._hist_tables(jnp.zeros_like(hi), jnp.maximum(hi, 1e-30), 64)
+    d2_k, f_k = jax.jit(functools.partial(
+        kops.hist_topq_level, gmask_cohorts=b,
+        mode="always"))(g, e, gin, wv, p, tables, gm)
+    d2_r, f_r = jax.jit(functools.partial(
+        kref.ref_hist_topq_level, gmask_cohorts=b))(
+            g, e, gin, wv, p, tables, gm)
+    # lane padding lands in the never-read bin D2[·, 0, 0]
+    zero = jnp.zeros((), jnp.int32)
+    d2_k = np.asarray(d2_k.at[:, 0, 0].set(zero))
+    d2_r = np.asarray(d2_r.at[:, 0, 0].set(zero))
+    np.testing.assert_array_equal(d2_k, d2_r)
+    np.testing.assert_array_equal(np.asarray(f_k), np.asarray(f_r))
+
+
+# ---------------------------------------------------------------------------
+# hist bisection ≡ scan bisection (τ AND the per-round count integers)
+# ---------------------------------------------------------------------------
+
+def _assert_hist_matches_scan(x, q, branch, rounds):
+    tau_s, c_s = sp.threshold_for_topq(x, q, branch=branch, rounds=rounds,
+                                       with_counts=True)
+    tau_h, c_h = sp.threshold_for_topq(x, q, branch=branch, rounds=rounds,
+                                       tau_impl="hist", with_counts=True)
+    np.testing.assert_array_equal(np.asarray(tau_s), np.asarray(tau_h),
+                                  err_msg=f"tau q={q} b={branch} r={rounds}")
+    np.testing.assert_array_equal(np.asarray(c_s), np.asarray(c_h),
+                                  err_msg=f"counts q={q} b={branch} "
+                                          f"r={rounds}")
+
+
+def test_default_scan_shortcut_matches_counting_scan():
+    """The single-host count-free scan (top_k resolves the count >= q
+    predicate) returns bitwise the same τ as the per-round counting scan
+    — including q ≤ 0, q ≥ d, all-zero operands and ties."""
+    x = jax.random.normal(jax.random.PRNGKey(11), (5, 4096))
+    cases = [(x, q) for q in (0, 1, 40, 4096, 5000)]
+    cases += [(x[0], 40), (jnp.zeros((512,)), 5),
+              (jnp.ones((512,)).at[3].set(7.0), 5)]
+    for xx, q in cases:
+        count_fn = sp.count_ge_batch if xx.ndim == 2 else sp.count_ge
+        got = sp.threshold_for_topq(xx, q)
+        want = sp.threshold_for_topq(xx, q, count_fn=count_fn)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want),
+                                      err_msg=f"q={q} shape={xx.shape}")
+
+
+def test_hist_matches_scan_directed():
+    x = jax.random.normal(jax.random.PRNGKey(12), (5, 4096))
+    for q in (1, 40, 1000, 4095):
+        for branch in (8, 64):
+            for rounds in (1, 2):
+                _assert_hist_matches_scan(x, q, branch, rounds)
+    # 1-D path, all-zero operand, ties
+    _assert_hist_matches_scan(jnp.zeros((512,)), 5, 64, 2)
+    _assert_hist_matches_scan(jnp.ones((512,)).at[3].set(7.0), 5, 64, 2)
+
+
+def test_hist_matches_scan_property():
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=30, deadline=None)
+    @given(seed=st.integers(0, 2**16), d=st.integers(2, 600),
+           q=st.integers(1, 600), branch=st.sampled_from([4, 16, 64, 256]),
+           rounds=st.integers(1, 2), scale=st.sampled_from([1e-6, 1.0, 1e6]))
+    def run(seed, d, q, branch, rounds, scale):
+        x = scale * jax.random.normal(jax.random.PRNGKey(seed), (d,))
+        _assert_hist_matches_scan(x, min(q, d), branch, rounds)
+
+    run()
+
+
+def test_hist_round_parity_all_kinds():
+    """Whole rounds under tau_impl='hist' ≡ the scan at the same rounds —
+    materialized and fused-operand structures alike."""
+    g, e, w = _inputs(seed=13)
+    plan = compile_plan(TREE, pad_to=(K, 4))
+    for kind in ALL_KINDS:
+        for kmode in ("never", "ref"):
+            cfg_s = AggConfig(kind=kind, q=11, topq_impl="threshold",
+                              kernel_mode=kmode, hist_rounds=2)
+            cfg_h = dataclasses.replace(cfg_s, tau_impl="hist")
+            gm = _gmask(cfg_s, D)
+            run_s = jax.jit(functools.partial(execute, cfg_s,
+                                              global_mask=gm))
+            run_h = jax.jit(functools.partial(execute, cfg_h,
+                                              global_mask=gm))
+            _assert_same_round(run_s(plan, g, e, w), run_h(plan, g, e, w),
+                               f"{kind.value}/{kmode}/hist")
+
+
+def test_hist_validation():
+    with pytest.raises(ValueError, match="rounds must be 1 or 2"):
+        sp.threshold_for_topq(jnp.ones((8,)), 2, rounds=3, tau_impl="hist")
+    with pytest.raises(ValueError, match="branch"):
+        sp.threshold_for_topq(jnp.ones((8,)), 2, rounds=2, branch=2048,
+                              tau_impl="hist")
+    with pytest.raises(ValueError, match="hist_rounds"):
+        AggConfig(kind=AggKind.SIA, q=5, tau_impl="hist")   # hist_rounds=3
+    with pytest.raises(ValueError, match="tau_impl"):
+        AggConfig(kind=AggKind.SIA, q=5, tau_impl="histo")
+
+
+def test_threshold_bits_charge_realized_nnz_hist():
+    """§V regression under the hist bisection: ≥ q survivors and bits
+    charge the realized support, not q."""
+    cfg = AggConfig(kind=AggKind.CL_SIA, q=11, topq_impl="threshold",
+                    tau_impl="hist", hist_rounds=2)
+    g, e, w = _inputs(seed=14)
+    res = run_chain(cfg, g, e, w)
+    nnz = np.asarray(res.stats.nnz_out)
+    assert (nnz >= cfg.q).all(), nnz
+    word = cfg.omega + index_bits(D)
+    np.testing.assert_array_equal(np.asarray(res.stats.bits),
+                                  (word * nnz).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# In-kernel pinned-order err_sq
+# ---------------------------------------------------------------------------
+
+def test_err_sq_kernel_matches_ref_pinned():
+    """with_err=True: Pallas-interpret kernels ≡ the jnp reference —
+    bitwise, including the pinned-summation-order ‖e'‖²."""
+    w_l, d = 4, 9000                     # d > 8192 exercises multi-block
+    g, e, _ = _inputs(k=w_l, d=d, seed=15)
+    gin = 0.3 * jax.random.normal(jax.random.PRNGKey(16), (w_l, d))
+    mask = (jax.random.uniform(jax.random.PRNGKey(17), (w_l, d)) < 0.2
+            ).astype(jnp.float32)
+    wv = jnp.asarray([1.0, 0.5, 2.0, 1.0], jnp.float32)
+    tau = jnp.asarray([0.5, 0.1, 1.0, 0.2], jnp.float32)
+    p = jnp.asarray([1, 1, 0, 1], jnp.float32)
+    valid = jnp.asarray([1, 1, 1, 0], jnp.float32)
+
+    for fn_k, fn_r, args in (
+            (kops.sparsify_ef_level, kref.ref_sparsify_ef_level,
+             (g, e, mask, wv, tau, valid)),
+            (kops.cl_fuse_level, kref.ref_cl_fuse_level,
+             (g, e, gin, wv, tau, p, valid))):
+        got = jax.jit(functools.partial(fn_k, with_err=True,
+                                        mode="always"))(*args)
+        want = jax.jit(functools.partial(fn_r, with_err=True))(*args)
+        assert len(got) == len(want)
+        for i, (a, b) in enumerate(zip(got, want)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=f"{fn_k.__name__}[{i}]")
+        np.testing.assert_array_equal(np.asarray(got[-1][valid == 0]), 0.0)
+
+
+@pytest.mark.parametrize("kind", ALL_KINDS)
+def test_err_sq_mode_kernel_leaves_round_unchanged(kind):
+    """err_sq_mode='kernel' must not perturb any §V-relevant output —
+    aggregate, EF, counts and bits stay bitwise; err_sq stays within the
+    float-reduction-order tolerance of the jnp value."""
+    base = AggConfig(kind=kind, q=11, topq_impl="threshold",
+                     kernel_mode="ref")
+    cfg_k = dataclasses.replace(base, err_sq_mode="kernel")
+    g, e, w = _inputs(seed=18)
+    gm = _gmask(base, D)
+    part = jnp.asarray([1, 0, 1, 1, 0, 1, 1], jnp.float32)
+    plan = compile_plan(TREE, pad_to=(K, 4))
+    run_j = jax.jit(functools.partial(execute, base, global_mask=gm,
+                                      participate=part))
+    run_k = jax.jit(functools.partial(execute, cfg_k, global_mask=gm,
+                                      participate=part))
+    _assert_same_round(run_j(plan, g, e, w), run_k(plan, g, e, w),
+                       f"{kind.value}/err_sq_mode")
+
+
+def test_err_sq_mode_validated():
+    with pytest.raises(ValueError, match="err_sq_mode"):
+        AggConfig(kind=AggKind.SIA, q=5, err_sq_mode="pallas")
